@@ -1,0 +1,119 @@
+"""Paper Fig. 11 / §6.2: Hybrid FL vs Classical FL with a straggling uplink.
+
+50 trainers in 5 co-located clusters; one trainer's uplink to the aggregator
+is throttled to ~1 Mbps while the intra-cluster P2P channel runs at
+~100 Mbps. Hybrid FL all-reduces inside each cluster and uploads ONE
+cluster-level model per round, so (a) the straggler's slow uplink is bypassed
+(it only talks on the fast ring) and (b) uplink bytes drop ~10x. The paper
+reports 2.21x faster convergence to 0.985 accuracy; we reproduce the shape of
+that result on the virtual clock.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.channels import LinkModel
+from repro.core.expansion import JobSpec
+from repro.core.runtime import run_job
+from repro.core.tag import DatasetSpec
+from repro.core.topologies import classical_fl, hybrid_fl
+
+from benchmarks.common import (
+    HybridSGDTrainer,
+    SGDClassifierTrainer,
+    accuracy,
+    init_weights,
+    test_set,
+)
+
+N_TRAINERS = 50
+N_CLUSTERS = 5
+ROUNDS = 10
+MBPS = 125_000.0  # bytes/s per Mbps
+# Our softmax model is ~1.3 KB vs the paper's ~0.5 MB MNIST model; the
+# straggler bandwidth is scaled by the same factor so the per-round transfer
+# TIME matches the paper's 1 Mbps setting (~4 s/round on the straggler).
+SLOW_BPS = 330.0
+TARGET_ACC = 0.90
+
+
+def _datasets(n):
+    return tuple(DatasetSpec(name=f"d{i}") for i in range(n))
+
+
+def _acc_trace(res, x, y, channel) -> Tuple[List[float], float]:
+    glob = res.program("global-aggregator-0")
+    final_acc = accuracy(glob.weights, x, y)
+    total_time = glob.ctx.now(channel)
+    return final_acc, total_time
+
+
+def run_classical() -> Dict:
+    tag = classical_fl(trainer_program="benchmarks.common.SGDClassifierTrainer")
+    job = JobSpec(
+        tag=tag, datasets=_datasets(N_TRAINERS),
+        hyperparams={"rounds": ROUNDS, "init_weights": init_weights(),
+                     "compute_time": 2.0},
+    )
+    links = {("param-channel", f"trainer-{i}"): LinkModel(bandwidth=80 * MBPS)
+             for i in range(N_TRAINERS)}
+    links[("param-channel", "trainer-3")] = LinkModel(bandwidth=SLOW_BPS)  # non-leader straggler
+    res = run_job(job, link_models=links, timeout=240)
+    assert not res.errors, res.errors
+    x, y = test_set()
+    acc, t = _acc_trace(res, x, y, "param-channel")
+    bytes_round = res.channel_bytes["param-channel"] / ROUNDS
+    return {"acc": acc, "time": t, "uplink_bytes_per_round": bytes_round}
+
+
+def run_hybrid() -> Dict:
+    groups = tuple(f"c{i}" for i in range(N_CLUSTERS))
+    per = N_TRAINERS // N_CLUSTERS
+    dataset_groups = {
+        g: tuple(f"d{i}" for i in range(k * per, (k + 1) * per))
+        for k, g in enumerate(groups)
+    }
+    tag = hybrid_fl(
+        groups=groups,
+        dataset_groups=dataset_groups,
+        trainer_program="benchmarks.common.HybridSGDTrainer",
+    )
+    job = JobSpec(
+        tag=tag, datasets=_datasets(N_TRAINERS),
+        hyperparams={"rounds": ROUNDS, "init_weights": init_weights(),
+                     "compute_time": 2.0},
+    )
+    links = {}
+    for i in range(N_TRAINERS):
+        links[("param-channel", f"trainer-{i}")] = LinkModel(bandwidth=80 * MBPS)
+        links[("ring-channel", f"trainer-{i}")] = LinkModel(bandwidth=100 * SLOW_BPS)  # 100x the WAN straggler, scaled like it
+    links[("param-channel", "trainer-3")] = LinkModel(bandwidth=SLOW_BPS)  # non-leader straggler
+    res = run_job(job, link_models=links, timeout=240)
+    assert not res.errors, res.errors
+    x, y = test_set()
+    acc, t = _acc_trace(res, x, y, "param-channel")
+    bytes_round = res.channel_bytes["param-channel"] / ROUNDS
+    return {"acc": acc, "time": t, "uplink_bytes_per_round": bytes_round}
+
+
+def run() -> Dict:
+    cfl = run_classical()
+    hyb = run_hybrid()
+    speedup = cfl["time"] / max(hyb["time"], 1e-9)
+    ratio = cfl["uplink_bytes_per_round"] / max(hyb["uplink_bytes_per_round"], 1)
+    print(f"[hybrid] C-FL:   acc {cfl['acc']:.3f}  time {cfl['time']:8.1f}s "
+          f"uplink/round {cfl['uplink_bytes_per_round']/1e6:.2f} MB")
+    print(f"[hybrid] Hybrid: acc {hyb['acc']:.3f}  time {hyb['time']:8.1f}s "
+          f"uplink/round {hyb['uplink_bytes_per_round']/1e6:.2f} MB")
+    print(f"[hybrid] wall-clock speedup {speedup:.2f}x  uplink reduction {ratio:.1f}x")
+    assert hyb["acc"] >= TARGET_ACC and cfl["acc"] >= TARGET_ACC
+    assert 1.5 < speedup < 20, "hybrid should be much faster with a straggler"
+    assert ratio > 5, "hybrid should cut uplink traffic (paper: 10x)"
+    return {"cfl": cfl, "hybrid": hyb, "speedup": speedup,
+            "uplink_reduction": ratio}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,87 @@
+"""Paper Table 3 (LOC per role: derived CO-FL vs base H-FL) and Table 4
+(topology-transformation diff matrix)."""
+from __future__ import annotations
+
+import inspect
+from typing import Dict
+
+from repro.core import roles, roles_coord
+from repro.core.tag import diff_tags
+from repro.core.topologies import (
+    classical_fl,
+    coordinated_fl,
+    distributed_fl,
+    hierarchical_fl,
+    hybrid_fl,
+)
+
+
+def _loc(cls) -> int:
+    return len(inspect.getsource(cls).splitlines())
+
+
+def run_loc() -> Dict[str, Dict[str, int]]:
+    base = {
+        "GlobalAggregator": _loc(roles.GlobalAggregator.__mro__[1]),  # pre-alias
+        "Aggregator": _loc(roles.Aggregator),
+        "Trainer": _loc(roles.Trainer),
+    }
+    derived = {
+        "CoordGlobalAggregator": _loc(roles_coord.CoordGlobalAggregator),
+        "CoordAggregator": _loc(roles_coord.CoordAggregator),
+        "CoordTrainer": _loc(roles_coord.CoordTrainer),
+        "Coordinator": _loc(roles_coord.Coordinator),
+    }
+    print("[loc] H-FL base roles (core library, untouched):")
+    for k, v in base.items():
+        print(f"[loc]   {k:24s} {v:4d} LOC")
+    print("[loc] CO-FL derived roles (the extension's entire cost):")
+    for k, v in derived.items():
+        print(f"[loc]   {k:24s} {v:4d} LOC")
+    pairs = [
+        ("GlobalAggregator", "CoordGlobalAggregator"),
+        ("Aggregator", "CoordAggregator"),
+        ("Trainer", "CoordTrainer"),
+    ]
+    reductions = {}
+    for b, d in pairs:
+        # paper Table 3: derived role LOC vs writing the role from scratch
+        # (base + coordination logic); reduction = 1 - derived/(base+derived)
+        red = 1.0 - derived[d] / (base[b] + derived[d])
+        reductions[d] = red
+        print(f"[loc]   {d}: {red*100:.1f}% smaller than a from-scratch role")
+    assert all(r > 0.3 for r in reductions.values())
+    return {"base": base, "derived": derived}
+
+
+TRANSFORMS = [
+    ("C-FL -> H-FL", classical_fl, hierarchical_fl),
+    ("C-FL -> Distributed", classical_fl, distributed_fl),
+    ("C-FL -> Hybrid", classical_fl, hybrid_fl),
+    ("H-FL -> CO-FL", hierarchical_fl, coordinated_fl),
+]
+
+
+def run_transform():
+    print("[transform] topology transformation matrix (paper Table 4):")
+    out = {}
+    for name, src, dst in TRANSFORMS:
+        d = diff_tags(src(), dst())
+        out[name] = d
+        print(f"[transform] {name:22s} +{len(d['added'])} "
+              f"-{len(d['removed'])} Δ{len(d['changed'])}: "
+              f"added={d['added']} removed={d['removed']} changed={d['changed']}")
+    # every transformation is a bounded TAG edit, not a rewrite
+    assert all(
+        len(d["added"]) + len(d["removed"]) + len(d["changed"]) <= 10
+        for d in out.values()
+    )
+    return out
+
+
+def run():
+    return {"loc": run_loc(), "transform": run_transform()}
+
+
+if __name__ == "__main__":
+    run()

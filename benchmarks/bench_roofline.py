@@ -1,0 +1,61 @@
+"""§Roofline: render the per-(arch x shape) roofline table from the dry-run
+artifact (dryrun_results.json). Single-pod (16x16 = 256 chips) numbers.
+
+Terms (TPU v5e: 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI):
+  compute    = HLO_FLOPs / (chips * peak)
+  memory     = HLO_bytes / (chips * HBM_bw)      [upper bound: XLA-CPU
+               'bytes accessed' counts fusion-internal traffic]
+  collective = per-device collective bytes / link_bw
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "dryrun_results.json")
+
+
+def load(path: str = RESULTS) -> List[Dict]:
+    if not os.path.exists(path):
+        raise SystemExit(
+            f"{path} not found — run: PYTHONPATH=src python -m "
+            "repro.launch.dryrun --all --both-meshes --out dryrun_results.json"
+        )
+    with open(path) as f:
+        return json.load(f)
+
+
+def run(path: str = RESULTS):
+    rows = [r for r in load(path) if r.get("mesh") == "16x16"]
+    print(f"{'arch':26s} {'shape':12s} {'C(ms)':>9s} {'M(ms)':>9s} "
+          f"{'X(ms)':>9s} {'dominant':>10s} {'useful':>7s} {'peak GiB':>9s} fits")
+    out = []
+    for r in rows:
+        if "skipped" in r:
+            print(f"{r['arch']:26s} {r['shape']:12s} {'SKIP: ' + r['skipped'][:50]}")
+            continue
+        if "error" in r:
+            print(f"{r['arch']:26s} {r['shape']:12s} ERROR {r['error'][:60]}")
+            continue
+        roof = r.get("roofline")
+        peak = r["memory"]["peak_bytes"] / 2**30
+        if not roof:
+            print(f"{r['arch']:26s} {r['shape']:12s} {'—':>9s} {'—':>9s} "
+                  f"{'—':>9s} {'—':>10s} {'—':>7s} {peak:9.2f} {r['fits_hbm']}")
+            continue
+        print(
+            f"{r['arch']:26s} {r['shape']:12s} {roof['compute_s']*1e3:9.2f} "
+            f"{roof['memory_s']*1e3:9.2f} {roof['collective_s']*1e3:9.2f} "
+            f"{roof['dominant']:>10s} {roof['useful_ratio']:7.2f} "
+            f"{peak:9.2f} {r['fits_hbm']}"
+        )
+        out.append(r)
+    lowered = [r for r in load(path) if "error" not in r and "skipped" not in r]
+    errs = [r for r in load(path) if "error" in r]
+    print(f"\n[roofline] lowered OK: {len(lowered)} records; errors: {len(errs)}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,84 @@
+"""Shared helpers for the paper-experiment benchmarks: a real (small) ML
+workload — softmax regression on the synthetic federated classification data
+— plugged into Flame roles via the user programming model (Fig. 5)."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.roles import HybridTrainer, Trainer
+
+FEATURES, CLASSES = 32, 10
+LR = 0.2
+
+
+def init_weights(seed: int = 0) -> Dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    return {
+        "w": (0.01 * rng.normal(size=(FEATURES, CLASSES))).astype(np.float32),
+        "b": np.zeros((CLASSES,), np.float32),
+    }
+
+
+def _softmax(z):
+    z = z - z.max(axis=1, keepdims=True)
+    e = np.exp(z)
+    return e / e.sum(axis=1, keepdims=True)
+
+
+def sgd_epoch(weights, x, y, lr=LR, epochs=1):
+    w, b = weights["w"].copy(), weights["b"].copy()
+    n = x.shape[0]
+    for _ in range(epochs):
+        p = _softmax(x @ w + b)
+        onehot = np.eye(CLASSES, dtype=np.float32)[y]
+        g = (p - onehot) / n
+        w -= lr * (x.T @ g)
+        b -= lr * g.sum(axis=0)
+    return {"w": w, "b": b}
+
+
+def accuracy(weights, x, y) -> float:
+    pred = (x @ weights["w"] + weights["b"]).argmax(axis=1)
+    return float((pred == y).mean())
+
+
+def test_set(n=2048):
+    from repro.data.datasets import synthetic_classification
+
+    d = synthetic_classification("held-out-test", num_samples=n)
+    return d.x, d.y
+
+
+class SGDClassifierTrainer(Trainer):
+    """User programming model (Fig. 5): inherit Trainer, implement the core
+    functions. ``load_data`` materializes this worker's shard from the
+    dataset name carried in its WorkerConfig (metadata-only registration)."""
+
+    def load_data(self) -> None:
+        from repro.data.datasets import synthetic_classification
+
+        d = synthetic_classification(self.ctx.worker.dataset or "d0")
+        self.x, self.y = d.x, d.y
+        self.num_samples = d.num_samples
+
+    def train(self) -> None:
+        if self.weights is None:
+            return
+        self.weights = sgd_epoch(self.weights, self.x, self.y)
+        self.ctx.advance_clock(
+            self.param_channel, float(self.config.get("compute_time", 0.0))
+        )
+
+
+class HybridSGDTrainer(HybridTrainer, SGDClassifierTrainer):
+    """Δ inheritance (Table 4): the hybrid variant of the same trainer."""
+
+    def train(self) -> None:
+        if self.weights is None:
+            return
+        self.weights = sgd_epoch(self.weights, self.x, self.y)
+        self.ctx.advance_clock(
+            self.param_channel, float(self.config.get("compute_time", 0.0))
+        )

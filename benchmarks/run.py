@@ -1,0 +1,73 @@
+"""Benchmark harness: one benchmark per paper table/figure + the roofline
+report. ``PYTHONPATH=src python -m benchmarks.run`` runs everything that
+doesn't need the (separately produced) dry-run artifact; pass --with-roofline
+to include it, --full for the 100k-worker expansion point.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="include the 100k-worker expansion point (Table 6)")
+    ap.add_argument("--with-roofline", action="store_true",
+                    help="render the roofline table from dryrun_results.json")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    results = {}
+    t0 = time.time()
+
+    print("=" * 72)
+    print("Table 6 — TAG expansion latency")
+    print("=" * 72)
+    from benchmarks import bench_expansion
+
+    results["expansion"] = bench_expansion.run(full=args.full)
+
+    print("=" * 72)
+    print("Table 3 + Table 4 — LOC reduction / topology transformations")
+    print("=" * 72)
+    from benchmarks import bench_loc_transform
+
+    results["loc_transform"] = bench_loc_transform.run()
+
+    print("=" * 72)
+    print("Fig. 10 — Coordinated FL load balancing vs H-FL (straggler)")
+    print("=" * 72)
+    from benchmarks import bench_coordinated
+
+    results["coordinated"] = bench_coordinated.run()
+
+    print("=" * 72)
+    print("Fig. 11 — Hybrid FL vs Classical FL (per-channel backends)")
+    print("=" * 72)
+    from benchmarks import bench_hybrid
+
+    results["hybrid"] = bench_hybrid.run()
+
+    import os
+
+    from benchmarks import bench_roofline
+
+    if args.with_roofline or os.path.exists(bench_roofline.RESULTS):
+        print("=" * 72)
+        print("§Roofline — per (arch x shape) terms from the dry-run")
+        print("=" * 72)
+        bench_roofline.run()
+
+    print("=" * 72)
+    print(f"all benchmarks passed in {time.time()-t0:.1f}s")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2, default=str)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,80 @@
+"""Pytree checkpointing to .npz (flat key = '/'-joined tree path).
+
+Atomic (tmp file + rename), step-indexed, with tree-structure round-trip.
+Covers the model snapshot tasklet of the paper's workflow (Fig. 6's
+``tl_copy``/"snapshot").
+"""
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+Tree = Any
+_SEP = "/"
+
+
+def _flatten(tree: Tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_key_str(k) for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _key_str(k: Any) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return f"#{k.idx}"
+    return str(k)
+
+
+def save(directory: str, step: int, tree: Tree) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(tree)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        m = re.fullmatch(r"ckpt_(\d+)\.npz", name)
+        if m:
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, like: Tree) -> Tree:
+    """Restore into the structure of ``like`` (shape/dtype validated)."""
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    with np.load(path) as data:
+        flat = {k: data[k] for k in data.files}
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path_keys, leaf in paths:
+        key = _SEP.join(_key_str(k) for k in path_keys)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing key {key!r}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(
+                f"shape mismatch for {key!r}: ckpt {arr.shape} vs tree {np.shape(leaf)}"
+            )
+        leaves.append(arr.astype(np.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

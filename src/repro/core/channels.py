@@ -1,0 +1,310 @@
+"""Channel API and communication backends (§4.1 "Channel", Table 2).
+
+The channel manager gives every role a uniform messaging surface —
+``join/leave/send/recv/recv_fifo/peek/broadcast/ends/empty`` — regardless of
+the underlying backend. Backends here:
+
+* ``inproc``   — thread-safe in-process queues. This is the emulation backend
+  (Flame-in-a-box analogue) used by the paper-experiment reproductions; it
+  supports a per-link *bandwidth/latency model* so §6.1/§6.2 straggler and
+  backend-selection experiments are measurable.
+* ``mqtt-emu`` — inproc with a shared-broker contention model: all traffic on
+  the channel shares one broker uplink (models the paper's "MQTT traffic over
+  WAN via a broker" inefficiency).
+* ``p2p-emu``  — inproc with per-link bandwidth (direct peering).
+* ``collective`` — not a message queue at all: marks the channel as lowered to
+  jax.lax collectives on the TPU mesh (see ``repro.core.mesh_lowering``).
+
+Payloads are pytrees; wire cost is computed from leaf sizes after the
+channel's ``wire_dtype`` / compression policy, so bandwidth emulation and the
+roofline collective term share one accounting path (``payload_bytes``).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.tag import Channel as ChannelSpec
+
+_WIRE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "int8": 1}
+
+
+def payload_bytes(payload: Any, wire_dtype: str = "f32") -> int:
+    """Bytes of a pytree payload on the wire under ``wire_dtype``."""
+    import jax
+
+    per = _WIRE_BYTES.get(wire_dtype, 4)
+    leaves = jax.tree_util.tree_leaves(payload)
+    total = 0
+    for leaf in leaves:
+        size = np.size(leaf) if hasattr(leaf, "shape") or np.ndim(leaf) else 1
+        total += int(size) * per
+    return total
+
+
+@dataclasses.dataclass
+class LinkModel:
+    """Emulated link characteristics for an end (bandwidth in bytes/sec)."""
+
+    bandwidth: float = float("inf")
+    latency: float = 0.0
+
+    def transfer_time(self, nbytes: int) -> float:
+        bw = self.bandwidth if self.bandwidth > 0 else float("inf")
+        return self.latency + (nbytes / bw if bw != float("inf") else 0.0)
+
+
+@dataclasses.dataclass
+class Message:
+    src: str
+    payload: Any
+    nbytes: int
+    arrival: float  # emulated arrival time (seconds on the virtual clock)
+
+
+class ChannelEnd:
+    """One worker's handle on a channel — implements Table 2.
+
+    ``peer_role`` (when set) restricts ``ends()`` to workers of the role at
+    the other end of the channel, so a group shared by several roles (e.g.
+    aggregators + global aggregator on one channel) still resolves peers
+    unambiguously. ``ends()`` is also the hook for the paper's "chosen peer
+    selection logic" (Table 2) via ``peer_selector``.
+    """
+
+    def __init__(
+        self,
+        backend: "InprocBackend",
+        channel: str,
+        group: str,
+        me: str,
+        peer_role: Optional[str] = None,
+        peer_selector: Optional[Callable[[List[str]], List[str]]] = None,
+    ):
+        self._backend = backend
+        self.channel = channel
+        self.group = group
+        self.me = me
+        self.peer_role = peer_role
+        self.peer_selector = peer_selector
+        self._joined = False
+
+    # ----------------------------- lifecycle -------------------------- #
+    def join(self) -> None:
+        self._backend.join(self.channel, self.group, self.me)
+        self._joined = True
+
+    def leave(self) -> None:
+        self._backend.leave(self.channel, self.group, self.me)
+        self._joined = False
+
+    # ----------------------------- messaging -------------------------- #
+    def send(self, end: str, msg: Any) -> None:
+        self._backend.send(self.channel, self.group, self.me, end, msg)
+
+    def recv(self, end: str, timeout: Optional[float] = 30.0) -> Any:
+        return self._backend.recv(self.channel, self.group, self.me, end, timeout)
+
+    def recv_fifo(self, ends: Sequence[str], timeout: Optional[float] = 30.0):
+        """Yield (end, message) for each end, in arrival (FIFO) order."""
+        return self._backend.recv_fifo(self.channel, self.group, self.me, ends, timeout)
+
+    def peek(self, end: str) -> Optional[Any]:
+        return self._backend.peek(self.channel, self.group, self.me, end)
+
+    def broadcast(self, msg: Any) -> None:
+        for end in self.ends():
+            self.send(end, msg)
+
+    # ----------------------------- topology --------------------------- #
+    def ends(self) -> List[str]:
+        peers = self._backend.peers(self.channel, self.group, self.me)
+        if self.peer_role is not None:
+            peers = [p for p in peers if p.rsplit("-", 1)[0] == self.peer_role]
+        if self.peer_selector is not None:
+            peers = self.peer_selector(peers)
+        return peers
+
+    def empty(self) -> bool:
+        return not self.ends()
+
+
+class InprocBackend:
+    """Thread-safe in-process message transport with an emulated clock.
+
+    Every (channel, group) is a mailbox keyed by (dst, src). Virtual time
+    advances by each message's modeled transfer duration; ``recv`` blocks the
+    receiving thread until real delivery, while ``delivered_at`` records the
+    *emulated* completion time used by the paper-experiment harnesses.
+    """
+
+    def __init__(self, name: str = "inproc", shared_broker: bool = False):
+        self.name = name
+        self.shared_broker = shared_broker
+        self._lock = threading.RLock()
+        self._members: Dict[Tuple[str, str], List[str]] = collections.defaultdict(list)
+        self._boxes: Dict[Tuple[str, str, str, str], "queue.Queue[Message]"] = {}
+        self._links: Dict[Tuple[str, str], LinkModel] = {}
+        self._wire_dtype: Dict[str, str] = {}
+        self._broker_free_at: Dict[str, float] = collections.defaultdict(float)
+        self._clock: Dict[str, float] = collections.defaultdict(float)  # per-worker
+        self.stats: Dict[str, float] = collections.defaultdict(float)
+
+    # ------------------------- configuration -------------------------- #
+    def set_link(self, channel: str, worker: str, model: LinkModel) -> None:
+        self._links[(channel, worker)] = model
+
+    def set_wire_dtype(self, channel: str, dtype: str) -> None:
+        self._wire_dtype[channel] = dtype
+
+    def link(self, channel: str, worker: str) -> LinkModel:
+        return self._links.get((channel, worker), LinkModel())
+
+    # --------------------------- membership --------------------------- #
+    def join(self, channel: str, group: str, worker: str) -> None:
+        with self._lock:
+            members = self._members[(channel, group)]
+            if worker not in members:
+                members.append(worker)
+
+    def leave(self, channel: str, group: str, worker: str) -> None:
+        with self._lock:
+            members = self._members[(channel, group)]
+            if worker in members:
+                members.remove(worker)
+
+    def peers(self, channel: str, group: str, me: str) -> List[str]:
+        with self._lock:
+            return [m for m in self._members[(channel, group)] if m != me]
+
+    # ---------------------------- transport ---------------------------- #
+    def _box(self, channel: str, group: str, dst: str, src: str) -> "queue.Queue[Message]":
+        key = (channel, group, dst, src)
+        with self._lock:
+            if key not in self._boxes:
+                self._boxes[key] = queue.Queue()
+            return self._boxes[key]
+
+    def send(self, channel: str, group: str, src: str, dst: str, payload: Any) -> None:
+        wire = self._wire_dtype.get(channel, "f32")
+        nbytes = payload_bytes(payload, wire)
+        sender_link = self.link(channel, src)
+        dur = sender_link.transfer_time(nbytes)
+        with self._lock:
+            start = self._clock[src]
+            if self.shared_broker:
+                # broker serializes all transfers on the channel
+                start = max(start, self._broker_free_at[channel])
+                self._broker_free_at[channel] = start + dur
+            arrival = start + dur
+            self._clock[src] = arrival
+            self.stats[f"bytes:{channel}"] += nbytes
+            self.stats[f"msgs:{channel}"] += 1
+        self._box(channel, group, dst, src).put(Message(src, payload, nbytes, arrival))
+
+    def recv(
+        self, channel: str, group: str, me: str, end: str, timeout: Optional[float]
+    ) -> Any:
+        msg = self._box(channel, group, me, end).get(timeout=timeout)
+        with self._lock:
+            self._clock[me] = max(self._clock[me], msg.arrival)
+        return msg.payload
+
+    def recv_fifo(
+        self,
+        channel: str,
+        group: str,
+        me: str,
+        ends: Sequence[str],
+        timeout: Optional[float],
+    ) -> Iterable[Tuple[str, Any]]:
+        """Drain one message from each end, yielding in emulated-arrival order."""
+        msgs: List[Tuple[float, str, Any]] = []
+        for end in ends:
+            m = self._box(channel, group, me, end).get(timeout=timeout)
+            msgs.append((m.arrival, end, m.payload))
+        msgs.sort(key=lambda t: t[0])
+        with self._lock:
+            if msgs:
+                self._clock[me] = max(self._clock[me], msgs[-1][0])
+        for _, end, payload in msgs:
+            yield end, payload
+
+    def peek(self, channel: str, group: str, me: str, end: str) -> Optional[Any]:
+        box = self._box(channel, group, me, end)
+        with self._lock:
+            try:
+                return box.queue[0].payload  # type: ignore[attr-defined]
+            except IndexError:
+                return None
+
+    # ---------------------------- clocks ------------------------------ #
+    def now(self, worker: str) -> float:
+        with self._lock:
+            return self._clock[worker]
+
+    def advance(self, worker: str, seconds: float) -> None:
+        """Advance a worker's emulated clock (models local compute time)."""
+        with self._lock:
+            self._clock[worker] += seconds
+
+
+_BACKEND_FACTORIES: Dict[str, Callable[[], InprocBackend]] = {}
+
+
+def register_backend(name: str, factory: Callable[[], InprocBackend]) -> None:
+    _BACKEND_FACTORIES[name] = factory
+
+
+register_backend("inproc", lambda: InprocBackend("inproc"))
+register_backend("p2p-emu", lambda: InprocBackend("p2p-emu"))
+register_backend("mqtt-emu", lambda: InprocBackend("mqtt-emu", shared_broker=True))
+# "collective" channels are lowered onto the mesh, not message-passed; the
+# inproc instance only serves membership queries during emulation.
+register_backend("collective", lambda: InprocBackend("collective"))
+
+
+class ChannelManager:
+    """Per-job channel fabric: instantiates one backend per channel spec and
+    hands out ``ChannelEnd`` s to workers (the SDK's channel manager)."""
+
+    def __init__(self, channel_specs: Sequence[ChannelSpec]):
+        self._specs = {c.name: c for c in channel_specs}
+        self._backends: Dict[str, InprocBackend] = {}
+        for c in channel_specs:
+            if c.backend not in _BACKEND_FACTORIES:
+                raise KeyError(
+                    f"unknown backend {c.backend!r} for channel {c.name!r}; "
+                    f"registered: {sorted(_BACKEND_FACTORIES)}"
+                )
+            backend = _BACKEND_FACTORIES[c.backend]()
+            backend.set_wire_dtype(c.name, c.wire_dtype)
+            self._backends[c.name] = backend
+
+    def spec(self, channel: str) -> ChannelSpec:
+        return self._specs[channel]
+
+    def backend(self, channel: str) -> InprocBackend:
+        return self._backends[channel]
+
+    def end(self, channel: str, group: str, worker: str) -> ChannelEnd:
+        spec = self._specs[channel]
+        my_role = worker.rsplit("-", 1)[0]
+        peer_role: Optional[str] = None
+        a, b = spec.pair
+        if a != b and my_role in (a, b):
+            peer_role = b if my_role == a else a
+        e = ChannelEnd(
+            self._backends[channel], channel, group, worker, peer_role=peer_role
+        )
+        e.join()
+        return e
+
+    def total_bytes(self, channel: str) -> float:
+        return self._backends[channel].stats.get(f"bytes:{channel}", 0.0)

@@ -1,0 +1,232 @@
+"""TAG → TPU-mesh lowering: the hardware adaptation of the paper's idea.
+
+Flame expands a TAG into containers wired by message-queue backends. On a TPU
+pod there is no broker: the natural substrate is the device mesh and
+``jax.lax`` collectives. This module compiles a TAG into an
+``AggregationPlan`` — an ordered list of aggregation *stages*, one per channel
+on the trainer→…→global-aggregator path, each bound to
+
+* a mesh axis (or axis tuple) over which the reduction runs,
+* a collective kind (``psum`` today; the plan is where a ring / reduce-scatter
+  re-association would be expressed),
+* the channel's wire policy (``wire_dtype`` → cast/quantize before crossing
+  the axis — the TPU analogue of per-channel backend selection), and
+* a per-stage server strategy name (e.g. FedAvg at the edge aggregator,
+  FedAdam at the global aggregator).
+
+``apply_plan`` executes the plan inside a pjit-traced train step, so the same
+TAG drives both the in-process emulation (``repro.core.runtime``) and the
+on-mesh federated step (``repro.fl.fedstep``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tag import TAG, Channel, TagError
+
+# wire_dtype -> (cast_fn, uncast_fn). int8 uses stochastic-free symmetric
+# quantization from repro.fl.compression (imported lazily to avoid cycles).
+_CAST_DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16, "f16": jnp.float16}
+
+
+@dataclasses.dataclass(frozen=True)
+class AggregationStage:
+    """One reduction stage of the lowered TAG."""
+
+    channel: str
+    axes: Tuple[str, ...]  # mesh axes the reduction spans
+    wire_dtype: str = "f32"
+    strategy: str = "fedavg"  # server strategy applied *after* this stage
+    collective: str = "psum"
+
+
+@dataclasses.dataclass(frozen=True)
+class AggregationPlan:
+    """Ordered aggregation stages from leaf trainers to the global root."""
+
+    tag_name: str
+    stages: Tuple[AggregationStage, ...]
+
+    @property
+    def all_axes(self) -> Tuple[str, ...]:
+        out: List[str] = []
+        for s in self.stages:
+            out.extend(a for a in s.axes if a not in out)
+        return tuple(out)
+
+
+def _aggregation_path(tag: TAG) -> List[Channel]:
+    """Walk the TAG from the data-consumer role upward along aggregation
+    channels (channels whose funcTags include 'aggregate' or 'allreduce')."""
+    consumers = tag.data_consumers()
+    if not consumers:
+        raise TagError(f"TAG {tag.name!r} has no data-consumer role to lower")
+    if len(consumers) > 1:
+        raise TagError("mesh lowering supports a single data-consumer role")
+    path: List[Channel] = []
+    current = consumers[0].name
+    visited = {current}
+    while True:
+        nxt: Optional[Channel] = None
+        for ch in tag.channels_of(current):
+            other = ch.other_end(current)
+            tags = set(ch.func_tags.for_role(other)) | set(
+                ch.func_tags.for_role(current)
+            )
+            if {"aggregate", "allreduce"} & tags:
+                if ch.pair[0] == ch.pair[1]:
+                    # p2p ring channel: reduction among peers, no upward hop
+                    path.append(ch)
+                    nxt = None
+                    break
+                if other not in visited:
+                    path.append(ch)
+                    visited.add(other)
+                    current = other
+                    nxt = ch
+                    break
+        if nxt is None:
+            break
+    if not path:
+        raise TagError(f"TAG {tag.name!r} has no aggregation channels")
+    return path
+
+
+def lower_tag_to_mesh(
+    tag: TAG,
+    mesh_axes: Sequence[str],
+    stage_strategies: Optional[Dict[str, str]] = None,
+) -> AggregationPlan:
+    """Assign each aggregation channel of ``tag`` to mesh axes, innermost
+    (fastest, intra-pod) axis first.
+
+    ``mesh_axes`` are the *reduction* axes available, ordered fast→slow —
+    e.g. ``("data",)`` single-pod or ``("data", "pod")`` multi-pod. The last
+    channel on the path absorbs any leftover axes so the plan always reduces
+    over the full client extent of the mesh.
+    """
+    stage_strategies = stage_strategies or {}
+    path = _aggregation_path(tag)
+    axes = list(mesh_axes)
+    if len(path) > len(axes):
+        # more hierarchy levels than mesh axes: merge the innermost levels
+        merged = path[: len(path) - len(axes) + 1]
+        path = [merged[0]] + path[len(merged):]
+    stages: List[AggregationStage] = []
+    for i, ch in enumerate(path):
+        if i == len(path) - 1:
+            span = tuple(axes[i:])
+        else:
+            span = (axes[i],)
+        stages.append(
+            AggregationStage(
+                channel=ch.name,
+                axes=span,
+                wire_dtype=ch.wire_dtype,
+                strategy=stage_strategies.get(ch.name, "fedavg"),
+                collective="psum",
+            )
+        )
+    return AggregationPlan(tag_name=tag.name, stages=stages)
+
+
+def _wire_sum(x: jax.Array, stage: AggregationStage) -> jax.Array:
+    """Sum ``x`` (f32) over the stage's axes under its wire policy.
+
+    * ``f32`` wire → plain f32 psum (all-reduce).
+    * ``bf16``/``f16`` wire → wire-dtype **all-gather + local f32 reduce**
+      (``gather_reduce``): the collective moves half the bytes of an f32
+      all-reduce while accumulation stays f32. This also sidesteps an XLA
+      CPU-backend abort on sub-f32 all-reduce under partial-auto shard_map
+      (TPU is fine either way; the IR shows the true wire bytes).
+    * ``int8`` wire → symmetric per-tensor quantization, int8 all-gather,
+      local dequant-accumulate in f32 (scales travel as f32 scalars).
+    """
+    axes = stage.axes
+
+    def gather_all(v: jax.Array) -> jax.Array:
+        # gather over each axis in turn; leading gathered dims accumulate
+        for a in axes:
+            v = jax.lax.all_gather(v, a)
+        return v
+
+    wire = stage.wire_dtype
+    if wire in ("", "f32"):
+        return jax.lax.psum(x, axes)
+    if wire in _CAST_DTYPES:
+        if jax.default_backend() != "cpu":
+            # TPU: native low-precision all-reduce — bandwidth-optimal
+            # (2x payload vs the gather form's N x payload; EXPERIMENTS.md
+            # §Perf hillclimb #3)
+            return jax.lax.psum(x.astype(_CAST_DTYPES[wire]), axes).astype(
+                jnp.float32
+            )
+        # CPU backend aborts on sub-f32 all-reduce under partial-auto
+        # shard_map ("Invalid binary instruction opcode copy") — fall back
+        # to all-gather + local f32 reduce so emulation/tests still run
+        g = gather_all(x.astype(_CAST_DTYPES[wire]))
+        n_lead = len(axes)
+        return jnp.sum(
+            g.astype(jnp.float32), axis=tuple(range(n_lead))
+        )
+    if wire == "int8":
+        from repro.fl.compression import dequantize_int8, quantize_int8
+
+        q, scale = quantize_int8(x)
+        gq = gather_all(q)
+        gs = gather_all(scale)
+        n_lead = len(axes)
+        lead = gq.shape[:n_lead]
+        deq = gq.astype(jnp.float32) * gs.reshape(lead + (1,) * (gq.ndim - n_lead))
+        return jnp.sum(deq, axis=tuple(range(n_lead)))
+    raise ValueError(f"unknown wire dtype {wire!r}")
+
+
+def stage_reduce_mean(
+    tree: Any, stage: AggregationStage, weight: Optional[jax.Array] = None
+) -> Any:
+    """Weighted-mean reduction of a pytree over the stage's mesh axes, with
+    the channel's wire-dtype policy applied to the collective.
+
+    Must be called inside ``shard_map``/pjit tracing with the mesh axes bound.
+    ``weight`` is this shard's aggregation weight (e.g. #samples); ``None``
+    means uniform.
+    """
+    if weight is None:
+        denom = jax.lax.psum(jnp.float32(1.0), stage.axes)
+
+        def _mean(x):
+            return (_wire_sum(x.astype(jnp.float32), stage) / denom).astype(x.dtype)
+
+        return jax.tree_util.tree_map(_mean, tree)
+    denom = jax.lax.psum(weight.astype(jnp.float32), stage.axes)
+
+    def _wmean(x):
+        scaled = x.astype(jnp.float32) * weight.astype(jnp.float32)
+        return (_wire_sum(scaled, stage) / denom).astype(x.dtype)
+
+    return jax.tree_util.tree_map(_wmean, tree)
+
+
+def apply_plan(
+    update_tree: Any,
+    plan: AggregationPlan,
+    weight: Optional[jax.Array] = None,
+    stage_hook: Optional[Callable[[AggregationStage, Any], Any]] = None,
+) -> Any:
+    """Run every stage of the plan over ``update_tree`` (client model update).
+
+    ``stage_hook(stage, tree)`` lets the caller interleave per-level server
+    strategies (e.g. FedAdam at the global stage) between reductions.
+    """
+    tree = update_tree
+    for stage in plan.stages:
+        tree = stage_reduce_mean(tree, stage, weight=weight)
+        weight = None  # weights are consumed by the first (leaf) reduction
+        if stage_hook is not None:
+            tree = stage_hook(stage, tree)
+    return tree

@@ -1,0 +1,420 @@
+"""Role base programs — the user programming model (§4.4, Fig. 4/5).
+
+Base classes implement the full tasklet workflow for each standard role
+(trainer, aggregator, global aggregator, …); a user subclass only fills in
+``initialize / load_data / train / evaluate``. Derived topologies (CO-FL,
+Hybrid) extend these with the Table 1 surgical-edit API — see
+``repro.core.roles_coord`` and ``HybridTrainer`` below — without touching
+this module (the paper's "no core-library changes" claim; LOC accounting for
+Table 3 is done over these files in the benchmark suite).
+"""
+from __future__ import annotations
+
+import abc
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.channels import ChannelEnd, ChannelManager
+from repro.core.composer import Chain, CloneComposer, Composer, Loop, Tasklet
+from repro.core.expansion import WorkerConfig
+from repro.core.tag import TAG
+
+
+class RoleContext:
+    """Everything a worker needs at runtime: its config, channel ends, the
+    job hyperparameters and a handle on the backend clocks (for emulated
+    compute time)."""
+
+    def __init__(
+        self,
+        worker: WorkerConfig,
+        tag: TAG,
+        channels: ChannelManager,
+        hyperparams: Optional[Dict[str, Any]] = None,
+        static_members: Optional[Dict[str, List[str]]] = None,
+    ) -> None:
+        self.worker = worker
+        self.tag = tag
+        self.channels = channels
+        self.hyperparams = dict(hyperparams or {})
+        # channel -> sorted worker ids in this worker's group on that channel,
+        # computed statically from the expansion (no join races).
+        self.static_members = dict(static_members or {})
+        self._ends: Dict[str, ChannelEnd] = {}
+
+    def end(self, channel: str) -> ChannelEnd:
+        if channel not in self._ends:
+            group = self.worker.group_of(channel)
+            self._ends[channel] = self.channels.end(channel, group, self.worker.worker_id)
+        return self._ends[channel]
+
+    def advance_clock(self, channel: str, seconds: float) -> None:
+        self.channels.backend(channel).advance(self.worker.worker_id, seconds)
+
+    def now(self, channel: str) -> float:
+        return self.channels.backend(channel).now(self.worker.worker_id)
+
+
+class Role(abc.ABC):
+    """Base of all role programs. ``compose()`` builds the tasklet chain,
+    ``run()`` executes it."""
+
+    def __init__(self, ctx: RoleContext) -> None:
+        self.ctx = ctx
+        self.config = ctx.hyperparams
+        self.composer: Optional[Composer] = None
+        self._work_done = False
+        self.rounds = int(self.config.get("rounds", 3))
+        self._round = 0
+        self.metrics: List[Dict[str, float]] = []
+
+    # -------- user-implemented core functions (paper Fig. 5) ---------- #
+    def initialize(self) -> None:  # pragma: no cover - overridden
+        pass
+
+    def load_data(self) -> None:  # pragma: no cover - overridden
+        pass
+
+    def train(self) -> None:  # pragma: no cover - overridden
+        pass
+
+    def evaluate(self) -> None:  # pragma: no cover - overridden
+        pass
+
+    @abc.abstractmethod
+    def compose(self) -> None:
+        ...
+
+    def pre_run(self) -> None:
+        """Join this worker's channels. Runs before any chain executes (the
+        runtime barriers between pre_run and run to avoid join races)."""
+        for channel in self.ctx.worker.groups:
+            self.ctx.end(channel)
+
+    def run(self) -> None:
+        if self.composer is None:
+            self.compose()
+        assert self.composer is not None
+        self.composer.run()
+
+
+# ====================================================================== #
+# Classical / Hierarchical FL roles
+# ====================================================================== #
+class Trainer(Role):
+    """Leaf trainer: fetch global weights, train locally, upload update."""
+
+    param_channel = "param-channel"
+
+    def __init__(self, ctx: RoleContext) -> None:
+        super().__init__(ctx)
+        self.weights: Any = None
+        self.num_samples: int = int(self.config.get("num_samples", 1))
+
+    # ----------------------------- tasklets --------------------------- #
+    def fetch(self) -> None:
+        end = self.ctx.end(self.param_channel)
+        aggs = end.ends()
+        msg = end.recv(aggs[0])
+        self.weights = msg["weights"]
+        self._work_done = bool(msg.get("done", False))
+
+    def upload(self) -> None:
+        if self._work_done:
+            return
+        end = self.ctx.end(self.param_channel)
+        # emulated local compute time, if the harness configured one
+        self.ctx.advance_clock(
+            self.param_channel, float(self.config.get("compute_time", 0.0))
+        )
+        end.send(
+            end.ends()[0],
+            {"weights": self.weights, "num_samples": self.num_samples},
+        )
+
+    def compose(self) -> None:
+        with Composer() as composer:
+            self.composer = composer
+            tl_load = Tasklet("load", self.load_data)
+            tl_init = Tasklet("init", self.initialize)
+            tl_fetch = Tasklet("fetch", self.fetch)
+            tl_train = Tasklet("train", self.train)
+            tl_eval = Tasklet("evaluate", self.evaluate)
+            tl_upload = Tasklet("upload", self.upload)
+            loop = Loop(loop_check_fn=lambda: self._work_done)
+            tl_load >> tl_init >> loop(
+                tl_fetch >> tl_train >> tl_eval >> tl_upload
+            )
+
+
+class _AggregatorBase(Role):
+    """Shared distribute/aggregate machinery for aggregator-like roles."""
+
+    down_channel = "param-channel"  # towards trainers
+
+    def __init__(self, ctx: RoleContext) -> None:
+        super().__init__(ctx)
+        self.weights: Any = self.config.get("init_weights")
+        self.agg_weights: Any = None
+        self.agg_samples: int = 0
+
+    def distribute(self) -> None:
+        end = self.ctx.end(self.down_channel)
+        end.broadcast({"weights": self.weights, "done": self._work_done})
+
+    def aggregate(self) -> None:
+        if self._work_done:
+            return  # peers were just told to exit; nothing will arrive
+        import jax
+
+        end = self.ctx.end(self.down_channel)
+        total = 0.0
+        acc = None
+        for _, msg in end.recv_fifo(end.ends()):
+            w, n = msg["weights"], float(msg.get("num_samples", 1))
+            total += n
+            scaled = jax.tree_util.tree_map(lambda x: np.asarray(x) * n, w)
+            acc = (
+                scaled
+                if acc is None
+                else jax.tree_util.tree_map(np.add, acc, scaled)
+            )
+        if acc is not None and total > 0:
+            self.agg_weights = jax.tree_util.tree_map(lambda x: x / total, acc)
+            self.agg_samples = int(total)
+            self.weights = self.agg_weights
+
+
+class Aggregator(_AggregatorBase):
+    """Intermediate aggregator of H-FL: aggregates its group, relays upward."""
+
+    up_channel = "global-channel"
+
+    def fetch(self) -> None:
+        end = self.ctx.end(self.up_channel)
+        msg = end.recv(end.ends()[0])
+        self.weights = msg["weights"]
+        self._work_done = bool(msg.get("done", False))
+
+    def upload(self) -> None:
+        if self._work_done:
+            return
+        end = self.ctx.end(self.up_channel)
+        self.ctx.advance_clock(
+            self.up_channel, float(self.config.get("compute_time", 0.0))
+        )
+        end.send(
+            end.ends()[0],
+            {"weights": self.weights, "num_samples": self.agg_samples},
+        )
+
+    def compose(self) -> None:
+        with Composer() as composer:
+            self.composer = composer
+            tl_init = Tasklet("init", self.initialize)
+            tl_fetch = Tasklet("fetch", self.fetch)
+            tl_dist = Tasklet("distribute", self.distribute)
+            tl_agg = Tasklet("aggregate", self.aggregate)
+            tl_upload = Tasklet("upload", self.upload)
+            loop = Loop(loop_check_fn=lambda: self._work_done)
+            tl_init >> loop(tl_fetch >> tl_dist >> tl_agg >> tl_upload)
+
+
+class GlobalAggregator(_AggregatorBase):
+    """Root aggregator: drives the rounds and owns the global model."""
+
+    def __init__(self, ctx: RoleContext) -> None:
+        super().__init__(ctx)
+        if self.weights is None:
+            self.weights = self.config.get("init_weights")
+
+    down_channel = "param-channel"
+
+    def check_rounds(self) -> None:
+        self._round += 1
+        self.metrics.append({"round": self._round})
+        if self._round >= self.rounds:
+            self._work_done = True
+
+    def end_of_train(self) -> None:
+        if self._work_done:
+            # final broadcast tells everyone to exit their loops
+            self.distribute()
+
+    def compose(self) -> None:
+        with Composer() as composer:
+            self.composer = composer
+            tl_init = Tasklet("init", self.initialize)
+            tl_dist = Tasklet("distribute", self.distribute)
+            tl_agg = Tasklet("aggregate", self.aggregate)
+            tl_eval = Tasklet("evaluate", self.evaluate)
+            tl_round = Tasklet("check_rounds", self.check_rounds)
+            tl_end = Tasklet("end_of_train", self.end_of_train)
+            loop = Loop(loop_check_fn=lambda: self._work_done)
+            tl_init >> loop(
+                tl_dist >> tl_agg >> tl_eval >> tl_round
+            ) >> tl_end
+
+
+class HFLGlobalAggregator(GlobalAggregator):
+    """Global aggregator of H-FL: same workflow, down channel is the
+    aggregator-facing channel."""
+
+    down_channel = "global-channel"
+
+
+# Alias used by hierarchical template (global sits on "global-channel")
+class _AutoChannelGlobalAggregator(GlobalAggregator):
+    def __init__(self, ctx: RoleContext) -> None:
+        super().__init__(ctx)
+        chans = [c.name for c in ctx.tag.channels_of(ctx.worker.role)]
+        # prefer the conventional names, else the only channel present
+        for preferred in ("global-channel", "param-channel"):
+            if preferred in chans:
+                self.down_channel = preferred
+                break
+        else:
+            self.down_channel = chans[0]
+
+
+# Make GlobalAggregator channel-aware by default.
+GlobalAggregator = _AutoChannelGlobalAggregator  # type: ignore[misc]
+
+
+# ====================================================================== #
+# Distributed / Hybrid roles
+# ====================================================================== #
+class DistributedTrainer(Trainer):
+    """Distributed learning (Fig 2b): ring all-reduce among trainers,
+    no aggregator. Reuses the Trainer chain; fetch/upload are replaced by an
+    allreduce tasklet via the Table 1 API — the "Δ inheritance" of Table 4."""
+
+    ring_channel = "ring-channel"
+
+    def __init__(self, ctx: RoleContext) -> None:
+        super().__init__(ctx)
+        # no aggregator to fetch initial weights from: start from the job's
+        # init_weights (every trainer starts identically)
+        if self.weights is None:
+            self.weights = self.config.get("init_weights")
+
+    def allreduce(self) -> None:
+        import jax
+
+        end = self.ctx.end(self.ring_channel)
+        peers = end.ends()
+        end.broadcast({"weights": self.weights, "num_samples": self.num_samples})
+        total = float(self.num_samples)
+        acc = jax.tree_util.tree_map(
+            lambda x: np.asarray(x, dtype=np.float64) * total, self.weights
+        )
+        for _, msg in end.recv_fifo(peers):
+            n = float(msg.get("num_samples", 1))
+            total += n
+            acc = jax.tree_util.tree_map(
+                lambda a, x: a + np.asarray(x, dtype=np.float64) * n,
+                acc,
+                msg["weights"],
+            )
+        self.weights = jax.tree_util.tree_map(
+            lambda a: (a / total).astype(np.float32), acc
+        )
+        self._round += 1
+        if self._round >= self.rounds:
+            self._work_done = True
+
+    def compose(self) -> None:
+        super().compose()
+        assert self.composer is not None
+        with CloneComposer(self.composer) as composer:
+            self.composer = composer
+            tl_ar = Tasklet("allreduce", self.allreduce)
+            composer.get_tasklet("fetch").remove()
+            composer.get_tasklet("upload").replace_with(tl_ar)
+
+
+class HybridTrainer(Trainer):
+    """Hybrid FL (Fig 2e): intra-cluster all-reduce on the fast P2P channel;
+    only the cluster leader uploads to / fetches from the global aggregator."""
+
+    ring_channel = "ring-channel"
+
+    def _cluster_rank(self) -> Tuple[int, List[str]]:
+        me = self.ctx.worker.worker_id
+        members = self.ctx.static_members.get(self.ring_channel)
+        if not members:
+            end = self.ctx.end(self.ring_channel)
+            members = sorted(end.ends() + [me])
+        return members.index(me), list(members)
+
+    def pre_run(self) -> None:
+        """Non-leaders never join the uplink channel, so the aggregator's
+        ``ends()`` sees exactly one leader per cluster."""
+        self.ctx.end(self.ring_channel)
+        rank, _ = self._cluster_rank()
+        if rank == 0:
+            self.ctx.end(self.param_channel)
+
+    def cluster_allreduce(self) -> None:
+        if self._work_done:
+            return
+        import jax
+
+        end = self.ctx.end(self.ring_channel)
+        peers = end.ends()
+        if not peers:
+            return
+        end.broadcast({"weights": self.weights, "num_samples": self.num_samples})
+        total = float(self.num_samples)
+        acc = jax.tree_util.tree_map(
+            lambda x: np.asarray(x, dtype=np.float64) * total, self.weights
+        )
+        for _, msg in end.recv_fifo(peers):
+            n = float(msg.get("num_samples", 1))
+            total += n
+            acc = jax.tree_util.tree_map(
+                lambda a, x: a + np.asarray(x, dtype=np.float64) * n,
+                acc,
+                msg["weights"],
+            )
+        self.weights = jax.tree_util.tree_map(
+            lambda a: (a / total).astype(np.float32), acc
+        )
+        self._cluster_samples = int(total)
+
+    def fetch(self) -> None:
+        """Leader fetches from the aggregator and re-broadcasts in-cluster."""
+        rank, members = self._cluster_rank()
+        ring = self.ctx.end(self.ring_channel)
+        if rank == 0:
+            super().fetch()
+            ring.broadcast({"weights": self.weights, "done": self._work_done})
+        else:
+            msg = ring.recv(members[0])
+            self.weights = msg["weights"]
+            self._work_done = bool(msg.get("done", False))
+
+    def upload(self) -> None:
+        """Only the cluster leader uploads one cluster-level model."""
+        if self._work_done:
+            return
+        rank, _ = self._cluster_rank()
+        if rank != 0:
+            return
+        end = self.ctx.end(self.param_channel)
+        end.send(
+            end.ends()[0],
+            {
+                "weights": self.weights,
+                "num_samples": getattr(self, "_cluster_samples", self.num_samples),
+            },
+        )
+
+    def compose(self) -> None:
+        super().compose()
+        assert self.composer is not None
+        with CloneComposer(self.composer) as composer:
+            self.composer = composer
+            tl_ar = Tasklet("cluster_allreduce", self.cluster_allreduce)
+            composer.get_tasklet("upload").insert_before(tl_ar)

@@ -1,0 +1,145 @@
+"""In-process job runtime — the Flame-in-a-box (fiab) analogue (§5.3).
+
+Executes an expanded job: instantiates each worker's role program, runs
+``pre_run`` (channel joins) for every worker, barriers, then runs all tasklet
+chains on threads. Per-worker link models (bandwidth/latency) emulate the
+paper's heterogeneous-network experiments on the virtual clock kept by the
+inproc backends.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import threading
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.channels import ChannelManager, LinkModel
+from repro.core.expansion import JobSpec, WorkerConfig, expand
+from repro.core.registry import ResourceRegistry
+from repro.core.roles import Role, RoleContext
+from repro.core.tag import TAG
+
+
+def resolve_program(path: str) -> type:
+    """Import a role program class from its dotted path."""
+    module, _, name = path.rpartition(".")
+    if not module:
+        raise ImportError(f"program path {path!r} is not dotted")
+    mod = importlib.import_module(module)
+    return getattr(mod, name)
+
+
+def static_membership(
+    workers: Sequence[WorkerConfig], tag: TAG
+) -> Dict[Tuple[str, str], List[str]]:
+    """(channel, group) -> sorted member worker ids, from the expansion."""
+    members: Dict[Tuple[str, str], List[str]] = {}
+    for w in workers:
+        for ch, group in w.groups.items():
+            members.setdefault((ch, group), []).append(w.worker_id)
+    return {k: sorted(v) for k, v in members.items()}
+
+
+@dataclasses.dataclass
+class JobResult:
+    workers: List[WorkerConfig]
+    programs: Dict[str, Role]
+    channel_bytes: Dict[str, float]
+    errors: Dict[str, BaseException]
+
+    def program(self, worker_id: str) -> Role:
+        return self.programs[worker_id]
+
+    def global_weights(self) -> Any:
+        for wid, prog in self.programs.items():
+            if wid.startswith("global-aggregator"):
+                return prog.weights
+        # distributed topology: any trainer holds the consensus weights
+        for wid, prog in self.programs.items():
+            if hasattr(prog, "weights"):
+                return prog.weights
+        return None
+
+
+class JobRuntime:
+    """Expand + deploy + run a JobSpec entirely in-process."""
+
+    def __init__(
+        self,
+        job: JobSpec,
+        registry: Optional[ResourceRegistry] = None,
+        link_models: Optional[Dict[Tuple[str, str], LinkModel]] = None,
+        per_worker_hyperparams: Optional[Dict[str, Dict[str, Any]]] = None,
+        program_overrides: Optional[Dict[str, type]] = None,
+    ) -> None:
+        self.job = job
+        self.workers = expand(job, registry)
+        self.channels = ChannelManager(job.tag.channels)
+        self.link_models = dict(link_models or {})
+        self.per_worker_hyperparams = dict(per_worker_hyperparams or {})
+        self.program_overrides = dict(program_overrides or {})
+        self._membership = static_membership(self.workers, job.tag)
+        for (channel, worker), model in self.link_models.items():
+            self.channels.backend(channel).set_link(channel, worker, model)
+
+    def _build_program(self, w: WorkerConfig) -> Role:
+        if w.role in self.program_overrides:
+            cls = self.program_overrides[w.role]
+        else:
+            cls = resolve_program(w.program)
+        hp = dict(self.job.hyperparams)
+        hp.update(self.per_worker_hyperparams.get(w.worker_id, {}))
+        static = {
+            ch: self._membership[(ch, group)] for ch, group in w.groups.items()
+        }
+        ctx = RoleContext(
+            w, self.job.tag, self.channels, hyperparams=hp, static_members=static
+        )
+        return cls(ctx)
+
+    def run(self, timeout: float = 120.0) -> JobResult:
+        programs: Dict[str, Role] = {}
+        errors: Dict[str, BaseException] = {}
+        for w in self.workers:
+            programs[w.worker_id] = self._build_program(w)
+        # phase 1: joins (so no worker sees a half-joined group)
+        for prog in programs.values():
+            prog.pre_run()
+        # phase 2: chains on threads
+        threads: List[threading.Thread] = []
+
+        def _runner(wid: str, prog: Role) -> None:
+            try:
+                prog.run()
+            except BaseException as e:  # noqa: BLE001 - surfaced to caller
+                errors[wid] = e
+
+        for wid, prog in programs.items():
+            t = threading.Thread(target=_runner, args=(wid, prog), daemon=True)
+            threads.append(t)
+            t.start()
+        for t in threads:
+            t.join(timeout=timeout)
+        alive = [t for t in threads if t.is_alive()]
+        if alive:
+            errors["__timeout__"] = TimeoutError(
+                f"{len(alive)} workers still running after {timeout}s"
+            )
+        channel_bytes = {
+            c.name: self.channels.total_bytes(c.name) for c in self.job.tag.channels
+        }
+        return JobResult(
+            workers=self.workers,
+            programs=programs,
+            channel_bytes=channel_bytes,
+            errors=errors,
+        )
+
+
+def run_job(
+    job: JobSpec,
+    registry: Optional[ResourceRegistry] = None,
+    **kwargs: Any,
+) -> JobResult:
+    timeout = float(kwargs.pop("timeout", 120.0))
+    return JobRuntime(job, registry, **kwargs).run(timeout=timeout)

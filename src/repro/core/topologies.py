@@ -1,0 +1,305 @@
+"""Topology templates (paper §6.3): C-FL, H-FL, CO-FL, Hybrid, Distributed.
+
+Each builder returns a validated TAG. These are the "templates provided in
+Flame" users pick from; transformations between them are small TAG edits
+(quantified by ``repro.core.tag.diff_tags`` and the Table 4 reproduction).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+from repro.core.tag import Channel, FuncTags, Role, TAG, DEFAULT_GROUP
+
+
+def classical_fl(
+    groups: Sequence[str] = (),
+    backend: str = "inproc",
+    trainer_program: str = "repro.core.roles.Trainer",
+    aggregator_program: str = "repro.core.roles.GlobalAggregator",
+    wire_dtype: str = "f32",
+) -> TAG:
+    """Fig 2c: trainers <-> one global aggregator over a single param channel."""
+    param = Channel(
+        name="param-channel",
+        pair=("trainer", "global-aggregator"),
+        group_by=tuple(groups),
+        func_tags=FuncTags(
+            {
+                "trainer": ("fetch", "upload"),
+                "global-aggregator": ("distribute", "aggregate"),
+            }
+        ),
+        backend=backend,
+        wire_dtype=wire_dtype,
+    )
+    trainer = Role(
+        name="trainer",
+        program=trainer_program,
+        is_data_consumer=True,
+        group_association=tuple({"param-channel": g} for g in (groups or (DEFAULT_GROUP,))),
+    )
+    agg = Role(
+        name="global-aggregator",
+        program=aggregator_program,
+        group_association=({"param-channel": DEFAULT_GROUP},)
+        if not groups
+        else tuple({"param-channel": g} for g in groups),
+    )
+    # A single global aggregator serving several groups needs the channel to
+    # carry a default group; keep one aggregator on the default group.
+    if groups:
+        param = Channel(
+            name=param.name,
+            pair=param.pair,
+            group_by=tuple(set(groups) | {DEFAULT_GROUP}),
+            func_tags=param.func_tags,
+            backend=param.backend,
+            wire_dtype=param.wire_dtype,
+        )
+        agg = Role(
+            name="global-aggregator",
+            program=aggregator_program,
+            group_association=({"param-channel": DEFAULT_GROUP},),
+        )
+        trainer = Role(
+            name="trainer",
+            program=trainer_program,
+            is_data_consumer=True,
+            group_association=tuple({"param-channel": DEFAULT_GROUP} for _ in groups),
+        )
+    tag = TAG(name="classical-fl", roles=(trainer, agg), channels=(param,))
+    tag.validate()
+    return tag
+
+
+def hierarchical_fl(
+    groups: Sequence[str] = ("west", "east"),
+    dataset_groups: Optional[Dict[str, Tuple[str, ...]]] = None,
+    param_backend: str = "inproc",
+    agg_backend: str = "inproc",
+    replica: int = 1,
+    trainer_program: str = "repro.core.roles.Trainer",
+    aggregator_program: str = "repro.core.roles.Aggregator",
+    global_program: str = "repro.core.roles.GlobalAggregator",
+    param_wire_dtype: str = "f32",
+    agg_wire_dtype: str = "f32",
+) -> TAG:
+    """Fig 3a: trainers -> per-group aggregators -> global aggregator."""
+    groups = tuple(groups)
+    param = Channel(
+        name="param-channel",
+        pair=("trainer", "aggregator"),
+        group_by=groups,
+        func_tags=FuncTags(
+            {"trainer": ("fetch", "upload"), "aggregator": ("distribute", "aggregate")}
+        ),
+        backend=param_backend,
+        wire_dtype=param_wire_dtype,
+    )
+    global_ch = Channel(
+        name="global-channel",
+        pair=("aggregator", "global-aggregator"),
+        func_tags=FuncTags(
+            {
+                "aggregator": ("fetch", "upload"),
+                "global-aggregator": ("distribute", "aggregate"),
+            }
+        ),
+        backend=agg_backend,
+        wire_dtype=agg_wire_dtype,
+    )
+    trainer = Role(
+        name="trainer",
+        program=trainer_program,
+        is_data_consumer=True,
+        group_association=tuple({"param-channel": g} for g in groups),
+    )
+    aggregator = Role(
+        name="aggregator",
+        program=aggregator_program,
+        replica=replica,
+        group_association=tuple(
+            {"param-channel": g, "global-channel": DEFAULT_GROUP} for g in groups
+        ),
+    )
+    global_agg = Role(
+        name="global-aggregator",
+        program=global_program,
+        group_association=({"global-channel": DEFAULT_GROUP},),
+    )
+    tag = TAG(
+        name="hierarchical-fl",
+        roles=(trainer, aggregator, global_agg),
+        channels=(param, global_ch),
+        dataset_groups=dict(dataset_groups or {}),
+    )
+    tag.validate()
+    return tag
+
+
+def coordinated_fl(
+    groups: Sequence[str] = ("default",),
+    dataset_groups: Optional[Dict[str, Tuple[str, ...]]] = None,
+    aggregator_replicas: int = 2,
+    trainer_program: str = "repro.core.roles_coord.CoordTrainer",
+    aggregator_program: str = "repro.core.roles_coord.CoordAggregator",
+    global_program: str = "repro.core.roles_coord.CoordGlobalAggregator",
+    coordinator_program: str = "repro.core.roles_coord.Coordinator",
+) -> TAG:
+    """Fig 1d / Fig 8: H-FL plus a coordinator connected to every other role.
+
+    The bipartite trainer<->aggregator links come from a single shared group
+    plus the aggregator ``replica`` attribute, exactly as §6.1 describes.
+    """
+    groups = tuple(groups)
+    base = hierarchical_fl(
+        groups=groups,
+        dataset_groups=dataset_groups,
+        replica=aggregator_replicas,
+        trainer_program=trainer_program,
+        aggregator_program=aggregator_program,
+        global_program=global_program,
+    )
+    coord_channels = (
+        Channel(
+            name="coord-trainer-channel",
+            pair=("coordinator", "trainer"),
+            func_tags=FuncTags(
+                {"coordinator": ("assign",), "trainer": ("get_assignment",)}
+            ),
+        ),
+        Channel(
+            name="coord-agg-channel",
+            pair=("coordinator", "aggregator"),
+            func_tags=FuncTags(
+                {"coordinator": ("assign", "collect_delay"), "aggregator": ("report",)}
+            ),
+        ),
+        Channel(
+            name="coord-global-channel",
+            pair=("coordinator", "global-aggregator"),
+            func_tags=FuncTags(
+                {"coordinator": ("steer",), "global-aggregator": ("get_coord_ends",)}
+            ),
+        ),
+    )
+
+    def _with_channel(role: Role, channel: str) -> Role:
+        return Role(
+            name=role.name,
+            program=role.program,
+            replica=role.replica,
+            is_data_consumer=role.is_data_consumer,
+            group_association=tuple(
+                {**assoc, channel: DEFAULT_GROUP} for assoc in role.group_association
+            ),
+        )
+
+    trainer = _with_channel(base.role("trainer"), "coord-trainer-channel")
+    aggregator = _with_channel(base.role("aggregator"), "coord-agg-channel")
+    global_agg = _with_channel(base.role("global-aggregator"), "coord-global-channel")
+    coordinator = Role(
+        name="coordinator",
+        program=coordinator_program,
+        group_association=(
+            {
+                "coord-trainer-channel": DEFAULT_GROUP,
+                "coord-agg-channel": DEFAULT_GROUP,
+                "coord-global-channel": DEFAULT_GROUP,
+            },
+        ),
+    )
+    tag = TAG(
+        name="coordinated-fl",
+        roles=(trainer, aggregator, global_agg, coordinator),
+        channels=base.channels + coord_channels,
+        dataset_groups=dict(base.dataset_groups),
+    )
+    tag.validate()
+    return tag
+
+
+def hybrid_fl(
+    groups: Sequence[str] = ("c0", "c1", "c2", "c3", "c4"),
+    dataset_groups: Optional[Dict[str, Tuple[str, ...]]] = None,
+    intra_backend: str = "p2p-emu",
+    uplink_backend: str = "mqtt-emu",
+    trainer_program: str = "repro.core.roles.HybridTrainer",
+    aggregator_program: str = "repro.core.roles.GlobalAggregator",
+    uplink_wire_dtype: str = "f32",
+) -> TAG:
+    """Fig 2e: co-located trainers all-reduce over a fast intra-cluster P2P
+    channel; one elected leader per cluster uploads over the slow channel."""
+    groups = tuple(groups)
+    ring = Channel(
+        name="ring-channel",
+        pair=("trainer", "trainer"),
+        group_by=groups,
+        func_tags=FuncTags({"trainer": ("allreduce",)}),
+        backend=intra_backend,
+    )
+    uplink = Channel(
+        name="param-channel",
+        pair=("trainer", "global-aggregator"),
+        group_by=(DEFAULT_GROUP,),
+        func_tags=FuncTags(
+            {
+                "trainer": ("fetch", "upload"),
+                "global-aggregator": ("distribute", "aggregate"),
+            }
+        ),
+        backend=uplink_backend,
+        wire_dtype=uplink_wire_dtype,
+    )
+    trainer = Role(
+        name="trainer",
+        program=trainer_program,
+        is_data_consumer=True,
+        group_association=tuple(
+            {"ring-channel": g, "param-channel": DEFAULT_GROUP} for g in groups
+        ),
+    )
+    agg = Role(
+        name="global-aggregator",
+        program=aggregator_program,
+        group_association=({"param-channel": DEFAULT_GROUP},),
+    )
+    tag = TAG(
+        name="hybrid-fl",
+        roles=(trainer, agg),
+        channels=(ring, uplink),
+        dataset_groups=dict(dataset_groups or {}),
+    )
+    tag.validate()
+    return tag
+
+
+def distributed_fl(
+    backend: str = "p2p-emu",
+    trainer_program: str = "repro.core.roles.DistributedTrainer",
+) -> TAG:
+    """Fig 2b: no aggregator; trainers all-reduce among themselves."""
+    ring = Channel(
+        name="ring-channel",
+        pair=("trainer", "trainer"),
+        func_tags=FuncTags({"trainer": ("allreduce",)}),
+        backend=backend,
+    )
+    trainer = Role(
+        name="trainer",
+        program=trainer_program,
+        is_data_consumer=True,
+        group_association=({"ring-channel": DEFAULT_GROUP},),
+    )
+    tag = TAG(name="distributed-fl", roles=(trainer,), channels=(ring,))
+    tag.validate()
+    return tag
+
+
+TEMPLATES = {
+    "classical": classical_fl,
+    "hierarchical": hierarchical_fl,
+    "coordinated": coordinated_fl,
+    "hybrid": hybrid_fl,
+    "distributed": distributed_fl,
+}

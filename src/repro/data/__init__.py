@@ -1,0 +1,16 @@
+from repro.data.datasets import (
+    FederatedDataset,
+    dirichlet_partition,
+    synthetic_classification,
+    synthetic_lm_shards,
+)
+from repro.data.pipeline import BatchPipeline, lm_batches
+
+__all__ = [
+    "FederatedDataset",
+    "dirichlet_partition",
+    "synthetic_classification",
+    "synthetic_lm_shards",
+    "BatchPipeline",
+    "lm_batches",
+]

@@ -1,0 +1,43 @@
+from repro.fl.strategies import (
+    FedAdagrad,
+    FedAdam,
+    FedAvg,
+    FedBuff,
+    FedDyn,
+    FedProx,
+    FedYogi,
+    ServerStrategy,
+    get_strategy,
+)
+from repro.fl.compression import (
+    dequantize_int8,
+    quantize_int8,
+    topk_sparsify,
+    topk_densify,
+)
+from repro.fl.selection import OortSelector, RandomSelector, SelectAll
+from repro.fl.sampling import FedBalancerSampler, SelectAllSampler
+from repro.fl.privacy import DPConfig, clip_and_noise
+
+__all__ = [
+    "ServerStrategy",
+    "FedAvg",
+    "FedProx",
+    "FedAdam",
+    "FedAdagrad",
+    "FedYogi",
+    "FedDyn",
+    "FedBuff",
+    "get_strategy",
+    "quantize_int8",
+    "dequantize_int8",
+    "topk_sparsify",
+    "topk_densify",
+    "SelectAll",
+    "RandomSelector",
+    "OortSelector",
+    "SelectAllSampler",
+    "FedBalancerSampler",
+    "DPConfig",
+    "clip_and_noise",
+]

@@ -1,0 +1,67 @@
+"""Channel payload compression — the wire-policy half of per-channel backends.
+
+Flame's per-channel ``backend`` attribute picks a transport; on a TPU mesh the
+transport is fixed (ICI/DCN) and the tunable is the *wire representation*.
+These transforms are pure jnp (jit/pjit-safe) so they compose with the
+collective schedule; the Pallas fast path lives in ``repro.kernels.quant``.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def quantize_tree_int8(tree: Any) -> Tuple[Any, Any]:
+    qs = jax.tree_util.tree_map(quantize_int8, tree)
+    q = jax.tree_util.tree_map(lambda t: t[0], qs, is_leaf=lambda t: isinstance(t, tuple))
+    s = jax.tree_util.tree_map(lambda t: t[1], qs, is_leaf=lambda t: isinstance(t, tuple))
+    return q, s
+
+
+def dequantize_tree_int8(q: Any, s: Any) -> Any:
+    return jax.tree_util.tree_map(dequantize_int8, q, s)
+
+
+def topk_sparsify(x: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """Keep the k largest-magnitude entries of a flattened tensor.
+
+    Returns (values, flat_indices). Error feedback is the caller's concern
+    (see ``repro.fl.strategies.FedBuff`` usage in examples).
+    """
+    flat = x.reshape(-1)
+    k = min(int(k), flat.shape[0])
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    del vals
+    return flat[idx], idx
+
+
+def topk_densify(values: jax.Array, idx: jax.Array, shape: Tuple[int, ...]) -> jax.Array:
+    size = 1
+    for s in shape:
+        size *= s
+    out = jnp.zeros((size,), values.dtype).at[idx].set(values)
+    return out.reshape(shape)
+
+
+def compression_ratio(shape: Tuple[int, ...], k: int, index_bytes: int = 4) -> float:
+    """Wire-bytes ratio of top-k vs dense f32 (for bandwidth accounting)."""
+    size = 1
+    for s in shape:
+        size *= s
+    dense = 4 * size
+    sparse = k * (4 + index_bytes)
+    return sparse / dense

@@ -1,0 +1,57 @@
+"""Sample selection (paper Table 7): Select-All and FedBalancer.
+
+FedBalancer (Shin et al., MobiSys'22), simplified: each client keeps
+per-sample losses and trains on samples whose loss falls inside a moving
+[lt, ut] window, trading epochs for informative samples under a deadline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+class SelectAllSampler:
+    name = "all"
+
+    def select(
+        self, losses: np.ndarray, round_idx: int
+    ) -> np.ndarray:
+        return np.arange(losses.shape[0])
+
+    def update_thresholds(self, losses: np.ndarray) -> None:
+        pass
+
+
+@dataclasses.dataclass
+class FedBalancerSampler:
+    """Loss-window sample selection with threshold ratio annealing."""
+
+    lt_ratio: float = 0.0  # low-threshold percentile (anneals upward)
+    ut_ratio: float = 1.0  # upper percentile
+    step: float = 0.05
+    min_keep: int = 8
+    name: str = "fedbalancer"
+
+    def __post_init__(self) -> None:
+        self._lt: Optional[float] = None
+        self._ut: Optional[float] = None
+
+    def update_thresholds(self, losses: np.ndarray) -> None:
+        if losses.size == 0:
+            return
+        self._lt = float(np.quantile(losses, min(0.95, self.lt_ratio)))
+        self._ut = float(np.quantile(losses, max(0.05, self.ut_ratio)))
+        # anneal: trust the model more as training progresses
+        self.lt_ratio = min(0.5, self.lt_ratio + self.step)
+
+    def select(self, losses: np.ndarray, round_idx: int) -> np.ndarray:
+        if self._lt is None or self._ut is None:
+            self.update_thresholds(losses)
+        assert self._lt is not None and self._ut is not None
+        mask = (losses >= self._lt) & (losses <= self._ut)
+        idx = np.nonzero(mask)[0]
+        if idx.size < self.min_keep:
+            idx = np.argsort(losses)[::-1][: self.min_keep]
+        return idx

@@ -1,0 +1,51 @@
+"""Public wrapper: weighted aggregation over pytrees of client deltas.
+
+``aggregate_tree`` flattens a batch-of-client pytrees (leaves lead with the
+client dim C), runs the bandwidth-optimal Pallas reduction per leaf chunk
+and restores the structure — the aggregator role's compute hot-spot.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.agg.kernel import weighted_aggregate
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def aggregate_flat(
+    deltas: jax.Array,  # (C, N)
+    weights: jax.Array,  # (C,)
+    *,
+    block_n: int = 65_536,
+    interpret: bool = None,  # type: ignore[assignment]
+) -> jax.Array:
+    if interpret is None:
+        interpret = _on_cpu()
+    C, N = deltas.shape
+    block = min(block_n, N)
+    pad = (-N) % block
+    if pad:
+        deltas = jnp.pad(deltas, ((0, 0), (0, pad)))
+    out = weighted_aggregate(deltas, weights, block_n=block, interpret=interpret)
+    return out[:N] if pad else out
+
+
+def aggregate_tree(client_trees, weights, *, interpret=None):
+    """Leaves of ``client_trees`` lead with the client dim C."""
+    leaves, treedef = jax.tree_util.tree_flatten(client_trees)
+    C = leaves[0].shape[0]
+    flat = jnp.concatenate([l.reshape(C, -1) for l in leaves], axis=1)
+    agg = aggregate_flat(flat, weights, interpret=interpret)
+    out, offset = [], 0
+    for l in leaves:
+        size = l[0].size
+        out.append(agg[offset : offset + size].reshape(l.shape[1:]).astype(l.dtype))
+        offset += size
+    return jax.tree_util.tree_unflatten(treedef, out)

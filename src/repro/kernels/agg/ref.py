@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the weighted-aggregate kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_aggregate(deltas: jax.Array, weights: jax.Array) -> jax.Array:
+    w = weights.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(w), 1e-30)
+    return (w @ deltas.astype(jnp.float32)) / denom

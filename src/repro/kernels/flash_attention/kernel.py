@@ -1,0 +1,125 @@
+"""Pallas TPU flash-attention kernel: tiled online-softmax, MXU-aligned.
+
+Grid: (batch, q_heads, nQ, nK) with the KV loop innermost so the running
+(m, l, acc) state lives in VMEM scratch across KV tiles. BlockSpecs tile
+(block_q x head_dim) queries against (block_k x head_dim) keys/values —
+both multiples of 128 by default to align the MXU matmul dims. GQA is
+expressed in the K/V index maps (q head h reads kv head h // group_size).
+
+Supports causal masking and sliding-window attention (the long_500k
+sub-quadratic variant). Validated on CPU in interpret mode against
+``ref.reference_attention``; TPU is the compile target.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref,  # inputs
+    o_ref,  # output
+    m_scr, l_scr, acc_scr,  # VMEM scratch
+    *, scale: float, block_q: int, block_k: int, n_k: int,
+    causal: bool, window: int, kv_len: int,
+):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (Bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)  # (Bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)  # (Bk, D)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (Bq, Bk)
+
+    iq = pl.program_id(2)
+    qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = kpos < kv_len  # padding
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ik == n_k - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(
+    q: jax.Array,  # (B, H, Sq, D)
+    k: jax.Array,  # (B, Hkv, Skv, D)
+    v: jax.Array,  # (B, Hkv, Skv, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+    kv_len: int = 0,  # unpadded KV length (0 = no padding)
+) -> jax.Array:
+    """Core pallas_call on (B, H, S, D) layout; S must be padded by caller."""
+    B, H, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    group = H // Hkv
+    scale = D**-0.5
+    n_q = Sq // block_q
+    n_k = Skv // block_k
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale, block_q=block_q, block_k=block_k, n_k=n_k,
+        causal=causal, window=window, kv_len=kv_len or Skv,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec(
+                (1, 1, block_k, D),
+                lambda b, h, iq, ik, g=group: (b, h // g, ik, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, D),
+                lambda b, h, iq, ik, g=group: (b, h // g, ik, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

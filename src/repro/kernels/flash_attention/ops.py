@@ -1,0 +1,61 @@
+"""jit'd public wrapper around the flash-attention Pallas kernel.
+
+Handles layout (model uses (B, S, H, D)), sequence padding to tile
+multiples, and interpret-mode fallback on CPU (the kernel body executes in
+Python for correctness validation; TPU is the compile target).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, Skv, Hkv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = None,  # type: ignore[assignment]
+) -> jax.Array:
+    if interpret is None:
+        interpret = _on_cpu()
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    block_q = min(block_q, max(8, Sq))
+    block_k = min(block_k, max(8, Skv))
+    pad_q = (-Sq) % block_q
+    pad_k = (-Skv) % block_k
+
+    qt = jnp.moveaxis(q, 2, 1)  # (B, H, Sq, D)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+
+    out = flash_attention_bhsd(
+        qt, kt, vt,
+        causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+        kv_len=Skv,
+    )
+    if pad_q:
+        out = out[:, :, :Sq]
+    return jnp.moveaxis(out, 1, 2)  # (B, Sq, H, D)

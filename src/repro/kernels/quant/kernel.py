@@ -1,0 +1,62 @@
+"""Pallas kernel: blockwise int8 symmetric quantize / dequantize.
+
+The channel payload transform behind the per-channel ``wire_dtype="int8"``
+policy (§6.2 / DESIGN.md): before a model update crosses a slow channel
+(cross-pod DCN), it is quantized to int8 with one f32 scale per block.
+Memory-bound by construction; the kernel fuses absmax + scale + round in a
+single VMEM pass per block so HBM sees each element once.
+
+Layout: x (NB, BLOCK) f32 -> (q (NB, BLOCK) int8, scale (NB, 1) f32).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)  # (1, BLOCK)
+    absmax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(absmax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    q_ref[...] = q
+    s_ref[...] = jnp.full_like(s_ref, scale)
+
+
+def _dequant_kernel(q_ref, s_ref, x_ref):
+    x_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[0, 0]
+
+
+def quantize_blocks(x: jax.Array, *, interpret: bool = False):
+    """x: (NB, BLOCK) f32 -> (q int8, scale (NB, 1) f32)."""
+    NB, BLOCK = x.shape
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=(NB,),
+        in_specs=[pl.BlockSpec((1, BLOCK), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((1, BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((NB, BLOCK), jnp.int8),
+            jax.ShapeDtypeStruct((NB, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+
+
+def dequantize_blocks(q: jax.Array, scale: jax.Array, *, interpret: bool = False):
+    NB, BLOCK = q.shape
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=(NB,),
+        in_specs=[
+            pl.BlockSpec((1, BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((NB, BLOCK), jnp.float32),
+        interpret=interpret,
+    )(q, scale)

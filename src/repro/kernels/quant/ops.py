@@ -1,0 +1,57 @@
+"""Public wrapper: int8 channel-payload compression for arbitrary pytrees."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant.kernel import dequantize_blocks, quantize_blocks
+
+BLOCK = 4096
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_flat(x: jax.Array, *, interpret=None):
+    """x: flat (N,) -> (q (NB, BLOCK) int8, scale (NB,1), n: original size)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    n = x.shape[0]
+    pad = (-n) % BLOCK
+    xp = jnp.pad(x.astype(jnp.float32), (0, pad)).reshape(-1, BLOCK)
+    q, s = quantize_blocks(xp, interpret=interpret)
+    return q, s
+
+
+@functools.partial(jax.jit, static_argnames=("n", "interpret"))
+def dequantize_flat(q: jax.Array, scale: jax.Array, n: int, *, interpret=None):
+    if interpret is None:
+        interpret = _on_cpu()
+    x = dequantize_blocks(q, scale, interpret=interpret).reshape(-1)
+    return x[:n]
+
+
+def compress_tree(tree, *, interpret=None):
+    """pytree -> (quantized payload pytree, spec for decompress)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+    q, s = quantize_flat(flat, interpret=interpret)
+    spec = (treedef, [(l.shape, l.dtype) for l in leaves], flat.shape[0])
+    return {"q": q, "scale": s}, spec
+
+
+def decompress_tree(payload, spec, *, interpret=None):
+    treedef, shapes, n = spec
+    flat = dequantize_flat(payload["q"], payload["scale"], n, interpret=interpret)
+    out, offset = [], 0
+    for shape, dtype in shapes:
+        size = 1
+        for d in shape:
+            size *= d
+        out.append(flat[offset : offset + size].reshape(shape).astype(dtype))
+        offset += size
+    return jax.tree_util.tree_unflatten(treedef, out)

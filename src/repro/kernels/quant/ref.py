@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for blockwise int8 symmetric quantization."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_quantize(x: jax.Array):
+    """x: (NB, BLOCK) -> (q int8, scale (NB, 1))."""
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def reference_dequantize(q: jax.Array, scale: jax.Array):
+    return q.astype(jnp.float32) * scale

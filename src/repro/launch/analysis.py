@@ -1,0 +1,185 @@
+"""HLO analysis: collective-byte accounting + roofline terms (§Roofline).
+
+The roofline terms are derived from the compiled dry-run artifact:
+
+  compute term    = HLO_FLOPs / (chips × 197 TFLOP/s bf16)
+  memory term     = HLO_bytes / (chips × 819 GB/s HBM)
+  collective term = collective_bytes / (chips × 50 GB/s/link ICI)
+
+``collective_bytes`` is parsed from the optimized HLO text: the result sizes
+of every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute op, with collectives inside ``while`` bodies (lax.scan)
+multiplied by the caller-supplied trip count (XLA's HloCostAnalysis counts
+loop bodies once — verified empirically; the dry-run therefore unrolls the
+layer stack and only the local-steps scan needs a trip factor).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"((?:all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?)\b"
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\([^)]*\)\s*->")
+_WHILE_RE = re.compile(r"=\s*\S+\s+while\(.*body=%?([\w.\-]+)")
+_CALLSITE_RE = re.compile(
+    r"(?:to_apply|body|condition|branch_computations|called_computations)="
+    r"[{]?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)[}]?"
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    # op kind -> (count, result bytes) — per device, trip-count scaled
+    by_kind: Dict[str, Tuple[int, int]]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(b for _, b in self.by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(c for c, _ in self.by_kind.values())
+
+
+def parse_collectives(
+    hlo_text: str, while_trip_counts: Optional[Dict[str, int]] = None,
+    default_trip: int = 1,
+) -> CollectiveStats:
+    """Sum collective result bytes in optimized (post-SPMD) HLO.
+
+    ``while_trip_counts`` maps a while-body computation-name substring to its
+    trip count; collectives inside matching bodies are multiplied. Bodies not
+    matched use ``default_trip``.
+    """
+    while_trip_counts = while_trip_counts or {}
+
+    # split into computations
+    comps: Dict[str, List[str]] = {}
+    current = None
+    for line in hlo_text.splitlines():
+        m = _COMP_RE.match(line.strip())
+        if m and ("{" in line or line.rstrip().endswith("->")):
+            current = m.group(1)
+            comps[current] = []
+        elif current is not None:
+            comps[current].append(line)
+
+    # find while bodies
+    while_bodies: Dict[str, int] = {}
+    for name, lines in comps.items():
+        for line in lines:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                body = wm.group(1)
+                trip = default_trip
+                for key, t in while_trip_counts.items():
+                    if key in body:
+                        trip = t
+                        break
+                while_bodies[body] = trip
+
+    by_kind: Dict[str, Tuple[int, int]] = {}
+    seen_done: set = set()
+    for name, lines in comps.items():
+        trip = 1
+        for body, t in while_bodies.items():
+            if body in name or name in body:
+                trip = t
+                break
+        for line in lines:
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            shape_str, op = m.group(1), m.group(2)
+            kind = op.replace("-start", "").replace("-done", "")
+            if op.endswith("-done"):
+                continue  # counted at -start
+            nbytes = _shape_bytes(shape_str) * trip
+            c, b = by_kind.get(kind, (0, 0))
+            by_kind[kind] = (c + trip, b + nbytes)
+    return CollectiveStats(by_kind=by_kind)
+
+
+# --------------------------------------------------------------------- #
+# roofline
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float  # whole-program (all chips)
+    hlo_bytes: float  # whole-program HBM traffic (all chips)
+    collective_bytes: float  # per-device on-wire bytes
+    model_flops: float  # 6*N*D (or 6*N_active*D)
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+
+    def __post_init__(self):
+        from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+        self.compute_s = self.hlo_flops / (self.chips * PEAK_FLOPS_BF16)
+        self.memory_s = self.hlo_bytes / (self.chips * HBM_BW)
+        # collective_bytes is already per-device wire traffic
+        self.collective_s = self.collective_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "useful_ratio": self.useful_ratio,
+        }

@@ -1,0 +1,269 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combination.
+
+Two programs per pair (DESIGN.md dry-run methodology):
+
+1. **Deployment program** — the full config with scan-over-layers + remat
+   (exactly what the launcher runs). Lowered + compiled on the single-pod
+   (16,16) and multi-pod (2,16,16) meshes; ``memory_analysis()`` proves the
+   per-device footprint fits a v5e chip. Compile stays fast because the HLO
+   is one layer-group long.
+
+2. **Cost pair** (single-pod, feeds §Roofline) — the same program UNROLLED
+   at 2x and 4x the layer period with local_steps=1. XLA's HloCostAnalysis
+   counts while bodies once (verified empirically), so unrolled programs give
+   exact per-device FLOPs/bytes/collective bytes; the per-layer-group delta
+   ``(c4 - c2)/2`` extrapolates to the full depth:
+   ``total = c2 + (G - 2) * per_group``.
+
+Usage:
+  python -m repro.launch.dryrun --arch deepseek-7b --shape train_4k
+  python -m repro.launch.dryrun --all --both-meshes --out results.json
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config, long_decode_variant
+from repro.launch import sharding as shd
+from repro.launch.analysis import Roofline, parse_collectives
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_serve_step, build_train_step
+from repro.fl.fedstep import FedStepConfig
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+from repro.models.blocks import layer_kinds
+
+HBM_PER_CHIP = 16 * 1024**3  # v5e
+
+
+def _local_steps(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    if shape.kind != "train":
+        return 1
+    # tp: 8 local steps microbatch the per-client batch (memory); fsdp archs
+    # shard the batch over all 256 devices already — splitting further would
+    # make the microbatch indivisible by the device count and SPMD would
+    # drop the batch sharding entirely.
+    return 8 if cfg.param_sharding == "tp" else 1
+
+
+def skip_reason(cfg, shape):
+    if shape.name == "long_500k" and cfg.encoder_layers:
+        return "enc-dec with full cross-attention: no sub-quadratic variant (DESIGN.md)"
+    return None
+
+
+def _with_layers(cfg: ModelConfig, n: int) -> ModelConfig:
+    if cfg.encoder_layers:
+        return dataclasses.replace(cfg, num_layers=n, encoder_layers=n)
+    return dataclasses.replace(cfg, num_layers=n)
+
+
+def make_lowered(cfg: ModelConfig, shape: ShapeConfig, mesh, local_steps: int):
+    """Build + lower the step for one (config, shape, mesh)."""
+    if shape.kind == "train":
+        fed = FedStepConfig(local_steps=local_steps, local_lr=1e-2)
+        bundle, setup = build_train_step(cfg, mesh, fed)
+        specs = bundle.input_specs(shape)
+        batch_sh = shd.batch_shardings(specs, cfg, mesh)
+        params_shapes = jax.eval_shape(bundle.init, jax.random.key(0))
+        state_shapes = jax.eval_shape(setup.init_state, params_shapes)
+        rng_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        with mesh:
+            jitted = jax.jit(
+                setup.step,
+                in_shardings=(setup.in_shardings[0], setup.in_shardings[1],
+                              batch_sh, setup.in_shardings[3]),
+                out_shardings=setup.out_shardings,
+                donate_argnums=(0, 1),
+            )
+            return jitted.lower(params_shapes, state_shapes, specs, rng_spec)
+    bundle, setup = build_serve_step(cfg, mesh, shape.seq_len, shape.global_batch)
+    specs = bundle.input_specs(shape)
+    batch_sh = shd.batch_shardings(specs, cfg, mesh)
+    params_shapes = jax.eval_shape(bundle.init, jax.random.key(0))
+    cache_shapes = jax.eval_shape(
+        lambda: bundle.init_cache(shape.global_batch, shape.seq_len)
+    )
+    rep = NamedSharding(mesh, P())
+    with mesh:
+        if shape.kind == "prefill":
+            jitted = jax.jit(
+                setup.prefill,
+                in_shardings=(setup.param_shardings, batch_sh,
+                              setup.cache_shardings),
+                out_shardings=(rep, setup.cache_shardings),
+                donate_argnums=(2,),
+            )
+            return jitted.lower(params_shapes, specs, cache_shapes)
+        jitted = jax.jit(
+            setup.serve_step,
+            in_shardings=(setup.param_shardings, setup.cache_shardings,
+                          batch_sh),
+            out_shardings=(rep, setup.cache_shardings),
+            donate_argnums=(1,),
+        )
+        return jitted.lower(params_shapes, cache_shapes, specs)
+
+
+def _mem_record(compiled):
+    mem = compiled.memory_analysis()
+    rec = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        rec[attr] = getattr(mem, attr, None)
+    args_b = rec.get("argument_size_in_bytes") or 0
+    temp_b = rec.get("temp_size_in_bytes") or 0
+    out_b = rec.get("output_size_in_bytes") or 0
+    alias_b = rec.get("alias_size_in_bytes") or 0
+    rec["peak_bytes"] = args_b + temp_b + out_b - alias_b
+    return rec
+
+
+def _cost_record(lowered):
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    colls = parse_collectives(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes": float(colls.total_bytes),
+        "collectives": dict(colls.by_kind),
+    }
+
+
+def lower_pair(arch, shape_name, multi_pod=False, roofline=True, verbose=True):
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    reason = skip_reason(cfg, shape)
+    if reason:
+        rec["skipped"] = reason
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} SKIP: {reason}")
+        return rec
+    if shape.name == "long_500k":
+        cfg = long_decode_variant(cfg)
+    train = shape.kind == "train"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    k = _local_steps(cfg, shape)
+
+    # ---- 1. deployment program: scan + remat, full depth ----------------- #
+    mem_cfg = dataclasses.replace(
+        cfg, scan_layers=True, remat=train, scan_attn_chunks=True
+    )
+    t0 = time.time()
+    lowered = make_lowered(mem_cfg, shape, mesh, local_steps=k)
+    compiled = lowered.compile()
+    rec["compile_s"] = time.time() - t0
+    mem = _mem_record(compiled)
+    rec["memory"] = mem
+    rec["fits_hbm"] = bool(mem["peak_bytes"] <= HBM_PER_CHIP)
+    rec["local_steps"] = k
+    if verbose:
+        print(
+            f"[dryrun] {arch} x {shape_name} @ {mesh_name}: compile "
+            f"{rec['compile_s']:.1f}s peak/dev {mem['peak_bytes']/2**30:.2f} GiB "
+            f"fits={rec['fits_hbm']}"
+        )
+
+    # ---- 2. cost pair: unrolled 2p/4p, local_steps=1 (single-pod only) --- #
+    if roofline and not multi_pod:
+        period = len(layer_kinds(cfg))
+        G = cfg.num_layers // period
+        cost_cfg = dataclasses.replace(cfg, scan_layers=False, remat=train)
+        t1 = time.time()
+        c2 = _cost_record(make_lowered(_with_layers(cost_cfg, 2 * period),
+                                       shape, mesh, local_steps=1))
+        c4 = _cost_record(make_lowered(_with_layers(cost_cfg, 4 * period),
+                                       shape, mesh, local_steps=1))
+        rec["cost_compile_s"] = time.time() - t1
+
+        def total(key):
+            per_group = (c4[key] - c2[key]) / 2.0
+            return c2[key] + (G - 2) * per_group
+
+        per_dev_flops, per_dev_bytes = total("flops"), total("bytes")
+        coll_bytes = total("collective_bytes")
+        n_active = cfg.active_param_count()
+        tokens = shape.global_batch * (
+            shape.seq_len if shape.kind != "decode" else 1
+        )
+        mult = 3 if train else 1
+        model_flops = 2.0 * n_active * tokens * mult
+        roof = Roofline(
+            arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+            hlo_flops=per_dev_flops * chips,
+            hlo_bytes=per_dev_bytes * chips,
+            collective_bytes=coll_bytes,
+            model_flops=model_flops,
+        )
+        rec["roofline"] = roof.to_dict()
+        rec["cost_2p"] = c2
+        rec["cost_4p"] = c4
+        if verbose:
+            print(
+                f"         roofline: dominant={roof.dominant} "
+                f"C={roof.compute_s*1e3:.2f}ms M={roof.memory_s*1e3:.2f}ms "
+                f"X={roof.collective_s*1e3:.2f}ms useful={roof.useful_ratio:.2f} "
+                f"(cost compile {rec['cost_compile_s']:.1f}s)"
+            )
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-roofline", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results, failures = [], 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    results.append(
+                        lower_pair(arch, shape, multi_pod=mp,
+                                   roofline=not args.no_roofline)
+                    )
+                except Exception as e:  # noqa: BLE001
+                    failures += 1
+                    print(f"[dryrun] {arch} x {shape} @ "
+                          f"{'2x16x16' if mp else '16x16'} FAIL: "
+                          f"{type(e).__name__}: {e}")
+                    results.append(
+                        {"arch": arch, "shape": shape,
+                         "mesh": "2x16x16" if mp else "16x16",
+                         "error": f"{type(e).__name__}: {e}"}
+                    )
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"[dryrun] wrote {len(results)} records to {args.out}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,155 @@
+"""Name-based sharding rules: params / caches / batches → PartitionSpecs.
+
+Policy (DESIGN.md §5):
+* ``tp``   — attention heads, ffn hidden, experts and vocab shard on
+  ``model``; everything replicated over client axes (pod/data).
+* ``fsdp`` — additionally shards a second dim over ``data`` (archs too large
+  to replicate per FL client; their clients live on the pod axis).
+
+Every rule is divisibility-guarded: a dim that doesn't divide the mesh axis
+is silently replicated on that axis (e.g. 4 KV heads on a 16-way model axis).
+Stacked layer dims (scan-over-layers / encdec stacks) get a leading ``None``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+Tree = Any
+
+# parents whose "w" shards the OUTPUT dim on model (column parallel)
+_COL_PARENTS = {"wq", "wk", "wv", "in_xz", "in_bc", "in_dt", "gates", "gate", "up"}
+# parents whose "w" shards the INPUT dim on model (row parallel)
+_ROW_PARENTS = {"wo", "out", "down"}
+
+
+def _names(path) -> Tuple[str, ...]:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(f"[{k.idx}]")
+    return tuple(out)
+
+
+def _guard(spec: Tuple[Optional[str], ...], shape, mesh: Mesh):
+    """Drop axes that don't divide their dim; pad leading Nones to ndim."""
+    spec = (None,) * (len(shape) - len(spec)) + tuple(spec)
+    fixed = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if axes and dim % size == 0:
+            fixed.append(axes if len(axes) > 1 else axes[0])
+        else:
+            fixed.append(None)
+    return P(*fixed)
+
+
+def param_pspec(path, leaf, cfg: ModelConfig, mesh: Mesh) -> P:
+    names = _names(path)
+    last = names[-1]
+    parent = names[-2] if len(names) >= 2 else ""
+    fsdp = "data" if cfg.param_sharding == "fsdp" else None
+
+    if last == "emb":  # (V, d)
+        # V on model keeps logits model-sharded (a d-only sharding would
+        # leave (tokens, V) f32 logits replicated across the model axis).
+        return _guard(("model", fsdp), leaf.shape, mesh)
+    if last in ("gate", "up", "down") and leaf.ndim >= 3:  # moe (E, d|ff, ff|d)
+        return _guard(("model", fsdp, None), leaf.shape, mesh)
+    if last == "w":
+        if parent == "router":
+            return _guard((None, None), leaf.shape, mesh)
+        if parent in _COL_PARENTS:
+            return _guard((fsdp, "model"), leaf.shape, mesh)
+        if parent in _ROW_PARENTS:
+            return _guard(("model", fsdp), leaf.shape, mesh)
+        return _guard((None, None), leaf.shape, mesh)
+    if last == "b":
+        if parent in _COL_PARENTS:
+            return _guard(("model",), leaf.shape, mesh)
+        return _guard((None,), leaf.shape, mesh)
+    # norms, a_log, d_skip, scalars
+    return _guard((), leaf.shape, mesh)
+
+
+def param_shardings(params: Tree, cfg: ModelConfig, mesh: Mesh) -> Tree:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_pspec(path, leaf, cfg, mesh)),
+        params,
+    )
+
+
+# --------------------------------------------------------------------- #
+# caches (serving)
+# --------------------------------------------------------------------- #
+def cache_pspec(path, leaf, cfg: ModelConfig, mesh: Mesh) -> P:
+    names = _names(path)
+    last = names[-1]
+    if last in ("k", "v", "cross_k", "cross_v"):  # (B, W, Hkv, Dh)
+        # batch over data; KV heads over model when they divide it —
+        # decode's dynamic-update-slice writes along the seq dim, and a
+        # model-sharded seq dim forces the partitioner to all-gather the
+        # whole cache every step (§Perf hillclimb #2). Archs whose KV heads
+        # don't divide the axis fall back to seq sharding.
+        hkv = leaf.shape[-2]  # leaves may lead with a stacked layer dim
+        model = mesh.shape.get("model", 1)
+        if hkv % model == 0:
+            return _guard(("data", None, "model", None), leaf.shape, mesh)
+        return _guard(("data", "model", None, None), leaf.shape, mesh)
+    if last == "state":  # (B, H, N, P)
+        return _guard(("data", None, None, "model"), leaf.shape, mesh)
+    if last in ("c", "n", "m"):  # slstm (B, d)
+        return _guard(("data", "model"), leaf.shape, mesh)
+    if last == "pos" or last == "len":
+        return _guard((), leaf.shape, mesh)
+    return _guard((), leaf.shape, mesh)
+
+
+def cache_shardings(cache: Tree, cfg: ModelConfig, mesh: Mesh) -> Tree:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, cache_pspec(path, leaf, cfg, mesh)),
+        cache,
+    )
+
+
+# --------------------------------------------------------------------- #
+# batches
+# --------------------------------------------------------------------- #
+def batch_axes(cfg: ModelConfig, mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes the global token set is split over (flat MoE block dim)."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    if cfg.param_sharding == "fsdp" and "model" in mesh.axis_names:
+        # FSDP archs additionally split tokens over model (sequence
+        # parallelism: B over pod/data, S over model)
+        axes.append("model")
+    return tuple(axes)
+
+
+def batch_pspec(key: str, leaf, cfg: ModelConfig, mesh: Mesh) -> P:
+    # inputs shard over (pod, data) only; the embed-output activation pin
+    # (shard_ctx) redistributes to the compute layout
+    bd = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if key == "positions":  # (3, B, S)
+        return _guard((None, bd, None), leaf.shape, mesh)
+    # tokens (B, S), frames (B, F, d), patch_embeds (B, P, d), token (B, 1)
+    return _guard((bd,) + (None,) * (len(leaf.shape) - 1), leaf.shape, mesh)
+
+
+def batch_shardings(batch: Tree, cfg: ModelConfig, mesh: Mesh) -> Tree:
+    return {
+        k: NamedSharding(mesh, batch_pspec(k, v, cfg, mesh))
+        for k, v in batch.items()
+    }

@@ -1,0 +1,19 @@
+from repro.mgmt.plane import (
+    Agent,
+    APIServer,
+    Controller,
+    Deployer,
+    InprocDeployer,
+    JobState,
+    Notifier,
+)
+
+__all__ = [
+    "APIServer",
+    "Agent",
+    "Controller",
+    "Deployer",
+    "InprocDeployer",
+    "JobState",
+    "Notifier",
+]

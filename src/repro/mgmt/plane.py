@@ -1,0 +1,314 @@
+"""Management plane (§5): apiserver, controller, deployer, agent, notifier.
+
+The paper implements these in Golang over K8s/MongoDB. Here the same
+component split runs in-process: the controller owns job state and TAG
+expansion, deployers abstract resource orchestrators (an ``InprocDeployer``
+plays the role of the minikube cluster in fiab), agents wrap worker
+lifecycle, and the notifier pushes events. The full workflow of Fig. 7 —
+register → submit → expand → notify → deploy → run → report → revoke — is
+exercised end-to-end by the integration tests.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import enum
+import itertools
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.channels import ChannelManager, LinkModel
+from repro.core.expansion import JobSpec, WorkerConfig, expand
+from repro.core.registry import ComputeSpec, RegistryError, ResourceRegistry
+from repro.core.roles import Role, RoleContext
+from repro.core.runtime import resolve_program, static_membership
+from repro.core.tag import DatasetSpec
+
+
+class JobState(enum.Enum):
+    SUBMITTED = "submitted"
+    EXPANDED = "expanded"
+    DEPLOYING = "deploying"
+    RUNNING = "running"
+    COMPLETED = "completed"
+    FAILED = "failed"
+    TERMINATED = "terminated"
+
+
+@dataclasses.dataclass
+class Event:
+    kind: str  # "deploy" | "revoke" | "status"
+    job_id: str
+    payload: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+class Notifier:
+    """Push-based event channel from controller to deployers/agents."""
+
+    def __init__(self) -> None:
+        self._subs: Dict[str, List[Callable[[Event], None]]] = collections.defaultdict(list)
+        self._lock = threading.Lock()
+
+    def subscribe(self, kind: str, cb: Callable[[Event], None]) -> None:
+        with self._lock:
+            self._subs[kind].append(cb)
+
+    def publish(self, event: Event) -> None:
+        with self._lock:
+            subs = list(self._subs.get(event.kind, []))
+        for cb in subs:
+            cb(event)
+
+
+class Deployer:
+    """Integration interface for resource orchestrators (§5.1). Subclass and
+    implement ``create_instance``/``delete_instance`` to integrate K8s, Docker
+    Swarm, a TPU mesh launcher, etc."""
+
+    orchestrator = "abstract"
+
+    def __init__(self, compute: ComputeSpec):
+        self.compute = compute
+
+    def create_instance(self, worker: WorkerConfig, job: "JobRecord") -> "Agent":
+        raise NotImplementedError
+
+    def delete_instance(self, worker_id: str) -> None:
+        raise NotImplementedError
+
+
+class Agent:
+    """Thin per-worker client: fetches code/config, runs the worker as a
+    child task, reports status (sandbox boundary of §5.1)."""
+
+    def __init__(self, worker: WorkerConfig, job: "JobRecord", apiserver: "APIServer"):
+        self.worker = worker
+        self.job = job
+        self.apiserver = apiserver
+        self.status = "created"
+        self._thread: Optional[threading.Thread] = None
+        self.program: Optional[Role] = None
+        self.error: Optional[BaseException] = None
+
+    def fetch_task(self) -> Role:
+        """Step 8 of Fig. 7: retrieve code + task configuration by job id."""
+        rec = self.job
+        cls = rec.program_overrides.get(self.worker.role) or resolve_program(
+            self.worker.program
+        )
+        hp = dict(rec.spec.hyperparams)
+        hp.update(rec.per_worker_hyperparams.get(self.worker.worker_id, {}))
+        static = {
+            ch: rec.membership[(ch, group)]
+            for ch, group in self.worker.groups.items()
+        }
+        ctx = RoleContext(
+            self.worker, rec.spec.tag, rec.channels, hp, static_members=static
+        )
+        self.program = cls(ctx)
+        return self.program
+
+    def start(self) -> None:
+        prog = self.fetch_task()
+        prog.pre_run()
+        self.status = "joined"
+
+    def run(self) -> None:
+        assert self.program is not None
+
+        def _run() -> None:
+            self.status = "running"
+            try:
+                self.program.run()
+                self.status = "completed"
+            except BaseException as e:  # noqa: BLE001
+                self.error = e
+                self.status = "failed"
+            finally:
+                self.apiserver.report_worker_status(
+                    self.job.spec.job_id, self.worker.worker_id, self.status
+                )
+
+        self._thread = threading.Thread(target=_run, daemon=True)
+        self._thread.start()
+
+    def join(self, timeout: float) -> bool:
+        if self._thread is None:
+            return True
+        self._thread.join(timeout)
+        return not self._thread.is_alive()
+
+    def terminate(self) -> None:
+        # cooperative: set the work-done flag; chains exit at the next check
+        if self.program is not None:
+            self.program._work_done = True
+
+
+class InprocDeployer(Deployer):
+    """The fiab deployer: "containers" are threads in this process."""
+
+    orchestrator = "inproc"
+
+    def __init__(self, compute: ComputeSpec):
+        super().__init__(compute)
+        self.agents: Dict[str, Agent] = {}
+        self.apiserver: Optional["APIServer"] = None
+
+    def create_instance(self, worker: WorkerConfig, job: "JobRecord") -> Agent:
+        assert self.apiserver is not None
+        agent = Agent(worker, job, self.apiserver)
+        self.agents[worker.worker_id] = agent
+        return agent
+
+    def delete_instance(self, worker_id: str) -> None:
+        agent = self.agents.pop(worker_id, None)
+        if agent is not None:
+            agent.terminate()
+
+
+@dataclasses.dataclass
+class JobRecord:
+    spec: JobSpec
+    state: JobState = JobState.SUBMITTED
+    workers: List[WorkerConfig] = dataclasses.field(default_factory=list)
+    channels: Optional[ChannelManager] = None
+    membership: Dict[Tuple[str, str], List[str]] = dataclasses.field(default_factory=dict)
+    agents: Dict[str, Agent] = dataclasses.field(default_factory=dict)
+    worker_status: Dict[str, str] = dataclasses.field(default_factory=dict)
+    per_worker_hyperparams: Dict[str, Dict[str, Any]] = dataclasses.field(
+        default_factory=dict
+    )
+    program_overrides: Dict[str, type] = dataclasses.field(default_factory=dict)
+    link_models: Dict[Tuple[str, str], LinkModel] = dataclasses.field(
+        default_factory=dict
+    )
+
+
+class Controller:
+    """Core unit: state management, TAG expansion, deployment orchestration,
+    job monitoring (§5.1 "Controller")."""
+
+    def __init__(self, registry: ResourceRegistry, notifier: Notifier):
+        self.registry = registry
+        self.notifier = notifier
+        self.db: Dict[str, JobRecord] = {}  # the MongoDB stand-in
+        self.deployers: Dict[str, Deployer] = {}
+        notifier.subscribe("worker-status", self._on_worker_status)
+
+    # -------------------- compute registration ------------------------ #
+    def register_deployer(self, deployer: Deployer) -> None:
+        self.registry.register_compute(deployer.compute)
+        self.deployers[deployer.compute.compute_id] = deployer
+
+    # ------------------------- job lifecycle -------------------------- #
+    def submit(self, record: JobRecord) -> None:
+        self.db[record.spec.job_id] = record
+        record.workers = expand(record.spec, self.registry)
+        record.membership = static_membership(record.workers, record.spec.tag)
+        record.channels = ChannelManager(record.spec.tag.channels)
+        for (channel, worker), model in record.link_models.items():
+            record.channels.backend(channel).set_link(channel, worker, model)
+        record.state = JobState.EXPANDED
+        self.notifier.publish(
+            Event("deploy", record.spec.job_id, {"workers": record.workers})
+        )
+
+    def deploy(self, job_id: str) -> None:
+        record = self.db[job_id]
+        record.state = JobState.DEPLOYING
+        for w in record.workers:
+            deployer = self._deployer_for(w.compute_id)
+            agent = deployer.create_instance(w, record)
+            record.agents[w.worker_id] = agent
+        for agent in record.agents.values():
+            agent.start()  # fetch code/config + channel joins
+        for agent in record.agents.values():
+            agent.run()
+        record.state = JobState.RUNNING
+
+    def _deployer_for(self, compute_id: str) -> Deployer:
+        if compute_id in self.deployers:
+            return self.deployers[compute_id]
+        # realm-synthesized compute (library mode): fall back to any deployer
+        if self.deployers:
+            return next(iter(self.deployers.values()))
+        raise RegistryError(f"no deployer for compute {compute_id!r}")
+
+    def wait(self, job_id: str, timeout: float = 120.0) -> JobState:
+        record = self.db[job_id]
+        deadline = time.monotonic() + timeout
+        for agent in record.agents.values():
+            remaining = max(0.0, deadline - time.monotonic())
+            agent.join(remaining)
+        statuses = {a.status for a in record.agents.values()}
+        if statuses <= {"completed"}:
+            record.state = JobState.COMPLETED
+        elif "failed" in statuses:
+            record.state = JobState.FAILED
+        self.notifier.publish(Event("revoke", job_id, {}))
+        return record.state
+
+    def terminate(self, job_id: str) -> None:
+        record = self.db[job_id]
+        for agent in record.agents.values():
+            agent.terminate()
+        record.state = JobState.TERMINATED
+
+    def _on_worker_status(self, event: Event) -> None:
+        record = self.db.get(event.job_id)
+        if record is not None:
+            record.worker_status[event.payload["worker_id"]] = event.payload["status"]
+
+
+class APIServer:
+    """REST-API façade: the user/CLI entry point (§5.1 "APIserver")."""
+
+    def __init__(self, registry: Optional[ResourceRegistry] = None):
+        self.registry = registry or ResourceRegistry()
+        self.notifier = Notifier()
+        self.controller = Controller(self.registry, self.notifier)
+        self._job_counter = itertools.count()
+
+    # ------------------------- registration --------------------------- #
+    def register_compute(self, deployer: Deployer) -> None:
+        if isinstance(deployer, InprocDeployer):
+            deployer.apiserver = self
+        self.controller.register_deployer(deployer)
+
+    def register_dataset(self, spec: DatasetSpec) -> None:
+        self.registry.register_dataset(spec)
+
+    # ------------------------- job endpoints -------------------------- #
+    def create_job(
+        self,
+        spec: JobSpec,
+        per_worker_hyperparams: Optional[Dict[str, Dict[str, Any]]] = None,
+        program_overrides: Optional[Dict[str, type]] = None,
+        link_models: Optional[Dict[Tuple[str, str], LinkModel]] = None,
+    ) -> str:
+        record = JobRecord(
+            spec=spec,
+            per_worker_hyperparams=dict(per_worker_hyperparams or {}),
+            program_overrides=dict(program_overrides or {}),
+            link_models=dict(link_models or {}),
+        )
+        self.controller.submit(record)
+        return spec.job_id
+
+    def start_job(self, job_id: str) -> None:
+        self.controller.deploy(job_id)
+
+    def wait_job(self, job_id: str, timeout: float = 120.0) -> JobState:
+        return self.controller.wait(job_id, timeout)
+
+    def terminate_job(self, job_id: str) -> None:
+        self.controller.terminate(job_id)
+
+    def job(self, job_id: str) -> JobRecord:
+        return self.controller.db[job_id]
+
+    def report_worker_status(self, job_id: str, worker_id: str, status: str) -> None:
+        self.notifier.publish(
+            Event("worker-status", job_id, {"worker_id": worker_id, "status": status})
+        )

@@ -1,0 +1,190 @@
+"""GQA attention: chunked training/prefill form, single-token decode form.
+
+The training/prefill path iterates *unrolled* query chunks (a python loop,
+not ``lax.scan``) so that (a) peak memory is one chunk's score matrix —
+XLA's buffer assignment reuses the buffer across sequential chunks — and
+(b) every FLOP/collective is visible to ``cost_analysis`` (while-loop bodies
+are counted once; see DESIGN.md dry-run methodology). On TPU the same
+blocking is provided by the Pallas flash kernel (``repro.kernels``);
+``attn_impl="flash"`` switches to it.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_apply, dense_init
+
+Tree = Dict[str, jax.Array]
+
+NEG_INF = -1e30
+
+
+def attn_init(rng, cfg: ModelConfig, dtype) -> Tree:
+    kq, kk, kv, ko = jax.random.split(rng, 4)
+    return {
+        "wq": dense_init(kq, cfg.d_model, cfg.q_dim, dtype, bias=cfg.qkv_bias),
+        "wk": dense_init(kk, cfg.d_model, cfg.kv_dim, dtype, bias=cfg.qkv_bias),
+        "wv": dense_init(kv, cfg.d_model, cfg.kv_dim, dtype, bias=cfg.qkv_bias),
+        "wo": dense_init(ko, cfg.q_dim, cfg.d_model, dtype),
+    }
+
+
+def project_q(p: Tree, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    B, S, _ = x.shape
+    return dense_apply(p["wq"], x).reshape(B, S, cfg.num_heads, cfg.head_dim)
+
+
+def project_kv(p: Tree, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    B, S, _ = x.shape
+    k = dense_apply(p["wk"], x).reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = dense_apply(p["wv"], x).reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def _grouped_scores(qc: jax.Array, k: jax.Array) -> jax.Array:
+    """qc: (B, Cq, Hkv, G, Dh), k: (B, Skv, Hkv, Dh) -> (B, Hkv, G, Cq, Skv)."""
+    return jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qc, k, preferred_element_type=jnp.float32
+    )
+
+
+def _grouped_out(w: jax.Array, v: jax.Array) -> jax.Array:
+    """w: (B, Hkv, G, Cq, Skv), v: (B, Skv, Hkv, Dh) -> (B, Cq, Hkv, G, Dh)."""
+    return jnp.einsum(
+        "bhgqk,bkhd->bqhgd", w, v, preferred_element_type=jnp.float32
+    )
+
+
+def _attend_chunk(
+    qc: jax.Array,  # (B, cq, Hkv, G, Dh)
+    k: jax.Array,
+    v: jax.Array,
+    qpos: jax.Array,  # (cq,)
+    *,
+    causal: bool,
+    window: int,
+    scale: float,
+) -> jax.Array:
+    B, cq, Hkv, G, Dh = qc.shape
+    Skv = k.shape[1]
+    kpos = jnp.arange(Skv)
+    scores = _grouped_scores(qc, k) * scale  # f32 (B,Hkv,G,cq,Skv)
+    # additive f32 bias instead of a boolean where-mask: the (cq, Skv) bias
+    # broadcasts into the softmax as a fused add — a pred mask materializes
+    # at full (B, H, cq, Skv) in XLA CPU buffer assignment (hoisted out of
+    # the chunk scan), which wrecks the dry-run memory proof
+    bias = jnp.zeros((cq, Skv), jnp.float32)
+    if causal:
+        bias += jnp.where(kpos[None, :] <= qpos[:, None], 0.0, NEG_INF)
+    if window:
+        bias += jnp.where(kpos[None, :] > qpos[:, None] - window, 0.0, NEG_INF)
+    scores = scores + bias[None, None, None]
+    w = jax.nn.softmax(scores, axis=-1)
+    # PV matmul reads V in its own dtype (f32 accumulate via the einsum's
+    # preferred_element_type); a f32 `w` would upcast-materialize V
+    out = _grouped_out(w.astype(v.dtype), v)
+    return out.reshape(B, cq, Hkv * G, Dh)
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_chunk: int = 1024,
+    q_offset: int = 0,
+    use_scan: bool = False,
+) -> jax.Array:
+    """Masked attention, blocked over query chunks.
+
+    q: (B, Sq, H, Dh); k, v: (B, Skv, Hkv, Dh). Returns (B, Sq, H, Dh).
+    ``window > 0`` restricts attention to the last ``window`` positions
+    (sliding-window attention — the sub-quadratic long-context variant).
+    ``use_scan`` drives the chunks with ``lax.scan`` (one live score buffer —
+    the deployment path) instead of unrolling (exact HLO cost accounting —
+    the dry-run cost path).
+    """
+    B, Sq, H, Dh = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = Dh**-0.5
+    chunk = min(q_chunk, Sq)
+
+    if use_scan and Sq % chunk == 0 and Sq > chunk:
+        nc = Sq // chunk
+        qs = jnp.moveaxis(
+            q.reshape(B, nc, chunk, Hkv, G, Dh), 1, 0
+        )  # (nc, B, c, Hkv, G, Dh)
+
+        # jax.checkpoint: recompute scores/softmax in the backward (flash-
+        # style) instead of stashing (nc, B, H, c, Skv) f32 residuals.
+        @jax.checkpoint
+        def chunk_fn(qc, lo):
+            qpos = lo + jnp.arange(chunk)
+            return _attend_chunk(
+                qc, k, v, qpos, causal=causal, window=window, scale=scale
+            ).astype(q.dtype)
+
+        def body(lo, qc):
+            # the chunk offset is loop-CARRIED (not an xs constant) so the
+            # mask/bias computation cannot be hoisted out of the loop and
+            # materialized for every chunk at once
+            return lo + chunk, chunk_fn(qc, lo)
+
+        _, outs = jax.lax.scan(
+            body, jnp.int32(q_offset), qs
+        )  # (nc, B, c, H, Dh)
+        return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, Dh)
+
+    n_chunks = (Sq + chunk - 1) // chunk
+    outs = []
+    for i in range(n_chunks):
+        lo = i * chunk
+        cq = min(chunk, Sq - lo)
+        qc = q[:, lo : lo + cq].reshape(B, cq, Hkv, G, Dh)
+        qpos = q_offset + lo + jnp.arange(cq)
+        out = _attend_chunk(
+            qc, k, v, qpos, causal=causal, window=window, scale=scale
+        )
+        outs.append(out.astype(q.dtype))
+    return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    *,
+    cache_len: jax.Array,
+    window: int = 0,
+) -> jax.Array:
+    """One-token attention against a KV cache.
+
+    q: (B, 1, H, Dh); caches: (B, S, Hkv, Dh); cache_len: () or (B,) — number
+    of valid cache positions (the new token's k/v already written).
+    """
+    B, _, H, Dh = q.shape
+    Skv, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    scale = Dh**-0.5
+    qc = q.reshape(B, 1, Hkv, G, Dh)
+    scores = _grouped_scores(qc, k_cache) * scale  # (B,Hkv,G,1,Skv)
+    kpos = jnp.arange(Skv)
+    valid = kpos[None, :] < jnp.reshape(cache_len, (-1, 1))  # (B or 1, Skv)
+    if window:
+        valid &= kpos[None, :] >= jnp.reshape(cache_len, (-1, 1)) - window
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = _grouped_out(w, v_cache)
+    return out.reshape(B, 1, H, Dh).astype(q.dtype)
+
+
+def attn_output(p: Tree, out: jax.Array, cfg: ModelConfig) -> jax.Array:
+    B, S = out.shape[:2]
+    return dense_apply(p["wo"], out.reshape(B, S, cfg.q_dim))

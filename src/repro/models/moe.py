@@ -1,0 +1,252 @@
+"""Mixture-of-Experts layer: top-k routing with capacity, sort-based dispatch.
+
+TPU adaptation notes (DESIGN.md): instead of the N x E x C one-hot dispatch
+einsum (whose dispatch tensor is quadratic in experts x capacity and blows
+VMEM/HBM for 64k-token shards), tokens are *sorted by expert id* and routed
+with scatter/gather — O(N·k·d) data movement, MXU-dense expert matmuls of
+static shape (E, C, d). Expert weights lead with the expert dim so the
+``model`` mesh axis shards them (expert parallelism); XLA inserts the
+all-to-all at the scatter/gather boundary.
+
+Router aux loss is the standard load-balancing loss (Shazeer/Switch):
+``E * sum_e f_e * P_e`` with f the routed-token fraction and P the mean
+router probability.
+"""
+from __future__ import annotations
+
+import functools
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, mlp_init, mlp_apply
+
+Tree = Dict[str, jax.Array]
+
+# Sharding profile: SPMD propagation cannot see through the scatter
+# dispatch, so the launcher pins the expert-parallel layout explicitly
+# (see repro.models.shard_ctx; re-exported here for the launcher).
+from repro.models.shard_ctx import (  # noqa: E402
+    constrain as _constrain,
+    get_profile as _get_profile,
+    shard_profile,
+)
+
+
+def moe_init(rng, cfg: ModelConfig, dtype) -> Tree:
+    kr, ke, ks = jax.random.split(rng, 3)
+    d, ff, E = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    scale = d**-0.5
+    p: Tree = {
+        "router": dense_init(kr, d, E, jnp.float32),  # router math stays f32
+        # stacked expert weights: (E, d, ff) x2 + (E, ff, d)
+        "gate": jax.random.normal(ke, (E, d, ff), jnp.float32).astype(dtype) * scale,
+        "up": jax.random.normal(
+            jax.random.fold_in(ke, 1), (E, d, ff), jnp.float32
+        ).astype(dtype)
+        * scale,
+        "down": jax.random.normal(
+            jax.random.fold_in(ke, 2), (E, ff, d), jnp.float32
+        ).astype(dtype)
+        * (ff**-0.5),
+    }
+    if cfg.shared_expert:
+        p["shared"] = mlp_init(ks, d, cfg.d_ff, dtype)
+    return p
+
+
+ROUTE_BLOCK = 2048  # tokens per routing block (capacity enforced per block)
+
+
+def _capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    cap = int(cfg.capacity_factor * n_tokens * cfg.experts_per_token / cfg.num_experts)
+    # MXU alignment: round the expert batch up to a lane multiple
+    return max(8, -(-cap // 8) * 8)
+
+
+def router_probs(p: Tree, x: jax.Array) -> jax.Array:
+    """x: (..., d) -> (..., E) softmax router probabilities (f32)."""
+    logits = x.astype(jnp.float32) @ p["router"]["w"]
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def _route_block(p: Tree, xf: jax.Array, cfg: ModelConfig, C: int):
+    """Route one token block. xf: (N, d) -> (buf (E,C,d), combine metadata).
+
+    Block-LOCAL by construction: under auto-SPMD the vmapped caller shards
+    the block dim across (pod, data, model), so the sort, the scatter and the
+    (E, C, d) packed buffer all stay device-local — no global sort, no
+    E x C_global buffer (DESIGN.md: TPU adaptation of the GPU ragged
+    dispatch).
+    """
+    N, d = xf.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+
+    probs = router_probs(p, xf)  # (N, E) f32
+    top_w, top_e = jax.lax.top_k(probs, k)  # (N, k)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, axis=-1, keepdims=True), 1e-9)
+
+    # one-hot slot->expert (partitioner-friendly: no sort / searchsorted /
+    # data-dependent gathers, which force SPMD "involuntary full remat")
+    oh = jax.nn.one_hot(top_e, E, dtype=jnp.int32)  # (N, k, E)
+    ohf = oh.reshape(N * k, E)
+
+    # load-balancing aux loss (per block)
+    frac = jnp.mean(jnp.sum(oh, axis=1).astype(jnp.float32), axis=0) / k
+    aux = E * jnp.sum(frac * jnp.mean(probs, axis=0))
+
+    # capacity assignment: rank of each slot within its expert = running
+    # count of earlier same-expert slots (cumsum of the one-hot)
+    ids = top_e.reshape(-1)  # (M,)
+    cum = jnp.cumsum(ohf, axis=0)  # (M, E)
+    rank = (
+        jnp.take_along_axis(cum, ids[:, None], axis=1)[:, 0] - 1
+    ).astype(jnp.int32)
+    keep = rank < C
+    safe_rank = jnp.where(keep, rank, 0)
+    safe_ids = jnp.where(keep, ids, 0)
+
+    buf = jnp.zeros((E, C, d), xf.dtype)
+    xf_rep = jnp.repeat(xf, k, axis=0)  # (M, d) — static slot->token map
+    contrib = jnp.where(keep[:, None], xf_rep, 0).astype(xf.dtype)
+    buf = buf.at[safe_ids, safe_rank].add(contrib)
+    w_flat = (top_w.reshape(-1) * keep).astype(jnp.float32)
+    return buf, (safe_ids, safe_rank, w_flat, aux)
+
+
+def _combine_block(out: jax.Array, meta, N: int, dtype):
+    safe_ids, safe_rank, w_flat, _ = meta
+    k = w_flat.shape[0] // N
+    gathered = out[safe_ids, safe_rank]  # (M, d) f32
+    y = jnp.einsum(
+        "nkd,nk->nd",
+        gathered.reshape(N, k, -1),
+        w_flat.reshape(N, k),
+    )
+    return y.astype(dtype)
+
+
+def _pin_ep(t: jax.Array, ep_lead) -> jax.Array:
+    if ep_lead is None:
+        return t
+    return _constrain(t, tuple(ep_lead) + (None,) * (t.ndim - len(ep_lead)))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _expert_ffn(buf, gate, up, down, ep_lead):
+    """Expert FFN in the EP layout, with a hand-written VJP.
+
+    AD's default weight-gradient einsums transpose the (nb, E, C, d) buffer
+    into layouts the SPMD partitioner can only realize by full replication
+    (observed: 160 GiB f32 all-gathers in the dry-run). The custom VJP
+    writes each gradient contraction in the layout-preserving order and pins
+    the EP sharding on every operand, so weight grads are local partials +
+    an all-reduce over the block axis.
+    """
+    g = jnp.einsum("necd,edf->necf", buf, gate,
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("necd,edf->necf", buf, up,
+                   preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(buf.dtype)
+    return jnp.einsum("necf,efd->necd", h, down,
+                      preferred_element_type=jnp.float32).astype(buf.dtype)
+
+
+def _expert_ffn_fwd(buf, gate, up, down, ep_lead):
+    return _expert_ffn(buf, gate, up, down, ep_lead), (buf, gate, up, down)
+
+
+def _expert_ffn_bwd(ep_lead, res, gbar):
+    buf, gate, up, down = res
+    gbar = _pin_ep(gbar.astype(jnp.float32), ep_lead)
+    # recompute activations (checkpoint-style: nothing stashed but inputs)
+    g = jnp.einsum("necd,edf->necf", buf, gate,
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("necd,edf->necf", buf, up,
+                   preferred_element_type=jnp.float32)
+    sg = jax.nn.sigmoid(g)
+    silu_g = g * sg
+    h = silu_g * u
+    # d_down[e,f,d] = sum_{n,c} h * gbar   (partial over local blocks + psum)
+    d_down = jnp.einsum("necf,necd->efd", h, gbar,
+                        preferred_element_type=jnp.float32)
+    d_h = jnp.einsum("necd,efd->necf", gbar, down.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    d_u = d_h * silu_g
+    d_g = d_h * u * (sg + silu_g * (1.0 - sg))
+    d_gate = jnp.einsum("necd,necf->edf", buf, d_g,
+                        preferred_element_type=jnp.float32)
+    d_up = jnp.einsum("necd,necf->edf", buf, d_u,
+                      preferred_element_type=jnp.float32)
+    d_buf = jnp.einsum("necf,edf->necd", d_g, gate.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+    d_buf = d_buf + jnp.einsum("necf,edf->necd", d_u, up.astype(jnp.float32),
+                               preferred_element_type=jnp.float32)
+    d_buf = _pin_ep(d_buf, ep_lead).astype(buf.dtype)
+    return (
+        d_buf,
+        d_gate.astype(gate.dtype),
+        d_up.astype(up.dtype),
+        d_down.astype(down.dtype),
+    )
+
+
+_expert_ffn.defvjp(_expert_ffn_fwd, _expert_ffn_bwd)
+
+
+def moe_apply(p: Tree, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y: (B, S, d), aux_loss: scalar f32)."""
+    B, S, d = x.shape
+    N = B * S
+    E, k = cfg.num_experts, cfg.experts_per_token
+    prof = _get_profile()
+    min_blocks = prof["min_blocks"] if prof else 1
+    # block count must be a multiple of the devices the block dim shards over
+    if N % min_blocks == 0 and N // min_blocks >= 8:
+        nb = min_blocks * max(1, N // (ROUTE_BLOCK * min_blocks))
+    else:
+        nb = max(1, N // ROUTE_BLOCK)
+    while N % nb:
+        nb -= 1
+    block = N // nb
+    C = _capacity(block, cfg)
+    xb = x.reshape(nb, block, d)
+
+    buf, meta = jax.vmap(
+        lambda xf: _route_block(p, xf, cfg, C)
+    )(xb)  # buf: (nb, E, C, d)
+
+    # expert FFN — dense einsums; E shards on `model` (expert parallel), the
+    # block dim shards on the batch axes. The dispatch->EP reshard (blocks
+    # stay on their devices, experts move to theirs) is the all-to-all of a
+    # classic EP implementation, made explicit for the SPMD partitioner.
+    prof = _get_profile()
+    if prof is not None:
+        ba, ep = prof["batch"], prof["expert"]
+        # 1. pin the scatter output to the dispatch layout (blocks stay put);
+        #    without this the partitioner replicates through the scatter
+        buf = _constrain(buf, (ba or None, None, None, None))
+        # 2. explicit reshard to the expert-parallel layout (the EP
+        #    all-to-all): blocks give up the expert axis, experts localize
+        nb_axes = tuple(a for a in ba if a != ep) or None
+        buf = _constrain(buf, (nb_axes, ep, None, None))
+    ep_lead = None
+    if prof is not None:
+        ep_lead = (nb_axes, prof["expert"])
+    out = _expert_ffn(buf, p["gate"], p["up"], p["down"], ep_lead)
+    if prof is not None:
+        out = _constrain(out, (ba or None, None, None, None))
+
+    y = jax.vmap(
+        lambda o, m: _combine_block(o, m, block, x.dtype)
+    )(out, meta)
+    y = y.reshape(B, S, d)
+    aux = jnp.mean(meta[3])
+
+    if cfg.shared_expert:
+        y = y + mlp_apply(p["shared"], x, cfg.activation)
+    return y, aux

@@ -1,0 +1,165 @@
+"""Chunked linear recurrences: SSD (Mamba-2-style selective SSM) and mLSTM.
+
+Both are linear state-space recurrences with scalar-per-head decay:
+
+    S_t = a_t * S_{t-1} + b_t * k_t v_t^T          (state: N x P per head)
+    y_t = q_t^T S_t
+
+Mamba's selective scan maps to (a_t = exp(A * dt_t), b_t = dt_t) — the SSD
+form of Mamba-2, which is the TPU-idiomatic adaptation of the GPU selective
+scan (DESIGN.md: hardware adaptation). mLSTM maps to (a_t = forget gate,
+b_t = input gate) with a normalizer row appended to v.
+
+The *chunked* formulation keeps the FLOP-heavy intra-chunk work as plain
+batched matmuls (visible to cost_analysis, MXU-friendly) and carries only a
+tiny per-chunk state summary through an associative scan.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    log_decay: jax.Array,
+    gate: jax.Array,
+    chunk: int = 256,
+    initial_state: jax.Array | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked linear recurrence.
+
+    q, k: (B, S, H, N); v: (B, S, H, P); log_decay, gate: (B, S, H).
+    Returns (y: (B, S, H, P), final_state: (B, H, N, P)).
+    """
+    B, S, H, N = q.shape
+    P = v.shape[-1]
+    c = min(chunk, S)
+    assert S % c == 0, f"seq {S} not divisible by chunk {c}"
+    nc = S // c
+
+    qf = q.astype(jnp.float32).reshape(B, nc, c, H, N)
+    kf = k.astype(jnp.float32).reshape(B, nc, c, H, N)
+    vf = v.astype(jnp.float32).reshape(B, nc, c, H, P)
+    ld = log_decay.astype(jnp.float32).reshape(B, nc, c, H)
+    b = gate.astype(jnp.float32).reshape(B, nc, c, H)
+
+    L = jnp.cumsum(ld, axis=2)  # inclusive within-chunk log decay (B,nc,c,H)
+    Ltot = L[:, :, -1, :]  # (B,nc,H)
+
+    # ---- intra-chunk (quadratic in c, all dense matmuls) -------------- #
+    scores = jnp.einsum("bnihd,bnjhd->bnhij", qf, kf)  # (B,nc,H,c,c)
+    ii = jnp.arange(c)
+    causal = ii[:, None] >= ii[None, :]
+    # decay factor exp(L_i - L_j) * b_j, masked to j <= i
+    dmat = jnp.exp(
+        jnp.clip(L[:, :, :, None, :] - L[:, :, None, :, :], -60.0, 60.0)
+    )  # (B,nc,c_i,c_j,H) -> transpose
+    dmat = jnp.moveaxis(dmat, -1, 2)  # (B,nc,H,c_i,c_j)
+    M = scores * dmat * jnp.moveaxis(b, 2, -1)[:, :, :, None, :]  # b_j on j axis
+    M = jnp.where(causal[None, None, None], M, 0.0)
+    y_intra = jnp.einsum("bnhij,bnjhp->bnihp", M, vf)
+
+    # ---- chunk summaries ---------------------------------------------- #
+    # T_j = exp(Ltot - L_j) * b_j : decay from step j to chunk end
+    T = jnp.exp(jnp.clip(Ltot[:, :, None, :] - L, -60.0, 60.0)) * b  # (B,nc,c,H)
+    summary = jnp.einsum("bnjhd,bnjh,bnjhp->bnhdp", kf, T, vf)  # (B,nc,H,N,P)
+
+    # ---- inter-chunk associative scan ---------------------------------- #
+    pdecay = jnp.exp(jnp.clip(Ltot, -60.0, 60.0))  # (B,nc,H) total chunk decay
+
+    def combine(x, y_):
+        p1, s1 = x
+        p2, s2 = y_
+        return p1 * p2, s1 * p2[..., None, None] + s2
+
+    p_scan, s_scan = jax.lax.associative_scan(
+        combine, (pdecay, summary), axis=1
+    )  # inclusive: state at END of each chunk
+
+    # state at END of chunk n (with external S0 folded through the decays):
+    #   state_end[n] = s_scan[n] + S0 * p_scan[n]
+    if initial_state is not None:
+        s0 = initial_state[:, None].astype(jnp.float32)  # (B,1,H,N,P)
+        state_end = s_scan + s0 * p_scan[..., None, None]
+        first = s0
+    else:
+        state_end = s_scan
+        first = jnp.zeros((B, 1, H, N, P), jnp.float32)
+    # initial state for chunk n = state at end of chunk n-1
+    init_states = (
+        jnp.concatenate([first, state_end[:, :-1]], axis=1) if nc > 1 else first
+    )
+
+    # ---- inter-chunk contribution -------------------------------------- #
+    qdec = qf * jnp.exp(jnp.clip(L, -60.0, 60.0))[..., None]  # (B,nc,c,H,N)
+    y_inter = jnp.einsum("bnihd,bnhdp->bnihp", qdec, init_states)
+
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    final = state_end[:, -1]
+    return y.astype(v.dtype), final
+
+
+def ssd_decode_step(
+    state: jax.Array,
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    log_decay: jax.Array,
+    gate: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """Single recurrence step.
+
+    state: (B, H, N, P); q, k: (B, H, N); v: (B, H, P);
+    log_decay, gate: (B, H). Returns (y: (B, H, P), new_state).
+    """
+    a = jnp.exp(jnp.clip(log_decay.astype(jnp.float32), -60.0, 60.0))
+    sf = state.astype(jnp.float32)
+    new = a[..., None, None] * sf + gate.astype(jnp.float32)[..., None, None] * (
+        k.astype(jnp.float32)[..., :, None] * v.astype(jnp.float32)[..., None, :]
+    )
+    y = jnp.einsum("bhd,bhdp->bhp", q.astype(jnp.float32), new)
+    return y.astype(v.dtype), new.astype(state.dtype)
+
+
+# --------------------------------------------------------------------- #
+# sLSTM: scalar-memory recurrence with exponential gating (xLSTM).
+# Elementwise state, sequential by nature -> lax.scan over the sequence.
+# (Input-driven gates; recurrent gate weights omitted — DESIGN.md notes.)
+# --------------------------------------------------------------------- #
+def slstm_scan(
+    i_gate: jax.Array,
+    f_gate: jax.Array,
+    z: jax.Array,
+    o_gate: jax.Array,
+    initial: Tuple[jax.Array, jax.Array, jax.Array] | None = None,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array, jax.Array]]:
+    """All inputs (B, S, D) pre-activations. Returns (h: (B,S,D), states).
+
+    Stabilized exponential gating: m_t = max(f~ + m_{t-1}, i~);
+    c_t = exp(f~ + m_{t-1} - m_t) c_{t-1} + exp(i~ - m_t) z_t; analogous n_t.
+    """
+    B, S, D = z.shape
+
+    def step(carry, xs):
+        c, n, m = carry
+        it, ft, zt, ot = xs
+        log_f = -jax.nn.softplus(-ft)  # log sigmoid(f)
+        m_new = jnp.maximum(log_f + m, it)
+        c_new = jnp.exp(log_f + m - m_new) * c + jnp.exp(it - m_new) * jnp.tanh(zt)
+        n_new = jnp.exp(log_f + m - m_new) * n + jnp.exp(it - m_new)
+        h = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, m_new), h
+
+    if initial is None:
+        zeros = jnp.zeros((B, D), jnp.float32)
+        initial = (zeros, zeros, jnp.full((B, D), -1e30, jnp.float32))
+    xs = tuple(
+        jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (i_gate, f_gate, z, o_gate)
+    )
+    carry, hs = jax.lax.scan(step, initial, xs)
+    return jnp.moveaxis(hs, 0, 1).astype(z.dtype), carry

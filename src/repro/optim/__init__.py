@@ -1,0 +1,12 @@
+from repro.optim.optimizers import Optimizer, adamw, sgd, get_optimizer
+from repro.optim.schedules import constant, cosine_decay, linear_warmup_cosine
+
+__all__ = [
+    "Optimizer",
+    "adamw",
+    "sgd",
+    "get_optimizer",
+    "constant",
+    "cosine_decay",
+    "linear_warmup_cosine",
+]

@@ -1,0 +1,96 @@
+"""Local (client-side) optimizers, optax-style but self-contained.
+
+An ``Optimizer`` is an (init, update) pair over pytrees. Server-side FL
+optimizers live in ``repro.fl.strategies`` — the split mirrors the paper's
+role separation (trainer role owns the local optimizer; aggregator roles own
+the server strategy).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Tree], Tree]
+    update: Callable[[Tree, Tree, Tree], Tuple[Tree, Tree]]  # (grads, state, params)
+
+
+def _lr_at(lr: Union[float, Schedule], step: jax.Array) -> jax.Array:
+    return lr(step) if callable(lr) else jnp.float32(lr)
+
+
+def sgd(lr: Union[float, Schedule] = 1e-2, momentum: float = 0.0) -> Optimizer:
+    def init(params: Tree) -> Tree:
+        mom = (
+            jax.tree_util.tree_map(jnp.zeros_like, params) if momentum else None
+        )
+        return {"step": jnp.zeros((), jnp.int32), "mom": mom}
+
+    def update(grads: Tree, state: Tree, params: Tree) -> Tuple[Tree, Tree]:
+        step = state["step"]
+        lr_t = _lr_at(lr, step)
+        if momentum:
+            mom = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g.astype(m.dtype), state["mom"], grads
+            )
+            upd = jax.tree_util.tree_map(lambda m: (-lr_t * m), mom)
+            return upd, {"step": step + 1, "mom": mom}
+        upd = jax.tree_util.tree_map(lambda g: -lr_t * g, grads)
+        return upd, {"step": step + 1, "mom": None}
+
+    return Optimizer(init, update)
+
+
+def adamw(
+    lr: Union[float, Schedule] = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Optimizer:
+    def init(params: Tree) -> Tree:
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "v": jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        }
+
+    def update(grads: Tree, state: Tree, params: Tree) -> Tuple[Tree, Tree]:
+        step = state["step"] + 1
+        lr_t = _lr_at(lr, step)
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32), state["m"], grads
+        )
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"],
+            grads,
+        )
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        upd = jax.tree_util.tree_map(
+            lambda p, m_, v_: (
+                -lr_t * ((m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps) + weight_decay * p.astype(jnp.float32))
+            ).astype(p.dtype),
+            params,
+            m,
+            v,
+        )
+        return upd, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params: Tree, updates: Tree) -> Tree:
+    return jax.tree_util.tree_map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def get_optimizer(name: str, **kwargs: Any) -> Optimizer:
+    return {"sgd": sgd, "adamw": adamw}[name](**kwargs)

@@ -1,0 +1,31 @@
+"""Learning-rate schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    def fn(step: jax.Array) -> jax.Array:
+        return jnp.float32(value)
+
+    return fn
+
+
+def cosine_decay(peak: float, total_steps: int, floor: float = 0.0):
+    def fn(step: jax.Array) -> jax.Array:
+        frac = jnp.clip(step.astype(jnp.float32) / max(1, total_steps), 0.0, 1.0)
+        return floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * frac))
+
+    return fn
+
+
+def linear_warmup_cosine(peak: float, warmup_steps: int, total_steps: int, floor: float = 0.0):
+    cos = cosine_decay(peak, max(1, total_steps - warmup_steps), floor)
+
+    def fn(step: jax.Array) -> jax.Array:
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(1, warmup_steps)
+        return jnp.where(s < warmup_steps, warm, cos(step - warmup_steps))
+
+    return fn

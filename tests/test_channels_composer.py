@@ -1,0 +1,167 @@
+"""Channel API (Table 2), backends, and the tasklet composer (Table 1)."""
+import pytest
+
+from repro.core.channels import (
+    ChannelManager,
+    InprocBackend,
+    LinkModel,
+    payload_bytes,
+)
+from repro.core.composer import (
+    Chain,
+    CloneComposer,
+    Composer,
+    ComposerError,
+    Loop,
+    Tasklet,
+)
+from repro.core.tag import Channel as ChannelSpec, FuncTags
+
+import numpy as np
+
+
+def _spec(name="ch", backend="inproc", wire="f32", pair=("a", "b")):
+    return ChannelSpec(name=name, pair=pair, backend=backend, wire_dtype=wire)
+
+
+class TestChannelAPI:
+    def test_send_recv(self):
+        mgr = ChannelManager([_spec()])
+        ea = mgr.end("ch", "default", "a-0")
+        eb = mgr.end("ch", "default", "b-0")
+        ea.send("b-0", {"x": 1})
+        assert eb.recv("a-0") == {"x": 1}
+
+    def test_ends_filters_peer_role(self):
+        mgr = ChannelManager([_spec()])
+        ea = mgr.end("ch", "default", "a-0")
+        mgr.end("ch", "default", "a-1")
+        eb = mgr.end("ch", "default", "b-0")
+        assert ea.ends() == ["b-0"]
+        assert sorted(eb.ends()) == ["a-0", "a-1"]
+
+    def test_broadcast_and_recv_fifo(self):
+        mgr = ChannelManager([_spec()])
+        eb = mgr.end("ch", "default", "b-0")
+        eas = [mgr.end("ch", "default", f"a-{i}") for i in range(3)]
+        for e in eas:
+            e.send("b-0", e.me)
+        got = dict(eb.recv_fifo(eb.ends()))
+        assert got == {"a-0": "a-0", "a-1": "a-1", "a-2": "a-2"}
+        eb.broadcast("hi")
+        assert all(e.recv("b-0") == "hi" for e in eas)
+
+    def test_peek_nonblocking(self):
+        mgr = ChannelManager([_spec()])
+        ea = mgr.end("ch", "default", "a-0")
+        eb = mgr.end("ch", "default", "b-0")
+        assert eb.peek("a-0") is None
+        ea.send("b-0", 42)
+        assert eb.peek("a-0") == 42
+        assert eb.recv("a-0") == 42
+
+    def test_groups_isolate(self):
+        spec = ChannelSpec(name="ch", pair=("a", "b"), group_by=("g1", "g2"))
+        mgr = ChannelManager([spec])
+        a1 = mgr.end("ch", "g1", "a-0")
+        b1 = mgr.end("ch", "g1", "b-0")
+        mgr.end("ch", "g2", "b-1")
+        assert a1.ends() == ["b-0"]  # b-1 is in g2
+
+    def test_unknown_backend_rejected(self):
+        with pytest.raises(KeyError):
+            ChannelManager([_spec(backend="smoke-signals")])
+
+
+class TestBandwidthEmulation:
+    def test_payload_bytes_wire_dtype(self):
+        p = {"w": np.zeros((10, 10), np.float32)}
+        assert payload_bytes(p, "f32") == 400
+        assert payload_bytes(p, "bf16") == 200
+        assert payload_bytes(p, "int8") == 100
+
+    def test_link_model_transfer_time(self):
+        lm = LinkModel(bandwidth=100.0, latency=1.0)
+        assert lm.transfer_time(200) == pytest.approx(3.0)
+
+    def test_slow_link_advances_clock(self):
+        be = InprocBackend()
+        be.set_link("ch", "a-0", LinkModel(bandwidth=10.0))  # 10 B/s
+        be.join("ch", "g", "a-0")
+        be.join("ch", "g", "b-0")
+        be.send("ch", "g", "a-0", "b-0", np.zeros(25, np.float32))  # 100 B
+        assert be.now("a-0") == pytest.approx(10.0)
+
+    def test_mqtt_broker_serializes(self):
+        be = InprocBackend(shared_broker=True)
+        be.set_link("ch", "a-0", LinkModel(bandwidth=10.0))
+        be.set_link("ch", "a-1", LinkModel(bandwidth=10.0))
+        for w in ("a-0", "a-1", "b-0"):
+            be.join("ch", "g", w)
+        be.send("ch", "g", "a-0", "b-0", np.zeros(25, np.float32))
+        be.send("ch", "g", "a-1", "b-0", np.zeros(25, np.float32))
+        # second transfer waits for the broker: arrival 20, not 10
+        assert be.now("a-1") == pytest.approx(20.0)
+
+
+class TestComposer:
+    def _chain(self, log):
+        with Composer() as comp:
+            t1 = Tasklet("one", lambda: log.append(1))
+            t2 = Tasklet("two", lambda: log.append(2))
+            t3 = Tasklet("three", lambda: log.append(3))
+            t1 >> t2 >> t3
+        return comp
+
+    def test_sequential_execution(self):
+        log = []
+        self._chain(log).run()
+        assert log == [1, 2, 3]
+
+    def test_loop_until(self):
+        log = []
+        with Composer() as comp:
+            t = Tasklet("tick", lambda: log.append(len(log)))
+            loop = Loop(loop_check_fn=lambda: len(log) >= 4)
+            Tasklet("pre", lambda: None) >> loop(t)
+        comp.run()
+        assert log == [0, 1, 2, 3]
+
+    def test_insert_before_after(self):
+        log = []
+        comp = self._chain(log)
+        comp.get_tasklet("two").insert_before(Tasklet("x", lambda: log.append("x")))
+        comp.get_tasklet("two").insert_after(Tasklet("y", lambda: log.append("y")))
+        comp.run()
+        assert log == [1, "x", 2, "y", 3]
+
+    def test_replace_and_remove(self):
+        log = []
+        comp = self._chain(log)
+        comp.get_tasklet("two").replace_with(Tasklet("z", lambda: log.append("z")))
+        comp.get_tasklet("three").remove()
+        comp.run()
+        assert log == [1, "z"]
+
+    def test_edit_inside_loop_body(self):
+        log = []
+        with Composer() as comp:
+            t = Tasklet("body", lambda: log.append("b"))
+            loop = Loop(loop_check_fn=lambda: True)  # single pass
+            Tasklet("pre", lambda: log.append("p")) >> loop(t)
+        comp.get_tasklet("body").insert_after(Tasklet("post", lambda: log.append("q")))
+        comp.run()
+        assert log == ["p", "b", "q"]
+
+    def test_clone_composer_inherits(self):
+        log = []
+        parent = self._chain(log)
+        with CloneComposer(parent) as child:
+            child.get_tasklet("two").remove()
+        child.run()
+        assert log == [1, 3]
+
+    def test_missing_alias_raises(self):
+        comp = self._chain([])
+        with pytest.raises(ComposerError):
+            comp.get_tasklet("nope")

@@ -1,0 +1,225 @@
+"""Management plane, registry/realms, checkpointing, selection/sampling,
+sharding rules and HLO analysis."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+
+class TestRegistry:
+    def test_realm_matching(self):
+        from repro.core.registry import ComputeSpec, ResourceRegistry
+        from repro.core.tag import DatasetSpec
+
+        reg = ResourceRegistry()
+        reg.register_compute(ComputeSpec(compute_id="k8s-eu", realm="eu/west"))
+        reg.register_compute(ComputeSpec(compute_id="k8s-us", realm="us"))
+        assert reg.compute_for_realm("eu/west/paris") == "k8s-eu"
+        assert reg.compute_for_realm("us") == "k8s-us"
+
+    def test_unmatched_realm(self):
+        from repro.core.registry import ComputeSpec, RegistryError, ResourceRegistry
+
+        reg = ResourceRegistry()
+        reg.register_compute(ComputeSpec(compute_id="k8s-eu", realm="eu"))
+        with pytest.raises(RegistryError):
+            reg.compute_for_realm("mars", soft=False)
+
+
+class TestManagementPlane:
+    def test_full_job_lifecycle(self):
+        from repro.core.registry import ComputeSpec
+        from repro.core.tag import DatasetSpec
+        from repro.core.topologies import classical_fl
+        from repro.mgmt.plane import APIServer, InprocDeployer, JobState
+
+        from repro.core.expansion import JobSpec
+
+        api = APIServer()
+        api.register_compute(InprocDeployer(ComputeSpec("c0", realm="default")))
+        datasets = tuple(DatasetSpec(name=f"d{i}", realm="default") for i in range(3))
+        for d in datasets:
+            api.register_dataset(d)
+        w0 = {"w": np.ones(4, np.float32)}
+        job_id = api.create_job(
+            JobSpec(
+                tag=classical_fl(),
+                datasets=datasets,
+                hyperparams={"rounds": 2, "init_weights": w0},
+            )
+        )
+        api.start_job(job_id)
+        state = api.wait_job(job_id, timeout=60)
+        assert state == JobState.COMPLETED
+        rec = api.job(job_id)
+        assert len(rec.workers) == 4  # 3 trainers + 1 aggregator
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        from repro.checkpoint.checkpoint import latest_step, restore, save
+
+        tree = {"a": np.arange(6, dtype=np.float32).reshape(2, 3),
+                "b": {"c": np.float32(3.5)}}
+        save(str(tmp_path), 7, tree)
+        save(str(tmp_path), 12, tree)
+        assert latest_step(str(tmp_path)) == 12
+        back = restore(str(tmp_path), 12, tree)
+        np.testing.assert_allclose(back["a"], tree["a"])
+        np.testing.assert_allclose(back["b"]["c"], 3.5)
+
+
+class TestSelection:
+    def test_oort_prefers_high_utility(self):
+        from repro.fl.selection import get_selector
+
+        sel = get_selector("oort", epsilon=0.0, seed=0)
+        clients = [f"c{i}" for i in range(10)]
+        for i, c in enumerate(clients):
+            sel.report(c, stat_util=float(i), duration=1.0)
+        picked = sel.select(clients, k=3, round_idx=5)
+        assert "c9" in picked and "c0" not in picked
+
+    def test_random_selector_is_seeded(self):
+        from repro.fl.selection import get_selector
+
+        a = get_selector("random", seed=1).select([f"c{i}" for i in range(10)], 3, 0)
+        b = get_selector("random", seed=1).select([f"c{i}" for i in range(10)], 3, 0)
+        assert a == b
+
+
+class TestShardingRules:
+    def _mesh(self):
+        from jax.sharding import AbstractMesh
+
+        return AbstractMesh((16, 16), ("data", "model"))
+
+    def test_attention_weights_column_sharded(self):
+        from repro.configs import get_config
+        from repro.launch.sharding import param_pspec
+
+        cfg = get_config("deepseek_7b")
+        mesh = self._mesh()
+
+        class Leaf:
+            shape = (4096, 4096)
+            ndim = 2
+
+        class K:
+            def __init__(self, key):
+                self.key = key
+
+        spec = param_pspec((K("layers"), K("0"), K("attn"), K("wq"), K("w")),
+                           Leaf(), cfg, mesh)
+        assert spec[1] == "model" and spec[0] is None
+
+    def test_indivisible_dims_replicated(self):
+        from repro.configs import get_config
+        from repro.launch.sharding import param_pspec
+
+        cfg = get_config("qwen2_5_3b")  # kv=2 heads
+        mesh = self._mesh()
+
+        class Leaf:
+            shape = (2048, 7)  # 7 not divisible by 16
+            ndim = 2
+
+        class K:
+            def __init__(self, key):
+                self.key = key
+
+        spec = param_pspec((K("attn"), K("wk"), K("w")), Leaf(), cfg, mesh)
+        assert spec[1] is None  # guarded
+
+    def test_moe_expert_dim_sharded(self):
+        from repro.configs import get_config
+        from repro.launch.sharding import param_pspec
+
+        cfg = get_config("qwen3_moe_235b_a22b")
+        mesh = self._mesh()
+
+        class Leaf:
+            shape = (128, 4096, 1536)
+            ndim = 3
+
+        class K:
+            def __init__(self, key):
+                self.key = key
+
+        spec = param_pspec((K("moe"), K("gate"),), Leaf(), cfg, mesh)
+        assert spec[0] == "model" and spec[1] == "data"  # fsdp
+
+
+class TestHLOAnalysis:
+    def test_parse_collectives(self):
+        from repro.launch.analysis import parse_collectives
+
+        hlo = """
+HloModule jit_step
+
+ENTRY %main (p0: f32[16,128]) -> f32[16,128] {
+  %p0 = f32[16,128] parameter(0)
+  %ar = f32[16,128] all-reduce(%p0), replica_groups={}
+  %ag = f32[32,128] all-gather(%ar), dimensions={0}
+  ROOT %out = f32[16,128] reduce-scatter(%ag), dimensions={0}
+}
+"""
+        stats = parse_collectives(hlo)
+        assert stats.by_kind["all-reduce"][0] == 1
+        assert stats.by_kind["all-reduce"][1] == 16 * 128 * 4
+        assert stats.by_kind["all-gather"][1] == 32 * 128 * 4
+        assert stats.total_count == 3
+
+    def test_while_body_trip_scaling(self):
+        from repro.launch.analysis import parse_collectives
+
+        hlo = """
+HloModule jit_step
+
+%body.1 (x: f32[8]) -> f32[8] {
+  %x = f32[8] parameter(0)
+  ROOT %ar = f32[8] all-reduce(%x)
+}
+
+%cond.1 (x: f32[8]) -> pred[] {
+  ROOT %c = pred[] constant(true)
+}
+
+ENTRY %main (p: f32[8]) -> f32[8] {
+  %p = f32[8] parameter(0)
+  ROOT %w = f32[8] while(%p), condition=%cond.1, body=%body.1
+}
+"""
+        stats = parse_collectives(hlo, {"body": 5})
+        assert stats.by_kind["all-reduce"] == (5, 8 * 4 * 5)
+
+    def test_roofline_terms(self):
+        from repro.launch.analysis import Roofline
+
+        r = Roofline(
+            arch="a", shape="s", mesh="16x16", chips=256,
+            hlo_flops=256 * 197e12,  # exactly 1s of compute
+            hlo_bytes=256 * 819e9,   # exactly 1s of HBM
+            collective_bytes=50e9 * 2,  # 2s of ICI
+            model_flops=256 * 197e12 / 2,
+        )
+        assert r.compute_s == pytest.approx(1.0)
+        assert r.memory_s == pytest.approx(1.0)
+        assert r.collective_s == pytest.approx(2.0)
+        assert r.dominant == "collective"
+        assert r.useful_ratio == pytest.approx(0.5)
+
+
+class TestCompression:
+    @settings(max_examples=15, deadline=None)
+    @given(scale=st.floats(0.01, 50.0))
+    def test_int8_quant_roundtrip_property(self, scale):
+        from repro.fl.compression import dequantize_int8, quantize_int8
+
+        x = jax.random.normal(jax.random.key(3), (257,)) * scale
+        q, s = quantize_int8(x)
+        back = dequantize_int8(q, s)
+        bound = float(jnp.max(jnp.abs(x))) / 127.0 + 1e-6
+        assert float(jnp.max(jnp.abs(back - x))) <= bound

@@ -1,0 +1,157 @@
+"""TAG structure, validation, serialization and Algorithm-1 expansion."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.expansion import ExpansionError, JobSpec, expand
+from repro.core.tag import TAG, Channel, DatasetSpec, FuncTags, Role, TagError, diff_tags
+from repro.core.topologies import (
+    TEMPLATES,
+    classical_fl,
+    coordinated_fl,
+    distributed_fl,
+    hierarchical_fl,
+    hybrid_fl,
+)
+
+
+def _datasets(n, group_of=None):
+    return tuple(
+        DatasetSpec(name=f"d{i}", group=(group_of(i) if group_of else "default"))
+        for i in range(n)
+    )
+
+
+class TestTagValidation:
+    def test_duplicate_roles_rejected(self):
+        r = Role(name="a", is_data_consumer=True)
+        ch = Channel(name="c", pair=("a", "a"))
+        with pytest.raises(TagError):
+            TAG("t", (r, r), (ch,)).validate()
+
+    def test_unknown_channel_end_rejected(self):
+        r = Role(name="a", is_data_consumer=True)
+        ch = Channel(name="c", pair=("a", "ghost"))
+        with pytest.raises(TagError):
+            TAG("t", (r,), (ch,)).validate()
+
+    def test_disconnected_role_rejected(self):
+        r = Role(name="a", is_data_consumer=True)
+        b = Role(name="b", group_association=({"c": "default"},))
+        ch = Channel(name="c", pair=("b", "b"))
+        with pytest.raises(TagError):
+            TAG("t", (r, b), (ch,)).validate()
+
+    def test_bad_group_association_rejected(self):
+        tag = classical_fl()
+        bad = Role(
+            name="trainer",
+            is_data_consumer=True,
+            group_association=({"param-channel": "nonexistent-group"},),
+        )
+        with pytest.raises(TagError):
+            TAG("t", (bad, tag.role("global-aggregator")), tag.channels).validate()
+
+    def test_all_templates_validate(self):
+        for name, builder in TEMPLATES.items():
+            tag = builder()
+            tag.validate()
+            assert tag.roles and tag.channels, name
+
+
+class TestSerialization:
+    @pytest.mark.parametrize("builder", list(TEMPLATES.values()))
+    def test_json_roundtrip(self, builder):
+        tag = builder()
+        back = TAG.from_json(tag.to_json())
+        assert back == tag
+
+    def test_diff_tags_classical_to_hierarchical(self):
+        d = diff_tags(classical_fl(), hierarchical_fl())
+        # paper Table 4: +aggregator role, +global channel
+        assert "role:aggregator" in d["added"]
+        assert "channel:global-channel" in d["added"]
+
+
+class TestExpansion:
+    def test_classical_one_worker_per_dataset(self):
+        job = JobSpec(tag=classical_fl(), datasets=_datasets(5))
+        workers = expand(job)
+        trainers = [w for w in workers if w.role == "trainer"]
+        aggs = [w for w in workers if w.role == "global-aggregator"]
+        assert len(trainers) == 5 and len(aggs) == 1
+        assert sorted(w.dataset for w in trainers) == [f"d{i}" for i in range(5)]
+
+    def test_hierarchical_groups(self):
+        tag = hierarchical_fl(
+            groups=("west", "east"),
+            dataset_groups={"west": ("d0", "d1"), "east": ("d2", "d3")},
+        )
+        job = JobSpec(tag=tag, datasets=_datasets(4))
+        workers = expand(job)
+        aggs = [w for w in workers if w.role == "aggregator"]
+        assert len(aggs) == 2
+        t_groups = sorted(
+            w.group_of("param-channel") for w in workers if w.role == "trainer"
+        )
+        assert t_groups == ["east", "east", "west", "west"]
+
+    def test_replica_multiplies_workers(self):
+        tag = hierarchical_fl(groups=("g",), replica=3,
+                              dataset_groups={"g": ("d0",)})
+        job = JobSpec(tag=tag, datasets=_datasets(1))
+        aggs = [w for w in expand(job) if w.role == "aggregator"]
+        assert len(aggs) == 3
+        assert sorted(w.replica_index for w in aggs) == [0, 1, 2]
+
+    def test_missing_datasets_rejected(self):
+        with pytest.raises(ExpansionError):
+            expand(JobSpec(tag=classical_fl(), datasets=()))
+
+    def test_coordinated_has_coordinator(self):
+        tag = coordinated_fl(dataset_groups={"default": ("d0", "d1")})
+        job = JobSpec(tag=tag, datasets=_datasets(2))
+        roles = {w.role for w in expand(job)}
+        assert "coordinator" in roles
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n_datasets=st.integers(1, 12),
+        replica=st.integers(1, 4),
+        n_groups=st.integers(1, 3),
+    )
+    def test_expansion_counts_property(self, n_datasets, replica, n_groups):
+        """Worker counts follow Algorithm 1 exactly for any valid job."""
+        groups = tuple(f"g{i}" for i in range(n_groups))
+        dataset_groups = {g: tuple() for g in groups}
+        for i in range(n_datasets):
+            g = groups[i % n_groups]
+            dataset_groups[g] = dataset_groups[g] + (f"d{i}",)
+        dataset_groups = {g: ds for g, ds in dataset_groups.items() if ds}
+        tag = hierarchical_fl(
+            groups=tuple(dataset_groups), replica=replica,
+            dataset_groups=dataset_groups,
+        )
+        job = JobSpec(tag=tag, datasets=_datasets(n_datasets))
+        workers = expand(job)
+        trainers = [w for w in workers if w.role == "trainer"]
+        aggs = [w for w in workers if w.role == "aggregator"]
+        globals_ = [w for w in workers if w.role == "global-aggregator"]
+        assert len(trainers) == n_datasets  # one per dataset
+        assert len(aggs) == len(dataset_groups) * replica
+        assert len(globals_) == 1
+        # every trainer's param-channel group has an aggregator
+        agg_groups = {w.group_of("param-channel") for w in aggs}
+        for t in trainers:
+            assert t.group_of("param-channel") in agg_groups
+
+    def test_expansion_order_independent(self):
+        """Roles can expand in any order (self-contained specs)."""
+        tag = hierarchical_fl(
+            groups=("west", "east"),
+            dataset_groups={"west": ("d0",), "east": ("d1",)},
+        )
+        rev = TAG(tag.name, tuple(reversed(tag.roles)), tag.channels,
+                  tag.dataset_groups)
+        a = expand(JobSpec(tag=tag, datasets=_datasets(2)))
+        b = expand(JobSpec(tag=rev, datasets=_datasets(2)))
+        assert {w.worker_id for w in a} == {w.worker_id for w in b}
