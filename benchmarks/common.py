@@ -66,10 +66,9 @@ class SGDClassifierTrainer(Trainer):
     def train(self) -> None:
         if self.weights is None:
             return
+        # the base Trainer.upload advances the virtual clock by
+        # config["compute_time"]; advancing here too would double-count
         self.weights = sgd_epoch(self.weights, self.x, self.y)
-        self.ctx.advance_clock(
-            self.param_channel, float(self.config.get("compute_time", 0.0))
-        )
 
 
 class HybridSGDTrainer(HybridTrainer, SGDClassifierTrainer):
@@ -79,6 +78,8 @@ class HybridSGDTrainer(HybridTrainer, SGDClassifierTrainer):
         if self.weights is None:
             return
         self.weights = sgd_epoch(self.weights, self.x, self.y)
+        # HybridTrainer.upload (leader-only) does not model compute time, so
+        # the hybrid variant accounts for it here — once
         self.ctx.advance_clock(
             self.param_channel, float(self.config.get("compute_time", 0.0))
         )

@@ -15,6 +15,8 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="include the 100k-worker expansion point (Table 6)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: a reduced subset that finishes in ~a minute")
     ap.add_argument("--with-roofline", action="store_true",
                     help="render the roofline table from dryrun_results.json")
     ap.add_argument("--out", default=None)
@@ -22,6 +24,28 @@ def main(argv=None):
 
     results = {}
     t0 = time.time()
+
+    if args.smoke:
+        print("=" * 72)
+        print("Smoke — TAG expansion latency (reduced)")
+        print("=" * 72)
+        from benchmarks import bench_expansion
+
+        results["expansion"] = bench_expansion.run(full=False)
+
+        print("=" * 72)
+        print("Smoke — async runtime: round time vs straggler fraction")
+        print("=" * 72)
+        from benchmarks import bench_async
+
+        results["async"] = bench_async.run(smoke=True)
+
+        print("=" * 72)
+        print(f"smoke benchmarks passed in {time.time()-t0:.1f}s")
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=2, default=str)
+        return 0
 
     print("=" * 72)
     print("Table 6 — TAG expansion latency")
@@ -50,6 +74,13 @@ def main(argv=None):
     from benchmarks import bench_hybrid
 
     results["hybrid"] = bench_hybrid.run()
+
+    print("=" * 72)
+    print("Async runtime — round-completion time vs straggler fraction")
+    print("=" * 72)
+    from benchmarks import bench_async
+
+    results["async"] = bench_async.run()
 
     import os
 

@@ -1,0 +1,111 @@
+"""Async FL: one TAG, three execution policies (sync / deadline / async).
+
+The application logic — a softmax-regression trainer on synthetic federated
+data — is written once. The ``RuntimePolicy`` alone decides whether the job
+runs as barriered rounds, deadline-bounded partial participation, or fully
+asynchronous FedBuff aggregation with staleness weighting. Half the clients
+are emulated stragglers (16x slower on the virtual clock), so the three
+policies show materially different round-completion times while all three
+reach a useful model.
+
+Run:  PYTHONPATH=src:. python examples/async_fedbuff.py
+"""
+import numpy as np
+
+from repro.core.expansion import JobSpec
+from repro.core.roles import Trainer
+from repro.core.runtime import RuntimePolicy, run_job
+from repro.core.tag import DatasetSpec
+from repro.core.topologies import classical_fl
+
+N_CLIENTS = 6
+ROUNDS = 5
+FEATURES, CLASSES = 16, 5
+
+
+def _softmax(z):
+    z = z - z.max(axis=1, keepdims=True)
+    e = np.exp(z)
+    return e / e.sum(axis=1, keepdims=True)
+
+
+class SGDTrainer(Trainer):
+    """Fig. 5 programming model: the same class serves every policy."""
+
+    def load_data(self):
+        rng = np.random.default_rng(abs(hash(self.ctx.worker.dataset)) % 2**32)
+        w_true = np.random.default_rng(0).normal(size=(FEATURES, CLASSES))
+        self.x = rng.normal(size=(128, FEATURES)).astype(np.float32)
+        logits = self.x @ w_true + 0.5 * rng.normal(size=(128, CLASSES))
+        self.y = logits.argmax(axis=1)
+        self.num_samples = len(self.x)
+
+    def train(self):
+        if self.weights is None:
+            return
+        w, b = self.weights["w"].copy(), self.weights["b"].copy()
+        p = _softmax(self.x @ w + b)
+        onehot = np.eye(CLASSES, dtype=np.float32)[self.y]
+        g = (p - onehot) / len(self.x)
+        w -= 0.5 * (self.x.T @ g)
+        b -= 0.5 * g.sum(axis=0)
+        self.weights = {"w": w, "b": b}
+        # note: the base Trainer.upload already advances the virtual clock by
+        # config["compute_time"] — don't advance it again here
+
+
+def accuracy(weights) -> float:
+    rng = np.random.default_rng(123)
+    w_true = np.random.default_rng(0).normal(size=(FEATURES, CLASSES))
+    x = rng.normal(size=(1024, FEATURES)).astype(np.float32)
+    y = (x @ w_true).argmax(axis=1)
+    pred = (x @ weights["w"] + weights["b"]).argmax(axis=1)
+    return float((pred == y).mean())
+
+
+def run_policy(policy: RuntimePolicy):
+    job = JobSpec(
+        tag=classical_fl(),
+        datasets=tuple(DatasetSpec(name=f"d{i}") for i in range(N_CLIENTS)),
+        hyperparams={
+            "rounds": ROUNDS,
+            "init_weights": {
+                "w": np.zeros((FEATURES, CLASSES), np.float32),
+                "b": np.zeros((CLASSES,), np.float32),
+            },
+        },
+    )
+    # half the fleet straggles: 8 virtual seconds of compute instead of 0.5
+    per_worker = {
+        f"trainer-{i}": {"compute_time": 8.0 if i % 2 else 0.5}
+        for i in range(N_CLIENTS)
+    }
+    res = run_job(
+        job,
+        policy=policy,
+        program_overrides={"trainer": SGDTrainer},
+        per_worker_hyperparams=per_worker,
+        timeout=120,
+    )
+    assert not res.errors, res.errors
+    glob = res.program("global-aggregator-0")
+    total_time = glob.ctx.now(glob.down_channel)
+    return accuracy(res.global_weights()), total_time
+
+
+def main():
+    policies = {
+        "sync": RuntimePolicy(mode="sync"),
+        "deadline": RuntimePolicy(mode="deadline", deadline=2.0, grace=1.5),
+        "async": RuntimePolicy(mode="async", buffer_size=2, grace=1.5),
+    }
+    print(f"{'policy':>10} | {'accuracy':>8} | {'virtual time':>12}")
+    for name, policy in policies.items():
+        acc, t = run_policy(policy)
+        print(f"{name:>10} | {acc:8.3f} | {t:11.1f}s")
+        assert acc > 0.5, f"{name} failed to learn (acc={acc:.3f})"
+    print("async_fedbuff OK — same TAG, three execution policies")
+
+
+if __name__ == "__main__":
+    main()

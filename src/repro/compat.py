@@ -1,0 +1,65 @@
+"""Version-compatibility shims over the jax API surface this repo uses.
+
+The repo targets the modern ``jax.shard_map`` / ``jax.sharding.AxisType``
+API but must also run on jax 0.4.x (the pinned accelerator image), where
+``shard_map`` lives under ``jax.experimental`` with ``check_rep``/``auto``
+instead of ``check_vma``/``axis_names``. Route every mesh/shard_map use
+through here so call sites stay version-agnostic.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable, Optional, Sequence
+
+import jax
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
+    """``jax.make_mesh`` with explicit-Auto axis types when supported."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(
+                tuple(axis_shapes),
+                tuple(axis_names),
+                axis_types=(axis_type.Auto,) * len(tuple(axis_names)),
+            )
+        except TypeError:
+            pass
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+
+
+def shard_map(
+    f: Callable,
+    mesh,
+    in_specs,
+    out_specs,
+    manual_axes: Optional[Iterable[str]] = None,
+):
+    """Partial-manual shard_map: ``manual_axes`` are manual (collectives are
+    written explicitly over them), remaining mesh axes stay auto-partitioned.
+    """
+    manual = (
+        frozenset(manual_axes)
+        if manual_axes is not None
+        else frozenset(mesh.axis_names)
+    )
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            check_vma=False,
+            axis_names=set(manual),
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    auto = frozenset(mesh.axis_names) - manual
+    return _shard_map(
+        f,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        check_rep=False,
+        auto=auto,
+    )

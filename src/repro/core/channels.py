@@ -68,6 +68,16 @@ class Message:
     arrival: float  # emulated arrival time (seconds on the virtual clock)
 
 
+class WorkerDropped(RuntimeError):
+    """Raised from a channel operation when the worker's virtual clock would
+    cross its scheduled dropout time (mid-round dropout emulation)."""
+
+    def __init__(self, worker: str, at: float) -> None:
+        super().__init__(f"worker {worker!r} dropped out at t={at:.3f}s (virtual)")
+        self.worker = worker
+        self.at = at
+
+
 class ChannelEnd:
     """One worker's handle on a channel — implements Table 2.
 
@@ -115,6 +125,19 @@ class ChannelEnd:
         """Yield (end, message) for each end, in arrival (FIFO) order."""
         return self._backend.recv_fifo(self.channel, self.group, self.me, ends, timeout)
 
+    def recv_any(
+        self,
+        ends: Sequence[str],
+        timeout: Optional[float] = 30.0,
+        advance: bool = True,
+    ) -> Tuple[str, Any, float]:
+        """Earliest available message from any of ``ends``:
+        ``(end, payload, virtual_arrival)``. Raises ``queue.Empty`` on
+        timeout — the async servers' reactive receive."""
+        return self._backend.recv_any(
+            self.channel, self.group, self.me, ends, timeout, advance=advance
+        )
+
     def peek(self, end: str) -> Optional[Any]:
         return self._backend.peek(self.channel, self.group, self.me, end)
 
@@ -148,12 +171,14 @@ class InprocBackend:
         self.name = name
         self.shared_broker = shared_broker
         self._lock = threading.RLock()
+        self._cv = threading.Condition(self._lock)  # signaled on every delivery
         self._members: Dict[Tuple[str, str], List[str]] = collections.defaultdict(list)
         self._boxes: Dict[Tuple[str, str, str, str], "queue.Queue[Message]"] = {}
         self._links: Dict[Tuple[str, str], LinkModel] = {}
         self._wire_dtype: Dict[str, str] = {}
         self._broker_free_at: Dict[str, float] = collections.defaultdict(float)
         self._clock: Dict[str, float] = collections.defaultdict(float)  # per-worker
+        self._drop_at: Dict[str, float] = {}  # worker -> scheduled dropout time
         self.stats: Dict[str, float] = collections.defaultdict(float)
 
     # ------------------------- configuration -------------------------- #
@@ -165,6 +190,29 @@ class InprocBackend:
 
     def link(self, channel: str, worker: str) -> LinkModel:
         return self._links.get((channel, worker), LinkModel())
+
+    # --------------------------- dropout ------------------------------ #
+    def set_drop(self, worker: str, at: float) -> None:
+        """Schedule ``worker`` to drop out once its virtual clock crosses
+        ``at``. Enforced by every clock-advancing channel operation."""
+        with self._lock:
+            self._drop_at[worker] = float(at)
+
+    def clear_drop(self, worker: str) -> None:
+        with self._lock:
+            self._drop_at.pop(worker, None)
+
+    def drop_time(self, worker: str) -> Optional[float]:
+        with self._lock:
+            return self._drop_at.get(worker)
+
+    def _check_alive(self, worker: str, new_time: float) -> None:
+        """Raise WorkerDropped if moving ``worker``'s clock to ``new_time``
+        crosses its dropout time. Caller must hold the lock."""
+        at = self._drop_at.get(worker)
+        if at is not None and new_time > at:
+            self._clock[worker] = max(self._clock[worker], at)
+            raise WorkerDropped(worker, at)
 
     # --------------------------- membership --------------------------- #
     def join(self, channel: str, group: str, worker: str) -> None:
@@ -201,20 +249,81 @@ class InprocBackend:
             if self.shared_broker:
                 # broker serializes all transfers on the channel
                 start = max(start, self._broker_free_at[channel])
-                self._broker_free_at[channel] = start + dur
             arrival = start + dur
+            drop_at = self._drop_at.get(src)
+            if drop_at is not None and arrival > drop_at:
+                # sender dies mid-transfer: nothing is delivered, and on a
+                # shared broker the aborted transfer occupies the uplink
+                # only until the moment of death
+                if self.shared_broker:
+                    self._broker_free_at[channel] = max(
+                        self._broker_free_at[channel], min(drop_at, start + dur)
+                    )
+                self._check_alive(src, arrival)  # raises WorkerDropped
+            if self.shared_broker:
+                self._broker_free_at[channel] = start + dur
             self._clock[src] = arrival
             self.stats[f"bytes:{channel}"] += nbytes
             self.stats[f"msgs:{channel}"] += 1
-        self._box(channel, group, dst, src).put(Message(src, payload, nbytes, arrival))
+            self._box(channel, group, dst, src).put(
+                Message(src, payload, nbytes, arrival)
+            )
+            self._cv.notify_all()
 
     def recv(
         self, channel: str, group: str, me: str, end: str, timeout: Optional[float]
     ) -> Any:
         msg = self._box(channel, group, me, end).get(timeout=timeout)
         with self._lock:
+            self._check_alive(me, msg.arrival)
             self._clock[me] = max(self._clock[me], msg.arrival)
         return msg.payload
+
+    def recv_any(
+        self,
+        channel: str,
+        group: str,
+        me: str,
+        ends: Sequence[str],
+        timeout: Optional[float],
+        advance: bool = True,
+    ) -> Tuple[str, Any, float]:
+        """Take the earliest-arriving available message from any of ``ends``.
+
+        Returns ``(end, payload, arrival)``. Blocks (wall-clock) until a
+        message is available or ``timeout`` elapses (-> ``queue.Empty``).
+        This is the event-driven server primitive: async/deadline aggregators
+        react to whichever worker finishes first on the virtual clock.
+        ``advance=False`` leaves the receiver's virtual clock untouched (a
+        deadline server closing a round must not be dragged forward by a
+        straggler's late arrival).
+        """
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            while True:
+                best: Optional[Tuple[float, str]] = None
+                for end in ends:
+                    box = self._box(channel, group, me, end)
+                    try:
+                        arrival = box.queue[0].arrival  # type: ignore[attr-defined]
+                    except IndexError:
+                        continue
+                    if best is None or arrival < best[0]:
+                        best = (arrival, end)
+                if best is not None:
+                    _, end = best
+                    msg = self._box(channel, group, me, end).get_nowait()
+                    if advance:
+                        self._check_alive(me, msg.arrival)
+                        self._clock[me] = max(self._clock[me], msg.arrival)
+                    return end, msg.payload, msg.arrival
+                remaining = (
+                    None if deadline is None else deadline - time.monotonic()
+                )
+                if remaining is not None and remaining <= 0:
+                    raise queue.Empty
+                if not self._cv.wait(timeout=remaining):
+                    raise queue.Empty
 
     def recv_fifo(
         self,
@@ -232,6 +341,7 @@ class InprocBackend:
         msgs.sort(key=lambda t: t[0])
         with self._lock:
             if msgs:
+                self._check_alive(me, msgs[-1][0])
                 self._clock[me] = max(self._clock[me], msgs[-1][0])
         for _, end, payload in msgs:
             yield end, payload
@@ -252,7 +362,13 @@ class InprocBackend:
     def advance(self, worker: str, seconds: float) -> None:
         """Advance a worker's emulated clock (models local compute time)."""
         with self._lock:
+            self._check_alive(worker, self._clock[worker] + seconds)
             self._clock[worker] += seconds
+
+    def set_clock(self, worker: str, at: float) -> None:
+        """Force a worker's clock forward to ``at`` (arrival / re-join)."""
+        with self._lock:
+            self._clock[worker] = max(self._clock[worker], float(at))
 
 
 _BACKEND_FACTORIES: Dict[str, Callable[[], InprocBackend]] = {}

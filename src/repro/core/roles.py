@@ -56,6 +56,28 @@ class RoleContext:
         return self.channels.backend(channel).now(self.worker.worker_id)
 
 
+def weighted_mean(
+    updates: Sequence[Tuple[Any, float]]
+) -> Tuple[Optional[Any], float]:
+    """Sample-weighted mean of client model pytrees.
+
+    Returns ``(mean_tree, total_samples)``; ``(None, 0.0)`` when no update
+    carries positive weight. Shared by every aggregator-style role so the
+    accumulate/normalize logic exists exactly once.
+    """
+    import jax
+
+    total = 0.0
+    acc = None
+    for weights, n in updates:
+        total += n
+        scaled = jax.tree_util.tree_map(lambda x: np.asarray(x) * n, weights)
+        acc = scaled if acc is None else jax.tree_util.tree_map(np.add, acc, scaled)
+    if acc is None or total <= 0:
+        return None, 0.0
+    return jax.tree_util.tree_map(lambda x: x / total, acc), total
+
+
 class Role(abc.ABC):
     """Base of all role programs. ``compose()`` builds the tasklet chain,
     ``run()`` executes it."""
@@ -98,6 +120,14 @@ class Role(abc.ABC):
         assert self.composer is not None
         self.composer.run()
 
+    def on_dropped(self, at: float) -> None:
+        """Cancellation hook: the runtime calls this when the worker's virtual
+        clock crossed its scheduled dropout time. Leaves every joined channel
+        so peers' ``ends()`` stop seeing the dead worker."""
+        self.metrics.append({"dropped_at": at})
+        for end in list(self.ctx._ends.values()):
+            end.leave()
+
 
 # ====================================================================== #
 # Classical / Hierarchical FL roles
@@ -111,6 +141,11 @@ class Trainer(Role):
         super().__init__(ctx)
         self.weights: Any = None
         self.num_samples: int = int(self.config.get("num_samples", 1))
+        # staleness hook: async/deadline servers stamp their broadcasts with a
+        # model version; the trainer echoes it so the server can compute the
+        # update's staleness. Sync servers send no version (payloads — and so
+        # the emulated wire bytes — are unchanged in sync mode).
+        self._server_version: Optional[int] = None
 
     # ----------------------------- tasklets --------------------------- #
     def fetch(self) -> None:
@@ -118,6 +153,7 @@ class Trainer(Role):
         aggs = end.ends()
         msg = end.recv(aggs[0])
         self.weights = msg["weights"]
+        self._server_version = msg.get("version", self._server_version)
         self._work_done = bool(msg.get("done", False))
 
     def upload(self) -> None:
@@ -128,10 +164,10 @@ class Trainer(Role):
         self.ctx.advance_clock(
             self.param_channel, float(self.config.get("compute_time", 0.0))
         )
-        end.send(
-            end.ends()[0],
-            {"weights": self.weights, "num_samples": self.num_samples},
-        )
+        update = {"weights": self.weights, "num_samples": self.num_samples}
+        if self._server_version is not None:
+            update["version"] = self._server_version
+        end.send(end.ends()[0], update)
 
     def compose(self) -> None:
         with Composer() as composer:
@@ -158,6 +194,7 @@ class _AggregatorBase(Role):
         self.weights: Any = self.config.get("init_weights")
         self.agg_weights: Any = None
         self.agg_samples: int = 0
+        self._server_version: Optional[int] = None  # staleness echo (async)
 
     def distribute(self) -> None:
         end = self.ctx.end(self.down_channel)
@@ -166,22 +203,14 @@ class _AggregatorBase(Role):
     def aggregate(self) -> None:
         if self._work_done:
             return  # peers were just told to exit; nothing will arrive
-        import jax
-
         end = self.ctx.end(self.down_channel)
-        total = 0.0
-        acc = None
-        for _, msg in end.recv_fifo(end.ends()):
-            w, n = msg["weights"], float(msg.get("num_samples", 1))
-            total += n
-            scaled = jax.tree_util.tree_map(lambda x: np.asarray(x) * n, w)
-            acc = (
-                scaled
-                if acc is None
-                else jax.tree_util.tree_map(np.add, acc, scaled)
-            )
-        if acc is not None and total > 0:
-            self.agg_weights = jax.tree_util.tree_map(lambda x: x / total, acc)
+        updates = [
+            (msg["weights"], float(msg.get("num_samples", 1)))
+            for _, msg in end.recv_fifo(end.ends())
+        ]
+        mean, total = weighted_mean(updates)
+        if mean is not None:
+            self.agg_weights = mean
             self.agg_samples = int(total)
             self.weights = self.agg_weights
 
@@ -195,6 +224,7 @@ class Aggregator(_AggregatorBase):
         end = self.ctx.end(self.up_channel)
         msg = end.recv(end.ends()[0])
         self.weights = msg["weights"]
+        self._server_version = msg.get("version", self._server_version)
         self._work_done = bool(msg.get("done", False))
 
     def upload(self) -> None:
@@ -204,10 +234,10 @@ class Aggregator(_AggregatorBase):
         self.ctx.advance_clock(
             self.up_channel, float(self.config.get("compute_time", 0.0))
         )
-        end.send(
-            end.ends()[0],
-            {"weights": self.weights, "num_samples": self.agg_samples},
-        )
+        update = {"weights": self.weights, "num_samples": self.agg_samples}
+        if self._server_version is not None:
+            update["version"] = self._server_version
+        end.send(end.ends()[0], update)
 
     def compose(self) -> None:
         with Composer() as composer:
@@ -277,6 +307,11 @@ class _AutoChannelGlobalAggregator(GlobalAggregator):
         else:
             self.down_channel = chans[0]
 
+
+# The original (pre-alias) root-aggregator class: the runtime uses this to
+# recognize "root of the aggregation tree" programs when lowering a TAG to a
+# deadline/async execution policy (see repro.core.roles_async).
+GlobalAggregatorBase = GlobalAggregator
 
 # Make GlobalAggregator channel-aware by default.
 GlobalAggregator = _AutoChannelGlobalAggregator  # type: ignore[misc]

@@ -1,0 +1,344 @@
+"""Asynchronous / semi-synchronous root-aggregator programs.
+
+These are the lowering targets of ``repro.core.runtime.RuntimePolicy``: the
+same TAG whose root role is a ``GlobalAggregator`` subclass executes
+
+* ``mode="sync"``     — the classic barriered rounds (unchanged base class);
+* ``mode="deadline"`` — semi-sync partial participation: each round closes at
+  a straggler deadline on the virtual clock; late updates are excluded (and
+  discarded by model-version check when they eventually arrive);
+* ``mode="async"``    — FedBuff-style buffered async aggregation (Nguyen et
+  al. 2022): the server reacts to whichever trainer finishes first, weights
+  each update by its staleness, and applies the buffer every K updates.
+
+``make_policy_program(base_cls, mode)`` grafts the matching mixin onto the
+user's aggregator class, so user-defined ``initialize``/``evaluate`` hooks
+survive the policy lowering — the paper's "deployment detail, not application
+logic" claim extended to execution semantics.
+"""
+from __future__ import annotations
+
+import queue
+from typing import Any, Dict, List, Optional, Tuple, Type
+
+import numpy as np
+
+from repro.core.composer import Composer, Loop, Tasklet
+from repro.core.roles import Role, weighted_mean
+
+
+def _tree_sub(a: Any, b: Any) -> Any:
+    import jax
+
+    return jax.tree_util.tree_map(lambda x, y: np.asarray(x) - np.asarray(y), a, b)
+
+
+def _tree_add_scaled(params: Any, delta: Any, scale: float) -> Any:
+    import jax
+
+    return jax.tree_util.tree_map(
+        lambda p, d: np.asarray(p) + scale * np.asarray(d), params, delta
+    )
+
+
+class _PolicyRootBase:
+    """Shared policy plumbing for the deadline/async root mixins."""
+
+    def _policy(self) -> Any:
+        pol = self.config.get("runtime_policy")
+        if pol is None:
+            raise RuntimeError("policy-lowered aggregator needs 'runtime_policy'")
+        return pol
+
+    def _down(self):
+        return self.ctx.end(self.down_channel)
+
+    def _trainers(self) -> List[str]:
+        return sorted(self._down().ends())
+
+
+class DeadlineRootMixin(_PolicyRootBase):
+    """Per-round straggler deadline on the virtual clock (semi-sync)."""
+
+    def __init__(self, ctx) -> None:
+        super().__init__(ctx)
+        self._version = 0
+        self._round_start = 0.0
+        self._expected: List[str] = []
+        self.participation_log: List[Dict[str, Any]] = []
+
+    # --------------------------- tasklets ----------------------------- #
+    def begin_round(self) -> None:
+        end = self._down()
+        self._expected = self._trainers()
+        self._round_start = self.ctx.now(self.down_channel)
+        for t in self._expected:
+            end.send(
+                t,
+                {"weights": self.weights, "done": False, "version": self._version},
+            )
+
+    def collect(self) -> None:
+        pol = self._policy()
+        deadline = self._round_start + float(pol.deadline)
+        end = self._down()
+        remaining = set(self._expected)
+        arrived: List[Tuple[str, Any, float]] = []
+        import time as _time
+
+        grace_end = _time.monotonic() + float(pol.grace)
+        backend = self.ctx.channels.backend(self.down_channel)
+        while remaining:
+            timeout = grace_end - _time.monotonic()
+            if timeout <= 0:
+                break
+            # peers already scheduled to drop before this round's deadline
+            # can still have delivered (or be mid-delivery of) an on-time
+            # update — keep draining, but only wait briefly for them
+            live = [
+                t
+                for t in remaining
+                if backend.drop_time(t) is None or backend.drop_time(t) > deadline
+            ]
+            if not live:
+                timeout = min(timeout, 0.25)
+            try:
+                src, msg, arrival = end.recv_any(
+                    sorted(remaining), timeout=timeout, advance=False
+                )
+            except queue.Empty:
+                if not live:
+                    break
+                continue
+            if msg.get("version") != self._version:
+                continue  # stale leftover from a missed deadline: discard
+            arrived.append((src, msg, arrival))
+            remaining.discard(src)
+
+        on_time = [a for a in arrived if a[2] <= deadline]
+        late = [a for a in arrived if a[2] > deadline]
+        # partial-participation floor: admit the earliest stragglers if the
+        # deadline left too few updates (extends the round past the deadline)
+        need = max(0, int(pol.min_participants) - len(on_time))
+        if need:
+            late.sort(key=lambda a: a[2])
+            on_time.extend(late[:need])
+            late = late[need:]
+
+        agg, total = weighted_mean(
+            [(m["weights"], float(m.get("num_samples", 1))) for _, m, _ in on_time]
+        )
+        if agg is not None:
+            self.weights = agg
+            self.agg_samples = int(total)
+        # the round closes at the deadline when anyone was cut or missing,
+        # else at the last on-time arrival
+        cut = bool(late) or bool(remaining)
+        last_arrival = max((a[2] for a in on_time), default=self._round_start)
+        round_end = max(deadline if cut else last_arrival, last_arrival)
+        if not np.isfinite(round_end):
+            round_end = last_arrival
+        backend.set_clock(self.ctx.worker.worker_id, round_end)
+        self.participation_log.append(
+            {
+                "round": self._version,
+                "included": sorted(s for s, _, _ in on_time),
+                "excluded": sorted(s for s, _, _ in late),
+                "missing": sorted(remaining),
+                "round_time": round_end - self._round_start,
+            }
+        )
+        self._version += 1
+
+    def check_rounds(self) -> None:
+        self._round += 1
+        self.metrics.append(
+            {"round": self._round, **{
+                k: v for k, v in self.participation_log[-1].items()
+                if k == "round_time"
+            }}
+        )
+        if self._round >= self.rounds:
+            self._work_done = True
+
+    def end_of_train(self) -> None:
+        end = self._down()
+        for t in self._trainers():
+            end.send(t, {"weights": self.weights, "done": True})
+
+    def compose(self) -> None:
+        with Composer() as composer:
+            self.composer = composer
+            tl_init = Tasklet("init", self.initialize)
+            tl_begin = Tasklet("begin_round", self.begin_round)
+            tl_collect = Tasklet("collect", self.collect)
+            tl_eval = Tasklet("evaluate", self.evaluate)
+            tl_round = Tasklet("check_rounds", self.check_rounds)
+            tl_end = Tasklet("end_of_train", self.end_of_train)
+            loop = Loop(loop_check_fn=lambda: self._work_done)
+            tl_init >> loop(
+                tl_begin >> tl_collect >> tl_eval >> tl_round
+            ) >> tl_end
+
+
+class AsyncRootMixin(_PolicyRootBase):
+    """FedBuff-style buffered asynchronous aggregation.
+
+    The server is purely reactive: it processes updates in virtual-arrival
+    order (``recv_any``), weights each by staleness (server version now minus
+    version the client trained from), and applies the buffered average every
+    ``buffer_size`` updates. Trainers never barrier — each gets fresh weights
+    back immediately after its upload is absorbed.
+    """
+
+    def __init__(self, ctx) -> None:
+        super().__init__(ctx)
+        self._version = 0
+        self._snapshots: Dict[int, Any] = {}
+        self._strategy = None
+        self._strategy_state = None
+        self._greeted: set = set()
+        self.staleness_log: List[Dict[str, Any]] = []
+
+    def _init_strategy(self) -> None:
+        from repro.fl.strategies import get_strategy
+
+        pol = self._policy()
+        name = str(self.config.get("async_strategy", "fedbuff"))
+        if name == "fedbuff":
+            self._strategy = get_strategy(
+                "fedbuff",
+                buffer_size=int(pol.buffer_size),
+                server_lr=float(self.config.get("server_lr", 1.0)),
+                staleness_exp=float(pol.staleness_exp),
+            )
+        elif name == "fedasync":
+            self._strategy = get_strategy(
+                "fedasync",
+                alpha=float(self.config.get("async_alpha", 0.6)),
+                staleness_exp=float(pol.staleness_exp),
+            )
+        else:
+            raise ValueError(
+                f"async mode needs a buffered strategy, got {name!r} "
+                "(one of: fedbuff, fedasync)"
+            )
+        self._strategy_state = self._strategy.init(self.weights)
+
+    def bootstrap(self) -> None:
+        self._init_strategy()
+        import jax
+
+        self._snapshots[0] = jax.tree_util.tree_map(np.asarray, self.weights)
+        end = self._down()
+        self._greeted = set(self._trainers())
+        for t in sorted(self._greeted):
+            end.send(t, {"weights": self.weights, "done": False, "version": 0})
+
+    def _target_versions(self) -> int:
+        pol = self._policy()
+        if pol.max_updates is not None:
+            return int(pol.max_updates)
+        return self.rounds
+
+    def serve(self) -> None:
+        import jax
+
+        pol = self._policy()
+        end = self._down()
+        trainers = self._trainers()
+        if not trainers:
+            self._work_done = True  # everyone dropped: nothing left to serve
+            return
+        # greet members that joined (or re-joined) since the last look at the
+        # channel: dynamic membership — they start from the current weights
+        current = set(trainers)
+        for t in sorted(current - self._greeted):
+            end.send(
+                t,
+                {"weights": self.weights, "done": False, "version": self._version},
+            )
+        self._greeted = current  # forget leavers so a re-join is greeted again
+        try:
+            src, msg, arrival = end.recv_any(trainers, timeout=float(pol.grace))
+        except queue.Empty:
+            if set(self._trainers()) != current:
+                return  # membership changed while waiting: re-greet first
+            # No update within the wall-clock grace window. This can mean
+            # "everyone is gone" OR "real training is slower than grace" —
+            # record the early stop so an under-trained result is
+            # distinguishable from a completed run.
+            self.metrics.append(
+                {
+                    "early_stop": True,
+                    "version": self._version,
+                    "target_versions": self._target_versions(),
+                }
+            )
+            self._work_done = True
+            return
+        trained_from = int(msg.get("version", self._version))
+        staleness = max(0, self._version - trained_from)
+        base = self._snapshots.get(trained_from, self._snapshots[self._version])
+        delta = _tree_sub(msg["weights"], base)
+        self._strategy_state = self._strategy.accumulate(
+            self._strategy_state, delta, np.int32(staleness)
+        )
+        self.staleness_log.append(
+            {"src": src, "staleness": staleness, "version": self._version,
+             "arrival": arrival}
+        )
+        if bool(self._strategy.ready(self._strategy_state)):
+            new_w, self._strategy_state = self._strategy.apply(
+                self.weights, None, self._strategy_state
+            )
+            self.weights = jax.tree_util.tree_map(np.asarray, new_w)
+            self._version += 1
+            self._round = self._version
+            self._snapshots[self._version] = self.weights
+            self.evaluate()
+            self.metrics.append({"round": self._version, "virtual_time": arrival})
+            if self._version >= self._target_versions():
+                self._work_done = True
+                return
+        # hand the uploader fresh weights so it keeps training (no barrier)
+        end.send(
+            src,
+            {"weights": self.weights, "done": False, "version": self._version},
+        )
+
+    def finish(self) -> None:
+        end = self._down()
+        for t in self._trainers():
+            end.send(t, {"weights": self.weights, "done": True})
+
+    def compose(self) -> None:
+        with Composer() as composer:
+            self.composer = composer
+            tl_init = Tasklet("init", self.initialize)
+            tl_boot = Tasklet("bootstrap", self.bootstrap)
+            tl_serve = Tasklet("serve", self.serve)
+            tl_finish = Tasklet("finish", self.finish)
+            loop = Loop(loop_check_fn=lambda: self._work_done)
+            tl_init >> tl_boot >> loop(tl_serve) >> tl_finish
+
+
+_PROGRAM_CACHE: Dict[Tuple[type, str], type] = {}
+
+_MIXINS: Dict[str, type] = {
+    "deadline": DeadlineRootMixin,
+    "async": AsyncRootMixin,
+}
+
+
+def make_policy_program(base_cls: Type[Role], mode: str) -> Type[Role]:
+    """Graft the policy mixin for ``mode`` onto a root-aggregator class."""
+    if mode not in _MIXINS:
+        raise ValueError(f"unknown policy mode {mode!r}; known: {sorted(_MIXINS)}")
+    key = (base_cls, mode)
+    if key not in _PROGRAM_CACHE:
+        mixin = _MIXINS[mode]
+        _PROGRAM_CACHE[key] = type(
+            f"{mode.capitalize()}{base_cls.__name__}", (mixin, base_cls), {}
+        )
+    return _PROGRAM_CACHE[key]

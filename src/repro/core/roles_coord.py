@@ -24,6 +24,7 @@ from repro.core.roles import (
     Role,
     RoleContext,
     Trainer,
+    weighted_mean,
 )
 
 COORD_TRAINER = "coord-trainer-channel"
@@ -85,6 +86,7 @@ class CoordAggregator(Aggregator):
         msg = end.recv(end.ends()[0])
         self.active = bool(msg.get("active", True))
         self.assigned_trainers = list(msg.get("trainers", []))
+        self._coord_round = msg.get("round")
         self._work_done = bool(msg.get("done", False))
 
     def fetch(self) -> None:
@@ -103,18 +105,14 @@ class CoordAggregator(Aggregator):
     def aggregate(self) -> None:
         if self._work_done or not self.active:
             return
-        import jax
-
         end = self.ctx.end(self.down_channel)
-        total = 0.0
-        acc = None
-        for _, msg in end.recv_fifo(self.assigned_trainers):
-            w, n = msg["weights"], float(msg.get("num_samples", 1))
-            total += n
-            scaled = jax.tree_util.tree_map(lambda x: np.asarray(x) * n, w)
-            acc = scaled if acc is None else jax.tree_util.tree_map(np.add, acc, scaled)
-        if acc is not None and total > 0:
-            self.weights = jax.tree_util.tree_map(lambda x: x / total, acc)
+        updates = [
+            (msg["weights"], float(msg.get("num_samples", 1)))
+            for _, msg in end.recv_fifo(self.assigned_trainers)
+        ]
+        mean, total = weighted_mean(updates)
+        if mean is not None:
+            self.weights = mean
             self.agg_samples = int(total)
 
     def upload(self) -> None:
@@ -128,7 +126,10 @@ class CoordAggregator(Aggregator):
 
     def report(self, delay: float) -> None:
         end = self.ctx.end(COORD_AGG)
-        end.send(end.ends()[0], {"delay": delay})
+        end.send(
+            end.ends()[0],
+            {"delay": delay, "round": getattr(self, "_coord_round", None)},
+        )
 
     def compose(self) -> None:
         super().compose()
@@ -165,19 +166,15 @@ class CoordGlobalAggregator(GlobalAggregator):
     def aggregate(self) -> None:
         if self._work_done:
             return
-        import jax
-
         end = self.ctx.end(self.down_channel)
         t0 = self.ctx.now(self.down_channel)
-        total = 0.0
-        acc = None
-        for _, msg in end.recv_fifo(self.active_aggs):
-            w, n = msg["weights"], float(msg.get("num_samples", 1))
-            total += n
-            scaled = jax.tree_util.tree_map(lambda x: np.asarray(x) * n, w)
-            acc = scaled if acc is None else jax.tree_util.tree_map(np.add, acc, scaled)
-        if acc is not None and total > 0:
-            self.weights = jax.tree_util.tree_map(lambda x: x / total, acc)
+        updates = [
+            (msg["weights"], float(msg.get("num_samples", 1)))
+            for _, msg in end.recv_fifo(self.active_aggs)
+        ]
+        mean, _total = weighted_mean(updates)
+        if mean is not None:
+            self.weights = mean
         self.metrics.append(
             {"round": self._round, "round_time": self.ctx.now(self.down_channel) - t0}
         )
@@ -243,6 +240,7 @@ class Coordinator(Role):
                 {
                     "active": a in active,
                     "trainers": per_agg.get(a, []),
+                    "round": self._round,
                     "done": done,
                 },
             )
@@ -256,10 +254,35 @@ class Coordinator(Role):
     def collect_delay(self) -> None:
         if self._work_done:
             return
+        import queue as _queue
+
         end = self.ctx.end(COORD_AGG)
         delays: Dict[str, float] = {}
-        for a, msg in end.recv_fifo(self._active_now):
+        # dropout-tolerant collect: react to reports in arrival order and
+        # stop waiting (wall-clock grace) for aggregators that died mid-round
+        # instead of deadlocking the control loop
+        grace = float(self.config.get("coord_grace", 30.0))
+        remaining = set(self._active_now)
+        while remaining:
+            try:
+                a, msg, _ = end.recv_any(sorted(remaining), timeout=grace)
+            except _queue.Empty:
+                break
+            # a report tagged with an older round is a leftover from a
+            # grace-window miss — discard it and keep waiting for the
+            # current round's report so the stream never desynchronizes
+            rnd = msg.get("round")
+            if rnd is not None and rnd != self._round:
+                continue
             delays[a] = float(msg.get("delay", 0.0))
+            remaining.discard(a)
+        for a in remaining:
+            # a missing report reads as an infinitely slow round: exclude
+            # with the same binary backoff used for measured stragglers, so
+            # an aggregator that was merely slow (not dead) gets re-probed
+            window = self._backoff.get(a, 0) * 2 or 1
+            self._backoff[a] = window
+            self._excluded_until[a] = self._round + 1 + window
         self.load_balance(delays)
         self.decisions.append(
             {"round": self._round, "delays": delays, "active": list(self._active_now)}

@@ -1,22 +1,35 @@
 """In-process job runtime — the Flame-in-a-box (fiab) analogue (§5.3).
 
-Executes an expanded job: instantiates each worker's role program, runs
-``pre_run`` (channel joins) for every worker, barriers, then runs all tasklet
-chains on threads. Per-worker link models (bandwidth/latency) emulate the
+Executes an expanded job under a ``RuntimePolicy``:
+
+* ``sync`` (default) — the classic barriered execution: every worker joins,
+  barriers, and runs its tasklet chain to completion. Byte-identical to the
+  pre-policy runtime.
+* ``deadline`` — semi-synchronous rounds: the root aggregator closes each
+  round at a straggler deadline on the virtual clock; late workers are
+  excluded from that round and re-admitted on the next broadcast.
+* ``async`` — fully asynchronous buffered aggregation (FedBuff-style): the
+  root aggregator reacts to updates in virtual-arrival order, staleness-
+  weights them, and never barriers.
+
+The policy also drives the event scheduler: per-worker arrival times,
+mid-round dropout (enforced on the virtual clock by the channel layer),
+and dynamic re-join. Per-worker link models (bandwidth/latency) emulate the
 paper's heterogeneous-network experiments on the virtual clock kept by the
 inproc backends.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import importlib
 import threading
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.channels import ChannelManager, LinkModel
+from repro.core.channels import ChannelManager, InprocBackend, LinkModel, WorkerDropped
 from repro.core.expansion import JobSpec, WorkerConfig, expand
 from repro.core.registry import ResourceRegistry
-from repro.core.roles import Role, RoleContext
+from repro.core.roles import GlobalAggregatorBase, Role, RoleContext
 from repro.core.tag import TAG
 
 
@@ -41,11 +54,101 @@ def static_membership(
 
 
 @dataclasses.dataclass
+class RuntimePolicy:
+    """How a TAG's logical rounds lower to execution semantics.
+
+    The same JobSpec runs under any mode — the policy is a deployment detail,
+    exactly like the channel backend choice (§6.2 of the paper).
+    """
+
+    mode: str = "sync"  # "sync" | "deadline" | "async"
+    # worker_id -> virtual arrival time (seconds); absent workers arrive at 0
+    arrivals: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # worker_id -> virtual time at which the worker drops mid-round
+    dropouts: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # worker_id -> virtual time at which a dropped worker re-joins
+    rejoins: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # deadline mode: round closes this many virtual seconds after broadcast
+    deadline: float = float("inf")
+    # deadline mode: keep admitting the earliest stragglers up to this floor
+    min_participants: int = 0
+    # async mode: FedBuff buffer size (updates per server version)
+    buffer_size: int = 2
+    staleness_exp: float = 0.5
+    # async mode: stop after this many server versions (default: job rounds)
+    max_updates: Optional[int] = None
+    # wall-clock seconds a policy server waits on a quiet channel before
+    # concluding that no further update is coming (dropped/hung workers)
+    grace: float = 5.0
+
+    MODES = ("sync", "deadline", "async")
+
+    def __post_init__(self) -> None:
+        if self.mode not in self.MODES:
+            raise ValueError(
+                f"unknown RuntimePolicy.mode {self.mode!r}; one of {self.MODES}"
+            )
+        for wid, t in self.rejoins.items():
+            if wid not in self.dropouts:
+                raise ValueError(
+                    f"rejoin for {wid!r} has no matching dropout entry"
+                )
+            if t <= self.dropouts[wid]:
+                raise ValueError(
+                    f"rejoin time for {wid!r} must be after its dropout"
+                )
+
+    @property
+    def is_event_driven(self) -> bool:
+        return bool(
+            self.mode != "sync" or self.arrivals or self.dropouts or self.rejoins
+        )
+
+
+@dataclasses.dataclass(order=True)
+class _Event:
+    time: float
+    seq: int
+    kind: str = dataclasses.field(compare=False)
+    worker: str = dataclasses.field(compare=False)
+
+
+class VirtualEventLoop:
+    """Minimal virtual-clock event queue driving worker lifecycle events.
+
+    Virtual time is decoupled from wall-clock time, so the loop never sleeps:
+    it releases lifecycle events (worker starts) in virtual-time order and
+    records every transition in ``log`` for the JobResult timeline.
+    """
+
+    def __init__(self) -> None:
+        self._heap: List[_Event] = []
+        self._seq = 0
+        self.log: List[Tuple[float, str, str]] = []
+
+    def schedule(self, time: float, kind: str, worker: str) -> None:
+        heapq.heappush(self._heap, _Event(float(time), self._seq, kind, worker))
+        self._seq += 1
+
+    def record(self, time: float, kind: str, worker: str) -> None:
+        self.log.append((float(time), kind, worker))
+
+    def drain(self):
+        while self._heap:
+            ev = heapq.heappop(self._heap)
+            self.record(ev.time, ev.kind, ev.worker)
+            yield ev
+
+
+@dataclasses.dataclass
 class JobResult:
     workers: List[WorkerConfig]
     programs: Dict[str, Role]
     channel_bytes: Dict[str, float]
     errors: Dict[str, BaseException]
+    # event-driven extras (empty under the classic sync path)
+    dropped: Dict[str, float] = dataclasses.field(default_factory=dict)
+    events: List[Tuple[float, str, str]] = dataclasses.field(default_factory=list)
 
     def program(self, worker_id: str) -> Role:
         return self.programs[worker_id]
@@ -71,6 +174,7 @@ class JobRuntime:
         link_models: Optional[Dict[Tuple[str, str], LinkModel]] = None,
         per_worker_hyperparams: Optional[Dict[str, Dict[str, Any]]] = None,
         program_overrides: Optional[Dict[str, type]] = None,
+        policy: Optional[RuntimePolicy] = None,
     ) -> None:
         self.job = job
         self.workers = expand(job, registry)
@@ -78,17 +182,43 @@ class JobRuntime:
         self.link_models = dict(link_models or {})
         self.per_worker_hyperparams = dict(per_worker_hyperparams or {})
         self.program_overrides = dict(program_overrides or {})
+        self.policy = policy or RuntimePolicy()
         self._membership = static_membership(self.workers, job.tag)
         for (channel, worker), model in self.link_models.items():
             self.channels.backend(channel).set_link(channel, worker, model)
 
-    def _build_program(self, w: WorkerConfig) -> Role:
+    # ------------------------------------------------------------------ #
+    # program construction (incl. policy lowering of the root aggregator)
+    # ------------------------------------------------------------------ #
+    def _resolve_class(self, w: WorkerConfig) -> type:
         if w.role in self.program_overrides:
             cls = self.program_overrides[w.role]
         else:
             cls = resolve_program(w.program)
+        if self.policy.mode in ("deadline", "async") and issubclass(
+            cls, GlobalAggregatorBase
+        ):
+            # lowering replaces the whole tasklet chain, so it is only sound
+            # for the standard root-aggregator workflow. A subclass with its
+            # own compose() (e.g. CoordGlobalAggregator's coordinator
+            # handshake) would be silently broken — fail fast instead.
+            if cls.compose is not GlobalAggregatorBase.compose:
+                raise ValueError(
+                    f"cannot lower {cls.__name__} to {self.policy.mode!r} "
+                    "mode: it overrides compose(); policy modes support the "
+                    "standard GlobalAggregator round workflow only"
+                )
+            from repro.core.roles_async import make_policy_program
+
+            cls = make_policy_program(cls, self.policy.mode)
+        return cls
+
+    def _build_program(self, w: WorkerConfig) -> Role:
+        cls = self._resolve_class(w)
         hp = dict(self.job.hyperparams)
         hp.update(self.per_worker_hyperparams.get(w.worker_id, {}))
+        if self.policy.mode != "sync":
+            hp.setdefault("runtime_policy", self.policy)
         static = {
             ch: self._membership[(ch, group)] for ch, group in w.groups.items()
         }
@@ -97,7 +227,20 @@ class JobRuntime:
         )
         return cls(ctx)
 
+    def _backends_of(self, w: WorkerConfig) -> List[InprocBackend]:
+        return [self.channels.backend(ch) for ch in w.groups]
+
+    # ------------------------------------------------------------------ #
+    # execution
+    # ------------------------------------------------------------------ #
     def run(self, timeout: float = 120.0) -> JobResult:
+        if self.policy.is_event_driven:
+            return self._run_events(timeout)
+        return self._run_sync(timeout)
+
+    def _run_sync(self, timeout: float) -> JobResult:
+        """Classic barriered execution (byte-identical to the pre-policy
+        runtime): all joins, a barrier, then every chain on its own thread."""
         programs: Dict[str, Role] = {}
         errors: Dict[str, BaseException] = {}
         for w in self.workers:
@@ -133,6 +276,121 @@ class JobRuntime:
             programs=programs,
             channel_bytes=channel_bytes,
             errors=errors,
+        )
+
+    def _run_events(self, timeout: float) -> JobResult:
+        """Event-driven execution: arrivals, dropouts and re-joins release in
+        virtual-time order; policy-lowered root aggregators handle partial
+        participation and staleness."""
+        by_id = {w.worker_id: w for w in self.workers}
+        programs: Dict[str, Role] = {}
+        errors: Dict[str, BaseException] = {}
+        dropped: Dict[str, float] = {}
+        loop = VirtualEventLoop()
+        lock = threading.Lock()
+
+        for w in self.workers:
+            programs[w.worker_id] = self._build_program(w)
+
+        # a typo'd worker id in any schedule silently distorts the
+        # experiment's timing — reject all of them up front
+        for field in ("arrivals", "dropouts", "rejoins"):
+            for wid in getattr(self.policy, field):
+                if wid not in by_id:
+                    raise KeyError(f"{field} entry for unknown worker {wid!r}")
+
+        # dropout schedules are enforced by the channel layer on the
+        # virtual clock — a worker dies the moment any channel operation
+        # would carry its clock past the scheduled time
+        for wid, at in self.policy.dropouts.items():
+            for backend in self._backends_of(by_id[wid]):
+                backend.set_drop(wid, at)
+
+        # workers arriving at t=0 join before anyone runs (no join races
+        # among the initial cohort); late arrivals join dynamically — except
+        # in sync mode, whose barriered servers cannot handle membership
+        # growth: there an arrival only offsets the worker's virtual clock
+        dynamic_join = self.policy.mode != "sync"
+        initial = [
+            w for w in self.workers
+            if not dynamic_join
+            or float(self.policy.arrivals.get(w.worker_id, 0.0)) <= 0.0
+        ]
+        for w in initial:
+            programs[w.worker_id].pre_run()
+
+        def _rejoin(wid: str, at: float) -> Optional[Role]:
+            w = by_id[wid]
+            for backend in self._backends_of(w):
+                backend.clear_drop(wid)
+                backend.set_clock(wid, at)
+            prog = self._build_program(w)
+            with lock:
+                programs[wid] = prog
+                loop.record(at, "rejoin", wid)
+            prog.pre_run()
+            return prog
+
+        def _runner(wid: str, prog: Role) -> None:
+            try:
+                prog.run()
+            except WorkerDropped as e:
+                with lock:
+                    dropped[wid] = e.at
+                    loop.record(e.at, "dropout", wid)
+                try:
+                    prog.on_dropped(e.at)
+                except BaseException as hook_err:  # noqa: BLE001
+                    errors[wid] = hook_err
+                    return
+                rejoin_at = self.policy.rejoins.get(wid)
+                if rejoin_at is None:
+                    return
+                try:
+                    _runner(wid, _rejoin(wid, rejoin_at))
+                except BaseException as e2:  # noqa: BLE001
+                    errors[wid] = e2
+            except BaseException as e:  # noqa: BLE001 - surfaced to caller
+                errors[wid] = e
+
+        for w in self.workers:
+            at = float(self.policy.arrivals.get(w.worker_id, 0.0))
+            loop.schedule(at, "start", w.worker_id)
+
+        threads: List[threading.Thread] = []
+        for ev in loop.drain():
+            w = by_id[ev.worker]
+            prog = programs[ev.worker]
+            if ev.time > 0.0:
+                # late arrival: clocks start at the arrival time; the worker
+                # joins its channels now (dynamic membership)
+                for backend in self._backends_of(w):
+                    backend.set_clock(ev.worker, ev.time)
+                if dynamic_join:
+                    prog.pre_run()
+            t = threading.Thread(
+                target=_runner, args=(ev.worker, prog), daemon=True
+            )
+            threads.append(t)
+            t.start()
+
+        for t in threads:
+            t.join(timeout=timeout)
+        alive = [t for t in threads if t.is_alive()]
+        if alive:
+            errors["__timeout__"] = TimeoutError(
+                f"{len(alive)} workers still running after {timeout}s"
+            )
+        channel_bytes = {
+            c.name: self.channels.total_bytes(c.name) for c in self.job.tag.channels
+        }
+        return JobResult(
+            workers=self.workers,
+            programs=programs,
+            channel_bytes=channel_bytes,
+            errors=errors,
+            dropped=dropped,
+            events=sorted(loop.log),
         )
 
 

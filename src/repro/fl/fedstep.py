@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core.mesh_lowering import AggregationPlan, apply_plan
 from repro.fl.privacy import DPConfig, clip_and_noise
 from repro.fl.strategies import ServerStrategy
@@ -41,6 +42,11 @@ class FedStepConfig:
     dp: Optional[DPConfig] = None
     # gradient instead of weight-delta exchange (local_steps == 1 fast path)
     exchange: str = "delta"  # "delta" | "grad"
+    # on-mesh analogue of the runtime's deadline mode: each client makes the
+    # per-round straggler deadline with probability ``participation``; missed
+    # clients contribute nothing and the aggregate renormalizes over the
+    # clients that did participate (partial participation, FedBuff-style).
+    participation: float = 1.0
 
 
 def make_fl_train_step(
@@ -97,7 +103,7 @@ def make_fl_train_step(
         # fold the client coordinates into the rng so clients differ
         idx = jnp.int32(0)
         for a in client_axes:
-            idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
         rng = jax.random.fold_in(rng, idx)
 
         if config.exchange == "grad":
@@ -111,11 +117,27 @@ def make_fl_train_step(
                 lambda lp, p: (lp - p).astype(jnp.float32), local_params, params
             )
 
+        n_total = 1
+        for a in client_axes:
+            n_total *= mesh.shape[a]
         if config.dp is not None:
-            n_clients = 1
-            for a in client_axes:
-                n_clients *= mesh.shape[a]
-            delta = clip_and_noise(delta, config.dp, rng, n_clients)
+            # under partial participation the aggregate is renormalized to a
+            # mean over ~participation*N clients, so per-client noise must be
+            # calibrated to that count or the effective noise multiplier
+            # drops below DPConfig's promise
+            n_eff = max(1, int(round(config.participation * n_total)))
+            delta = clip_and_noise(delta, config.dp, rng, n_eff)
+
+        if config.participation < 1.0:
+            # per-client Bernoulli "made the deadline" draw; excluded clients
+            # contribute a zero delta and the mean renormalizes below
+            made_it = jax.random.bernoulli(
+                jax.random.fold_in(rng, 0x5EED), config.participation
+            ).astype(jnp.float32)
+            delta = jax.tree_util.tree_map(lambda d: d * made_it, delta)
+            n_part = jax.lax.psum(made_it, client_axes)
+        else:
+            n_part = jnp.float32(n_total)
 
         # hierarchical, per-channel-policy aggregation (the TAG, executed)
         stage_states = server_state["stages"]
@@ -128,6 +150,11 @@ def make_fl_train_step(
             tree = stage_reduce_mean(tree, stage)
             if i < len(plan.stages) - 1:
                 continue  # intermediate levels relay; root applies strategy
+        if config.participation < 1.0:
+            # stage mean divided by all N clients; renormalize to the mean
+            # over the clients that actually made the deadline
+            renorm = n_total / jnp.maximum(n_part, 1.0)
+            tree = jax.tree_util.tree_map(lambda d: d * renorm, tree)
         new_params, new_root_state = strategy.apply(
             params,
             jax.tree_util.tree_map(lambda d, p: d.astype(p.dtype), tree, params),
@@ -144,6 +171,7 @@ def make_fl_train_step(
                     for x in jax.tree_util.tree_leaves(tree)
                 )
             ),
+            "participants": n_part,
         }
         return new_params, {"stages": new_stage_states}, metrics
 
@@ -164,7 +192,7 @@ def make_fl_train_step(
         )
 
     def step(params: Tree, server_state: Tree, batch: Tree, rng: jax.Array):
-        shardmapped = jax.shard_map(
+        shardmapped = compat.shard_map(
             step_body,
             mesh=mesh,
             in_specs=(
@@ -176,10 +204,9 @@ def make_fl_train_step(
             out_specs=(
                 spec_tree(params, P()),
                 spec_tree(server_state, P()),
-                {"loss": P(), "delta_norm": P()},
+                {"loss": P(), "delta_norm": P(), "participants": P()},
             ),
-            check_vma=False,
-            axis_names=set(client_axes),
+            manual_axes=set(client_axes),
         )
         return shardmapped(params, server_state, batch, rng)
 

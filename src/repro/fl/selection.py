@@ -98,5 +98,55 @@ class OortSelector:
         return list(chosen)[:k]
 
 
+class DeadlineAwareSelector:
+    """Partial-participation selector for the runtime's deadline mode: skip
+    clients whose last observed round duration exceeded the straggler
+    deadline, but re-probe each after ``probe_every`` rounds so recovered
+    clients are re-admitted (mirrors the coordinator's backoff probing)."""
+
+    name = "deadline"
+
+    def __init__(self, deadline: float = 1.0, probe_every: int = 4, seed: int = 0):
+        self.deadline = float(deadline)
+        self.probe_every = int(probe_every)
+        self.seed = seed
+        self._dur: Dict[str, float] = {}
+        self._last_picked: Dict[str, int] = {}
+
+    def report(self, client: str, stat_util: float, duration: float) -> None:
+        self._dur[client] = float(duration)
+
+    def predicted_on_time(self, client: str) -> bool:
+        return self._dur.get(client, 0.0) <= self.deadline
+
+    def select(self, clients: Sequence[str], k: int, round_idx: int) -> List[str]:
+        k = min(k, len(clients))
+        on_time = [c for c in clients if self.predicted_on_time(c)]
+        due = [
+            c
+            for c in clients
+            if not self.predicted_on_time(c)
+            and round_idx - self._last_picked.get(c, 0) >= self.probe_every
+        ]
+        # reserve slots for due probes even when the on-time pool fills k —
+        # otherwise a recovered straggler would never get re-observed
+        n_probe = min(len(due), max(1, k // 4)) if due else 0
+        chosen = due[:n_probe] + on_time[: k - n_probe]
+        # pad from the stragglers if the on-time pool is too thin
+        for c in clients:
+            if len(chosen) >= k:
+                break
+            if c not in chosen:
+                chosen.append(c)
+        for c in chosen:
+            self._last_picked[c] = round_idx
+        return chosen[:k]
+
+
 def get_selector(name: str, **kwargs):
-    return {"all": SelectAll, "random": RandomSelector, "oort": OortSelector}[name](**kwargs)
+    return {
+        "all": SelectAll,
+        "random": RandomSelector,
+        "oort": OortSelector,
+        "deadline": DeadlineAwareSelector,
+    }[name](**kwargs)

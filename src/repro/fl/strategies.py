@@ -218,6 +218,36 @@ class FedBuff(ServerStrategy):
         return new, self.init(params)
 
 
+@dataclasses.dataclass
+class FedAsync(ServerStrategy):
+    """FedAsync (Xie et al. 2019): apply every update the moment it arrives,
+    mixing it in with a staleness-decayed rate — the ``buffer_size=1`` end of
+    the async family. Exposes the same ``accumulate/ready/apply`` surface as
+    FedBuff so the async aggregator role can drive either uniformly."""
+
+    alpha: float = 0.6
+    staleness_exp: float = 0.5
+    name: str = "fedasync"
+
+    def init(self, params: Tree) -> Tree:
+        return {"acc": tree_zeros_like(params), "count": jnp.zeros((), jnp.int32)}
+
+    def staleness_weight(self, staleness: jax.Array) -> jax.Array:
+        return 1.0 / jnp.power(1.0 + staleness.astype(jnp.float32), self.staleness_exp)
+
+    def accumulate(self, state: Tree, delta: Tree, staleness: jax.Array) -> Tree:
+        w = self.alpha * self.staleness_weight(staleness)
+        acc = jax.tree_util.tree_map(lambda a, d: a + w * d, state["acc"], delta)
+        return {"acc": acc, "count": state["count"] + 1}
+
+    def ready(self, state: Tree) -> jax.Array:
+        return state["count"] >= 1
+
+    def apply(self, params, agg_delta, state):
+        new = jax.tree_util.tree_map(lambda p, a: p + a, params, state["acc"])
+        return new, self.init(params)
+
+
 _STRATEGIES: Dict[str, Callable[..., ServerStrategy]] = {
     "fedavg": FedAvg,
     "fedprox": FedProx,
@@ -226,6 +256,7 @@ _STRATEGIES: Dict[str, Callable[..., ServerStrategy]] = {
     "fedyogi": FedYogi,
     "feddyn": FedDyn,
     "fedbuff": FedBuff,
+    "fedasync": FedAsync,
 }
 
 

@@ -38,10 +38,9 @@ def make_mesh_for_devices():
         if n % m == 0:
             model = m
             break
-    return jax.make_mesh(
-        (n // model, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    from repro import compat
+
+    return compat.make_mesh((n // model, model), ("data", "model"))
 
 
 def main(argv=None):

@@ -94,7 +94,10 @@ class TestShardingRules:
     def _mesh(self):
         from jax.sharding import AbstractMesh
 
-        return AbstractMesh((16, 16), ("data", "model"))
+        try:  # jax >= 0.5 signature: (shape, axis_names)
+            return AbstractMesh((16, 16), ("data", "model"))
+        except TypeError:  # jax 0.4.x signature: tuple of (name, size) pairs
+            return AbstractMesh((("data", 16), ("model", 16)))
 
     def test_attention_weights_column_sharded(self):
         from repro.configs import get_config

@@ -16,9 +16,11 @@ from repro.fl.strategies import get_strategy
 from repro.fl.privacy import DPConfig
 
 
+from repro import compat
+
+
 def _mesh1():
-    return jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return compat.make_mesh((1,), ("data",))
 
 
 PARAMS = {"w": jnp.array([1.0, 2.0]), "b": jnp.zeros((2, 2))}
@@ -112,11 +114,10 @@ class TestMeshLowering:
         def f(t):
             return stage_reduce_mean(t, stage)
 
-        out = jax.shard_map(
+        out = compat.shard_map(
             f, mesh=mesh,
             in_specs=(jax.sharding.PartitionSpec(),),
             out_specs=jax.sharding.PartitionSpec(),
-            check_vma=False,
         )(x)
         tol = 0.05 if wire == "int8" else 1e-2
         np.testing.assert_allclose(out["w"], x["w"], atol=tol)
