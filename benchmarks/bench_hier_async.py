@@ -1,0 +1,159 @@
+"""Hierarchical async runtime benchmark: tree round-completion time vs.
+per-tier straggler fraction.
+
+A two-level H-FL TAG (trainers -> per-group aggregators -> root) runs under
+four hierarchy-wide policy lowerings while stragglers are injected at *both*
+tiers: a fraction of the trainers in every group is slowed down, and one
+intermediate aggregator pays extra (uplink) compute time. A full-sync tree
+barriers twice per round and pays the straggler tax at both tiers; lowering
+only the root still barriers inside each group; lowering the whole tree
+(``RuntimePolicy.tiers``) caps or avoids the wait at every level.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.expansion import JobSpec
+from repro.core.runtime import RuntimePolicy, run_job
+from repro.core.tag import DatasetSpec
+from repro.core.topologies import hierarchical_fl
+
+from benchmarks.common import init_weights
+
+N_GROUPS = 2
+TRAINERS_PER_GROUP = 4
+ROUNDS = 5
+FAST_COMPUTE = 0.5  # virtual seconds of local training
+SLOW_COMPUTE = 8.0  # straggler trainer's virtual seconds
+AGG_SLOW_COMPUTE = 4.0  # straggler intermediate's relay compute time
+DEADLINE = 2.0  # deadline tiers: collection closes this long after broadcast
+
+POLICIES = ("sync-tree", "root-only", "deadline-tree", "async-tree")
+
+
+def _job(rounds: int, n_groups: int, per_group: int) -> JobSpec:
+    groups = tuple(f"g{i}" for i in range(n_groups))
+    names = [f"d{i}" for i in range(n_groups * per_group)]
+    dataset_groups = {
+        g: tuple(names[i * per_group: (i + 1) * per_group])
+        for i, g in enumerate(groups)
+    }
+    return JobSpec(
+        tag=hierarchical_fl(groups=groups, dataset_groups=dataset_groups),
+        datasets=tuple(DatasetSpec(name=n) for n in names),
+        hyperparams={"rounds": rounds, "init_weights": init_weights()},
+    )
+
+
+def _per_worker(
+    n_groups: int, per_group: int, trainer_frac: float, agg_frac: float
+) -> Dict[str, Dict[str, float]]:
+    out: Dict[str, Dict[str, float]] = {}
+    n_slow = int(round(trainer_frac * per_group))
+    for i in range(n_groups * per_group):
+        # expansion orders trainers group-by-group: slow the first
+        # ``n_slow`` of every group so each subtree sees the same fraction
+        slow = (i % per_group) < n_slow
+        out[f"trainer-{i}"] = {
+            "compute_time": SLOW_COMPUTE if slow else FAST_COMPUTE
+        }
+    n_slow_aggs = int(round(agg_frac * n_groups))
+    for i in range(n_slow_aggs):
+        out[f"aggregator-{i}"] = {"compute_time": AGG_SLOW_COMPUTE}
+    return out
+
+
+def _policy(name: str, per_group: int) -> RuntimePolicy:
+    buffer = max(2, per_group // 2)
+    # min_participants=1 keeps the deadline baselines honest: a root round
+    # must include at least one aggregate, so "root-only" pays the barriered
+    # intermediate's straggler tax instead of closing empty rounds
+    if name == "sync-tree":
+        return RuntimePolicy(mode="sync")
+    if name == "root-only":
+        return RuntimePolicy(
+            mode="deadline", deadline=DEADLINE, min_participants=1, grace=1.5
+        )
+    if name == "deadline-tree":
+        return RuntimePolicy(
+            mode="deadline", tiers={"aggregator": "deadline"},
+            deadline=DEADLINE, min_participants=1, grace=1.5,
+        )
+    if name == "async-tree":
+        return RuntimePolicy(
+            mode="async", tiers={"aggregator": "async"},
+            buffer_size=buffer, grace=1.5,
+        )
+    raise ValueError(name)
+
+
+def _mean_round_time(
+    name: str, trainer_frac: float, agg_frac: float,
+    rounds: int, n_groups: int, per_group: int,
+) -> float:
+    res = run_job(
+        _job(rounds, n_groups, per_group),
+        policy=_policy(name, per_group),
+        per_worker_hyperparams=_per_worker(
+            n_groups, per_group, trainer_frac, agg_frac
+        ),
+        timeout=120,
+    )
+    assert not res.errors, res.errors
+    glob = res.program("global-aggregator-0")
+    if hasattr(glob, "participation_log"):  # deadline root
+        times = [p["round_time"] for p in glob.participation_log]
+        return float(np.mean(times)) if times else 0.0
+    if hasattr(glob, "staleness_log"):  # async root
+        stamps = [m["virtual_time"] for m in glob.metrics if "virtual_time" in m]
+        return float(max(stamps) / max(1, len(stamps))) if stamps else 0.0
+    total = glob.ctx.now(glob.down_channel)
+    return float(total / rounds)
+
+
+def run(smoke: bool = False) -> Dict:
+    rounds = 3 if smoke else ROUNDS
+    n_groups = 2
+    per_group = 2 if smoke else TRAINERS_PER_GROUP
+    fractions = ((0.0, 0.0), (0.5, 0.5)) if smoke else (
+        (0.0, 0.0), (0.25, 0.0), (0.5, 0.5), (0.75, 0.5),
+    )
+    results: Dict[str, List[float]] = {p: [] for p in POLICIES}
+    print(
+        f"[hier-async] {n_groups} groups x {per_group} trainers, "
+        f"{rounds} rounds, slow={SLOW_COMPUTE}s fast={FAST_COMPUTE}s "
+        f"agg-slow={AGG_SLOW_COMPUTE}s deadline={DEADLINE}s"
+    )
+    header = " | ".join(f"{p:>13}" for p in POLICIES)
+    print(f"{'stragglers (t,a)':>17} | {header}")
+    for t_frac, a_frac in fractions:
+        row = []
+        for name in POLICIES:
+            row.append(
+                _mean_round_time(
+                    name, t_frac, a_frac, rounds, n_groups, per_group
+                )
+            )
+            results[name].append(row[-1])
+        cells = " | ".join(f"{t:13.2f}" for t in row)
+        print(f"{t_frac:>8.0%} {a_frac:>7.0%} | {cells}")
+    # with stragglers at both tiers, lowering the whole tree must beat both
+    # the fully barriered tree and the root-only lowering (whose
+    # intermediates still barrier on their group's stragglers)
+    idx = len(fractions) - 1
+    assert results["deadline-tree"][idx] < results["sync-tree"][idx], (
+        "deadline-tree did not beat sync-tree under stragglers"
+    )
+    assert results["deadline-tree"][idx] < results["root-only"][idx], (
+        "deadline-tree did not beat root-only lowering under stragglers"
+    )
+    assert results["async-tree"][idx] < results["sync-tree"][idx], (
+        "async-tree did not beat sync-tree under stragglers"
+    )
+    return {"fractions": [list(f) for f in fractions], **results}
+
+
+if __name__ == "__main__":
+    run()

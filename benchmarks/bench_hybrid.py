@@ -12,21 +12,13 @@ from __future__ import annotations
 
 from typing import Dict, List, Tuple
 
-import numpy as np
-
 from repro.core.channels import LinkModel
 from repro.core.expansion import JobSpec
 from repro.core.runtime import run_job
 from repro.core.tag import DatasetSpec
 from repro.core.topologies import classical_fl, hybrid_fl
 
-from benchmarks.common import (
-    HybridSGDTrainer,
-    SGDClassifierTrainer,
-    accuracy,
-    init_weights,
-    test_set,
-)
+from benchmarks.common import accuracy, init_weights, test_set
 
 N_TRAINERS = 50
 N_CLUSTERS = 5

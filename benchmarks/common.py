@@ -3,7 +3,7 @@ workload — softmax regression on the synthetic federated classification data
 — plugged into Flame roles via the user programming model (Fig. 5)."""
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict
 
 import numpy as np
 

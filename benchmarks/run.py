@@ -41,6 +41,13 @@ def main(argv=None):
         results["async"] = bench_async.run(smoke=True)
 
         print("=" * 72)
+        print("Smoke — hierarchical per-tier policies: tree round time")
+        print("=" * 72)
+        from benchmarks import bench_hier_async
+
+        results["hier_async"] = bench_hier_async.run(smoke=True)
+
+        print("=" * 72)
         print(f"smoke benchmarks passed in {time.time()-t0:.1f}s")
         if args.out:
             with open(args.out, "w") as f:
@@ -81,6 +88,13 @@ def main(argv=None):
     from benchmarks import bench_async
 
     results["async"] = bench_async.run()
+
+    print("=" * 72)
+    print("Hierarchical per-tier policies — tree round time vs stragglers")
+    print("=" * 72)
+    from benchmarks import bench_hier_async
+
+    results["hier_async"] = bench_hier_async.run()
 
     import os
 

@@ -12,7 +12,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config
 from repro.core.mesh_lowering import lower_tag_to_mesh
 from repro.core.topologies import hierarchical_fl
 from repro.fl.fedstep import FedStepConfig, init_server_state, make_fl_train_step

@@ -9,7 +9,7 @@ from __future__ import annotations
 import os
 import re
 import tempfile
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import numpy as np
@@ -60,21 +60,36 @@ def latest_step(directory: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
-def restore(directory: str, step: int, like: Tree) -> Tree:
-    """Restore into the structure of ``like`` (shape/dtype validated)."""
+def restore(directory: str, step: int, like: Tree, strict: bool = False) -> Tree:
+    """Restore into the structure of ``like`` (shape/dtype validated).
+
+    With ``strict=True`` the checkpoint must contain *exactly* the keys of
+    ``like``: extra/unknown keys are rejected instead of silently dropped —
+    the safe mode for policy-server state trees whose schema evolves
+    (version, weights, staleness_log, ...).
+    """
     path = os.path.join(directory, f"ckpt_{step:08d}.npz")
     with np.load(path) as data:
         flat = {k: data[k] for k in data.files}
     paths, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
+    seen = set()
     for path_keys, leaf in paths:
         key = _SEP.join(_key_str(k) for k in path_keys)
         if key not in flat:
             raise KeyError(f"checkpoint missing key {key!r}")
+        seen.add(key)
         arr = flat[key]
         if tuple(arr.shape) != tuple(np.shape(leaf)):
             raise ValueError(
                 f"shape mismatch for {key!r}: ckpt {arr.shape} vs tree {np.shape(leaf)}"
             )
         leaves.append(arr.astype(np.asarray(leaf).dtype))
+    if strict:
+        extra = sorted(set(flat) - seen)
+        if extra:
+            raise KeyError(
+                f"checkpoint has {len(extra)} unknown key(s) not in the "
+                f"restore tree: {extra}"
+            )
     return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -7,9 +7,9 @@ smoke-test variant (2 layers, d_model<=512, <=4 experts).
 from __future__ import annotations
 
 import importlib
-from typing import Dict, List
+from typing import Dict
 
-from repro.models.config import ModelConfig, SHAPES, ShapeConfig
+from repro.models.config import ModelConfig
 
 ARCH_IDS = [
     "deepseek_7b",

@@ -1,9 +1,8 @@
 """Flame core: TAG abstraction, expansion, composer, channels, mesh lowering."""
-from repro.core.tag import TAG, Channel, DatasetSpec, FuncTags, Role, TagError, diff_tags
-from repro.core.expansion import JobSpec, WorkerConfig, expand
-from repro.core.registry import ComputeSpec, ResourceRegistry, realm_matches
-from repro.core.composer import Chain, CloneComposer, Composer, Loop, Tasklet
+from repro.core import topologies
 from repro.core.channels import ChannelManager, InprocBackend, LinkModel, payload_bytes
+from repro.core.composer import Chain, CloneComposer, Composer, Loop, Tasklet
+from repro.core.expansion import JobSpec, WorkerConfig, expand
 from repro.core.mesh_lowering import (
     AggregationPlan,
     AggregationStage,
@@ -11,7 +10,8 @@ from repro.core.mesh_lowering import (
     lower_tag_to_mesh,
     stage_reduce_mean,
 )
-from repro.core import topologies
+from repro.core.registry import ComputeSpec, ResourceRegistry, realm_matches
+from repro.core.tag import TAG, Channel, DatasetSpec, FuncTags, Role, TagError, diff_tags
 
 __all__ = [
     "TAG", "Channel", "Role", "FuncTags", "DatasetSpec", "TagError", "diff_tags",

@@ -141,6 +141,11 @@ class ChannelEnd:
     def peek(self, end: str) -> Optional[Any]:
         return self._backend.peek(self.channel, self.group, self.me, end)
 
+    def earliest(self, ends: Sequence[str]) -> Optional[Tuple[float, str]]:
+        """Non-consuming ``(arrival, end)`` of the earliest available message
+        from any of ``ends`` on this channel, or ``None``."""
+        return self._backend.earliest(self.channel, self.group, self.me, ends)
+
     def broadcast(self, msg: Any) -> None:
         for end in self.ends():
             self.send(end, msg)
@@ -179,6 +184,7 @@ class InprocBackend:
         self._broker_free_at: Dict[str, float] = collections.defaultdict(float)
         self._clock: Dict[str, float] = collections.defaultdict(float)  # per-worker
         self._drop_at: Dict[str, float] = {}  # worker -> scheduled dropout time
+        self._poisoned: Dict[str, float] = {}  # worker -> orphaned-at time
         self.stats: Dict[str, float] = collections.defaultdict(float)
 
     # ------------------------- configuration -------------------------- #
@@ -201,10 +207,32 @@ class InprocBackend:
     def clear_drop(self, worker: str) -> None:
         with self._lock:
             self._drop_at.pop(worker, None)
+            self._poisoned.pop(worker, None)
 
     def drop_time(self, worker: str) -> Optional[float]:
         with self._lock:
             return self._drop_at.get(worker)
+
+    def poison(self, worker: str, at: float) -> None:
+        """Mark ``worker`` as orphaned at virtual time ``at`` (its sole
+        upstream peer died with no re-join scheduled). Any blocked or future
+        receive by the worker raises ``WorkerDropped`` immediately, so the
+        orphan is surfaced instead of hanging until its recv timeout."""
+        with self._cv:
+            self._poisoned[worker] = float(at)
+            self._cv.notify_all()
+
+    def check_poison(self, worker: str) -> None:
+        """Raise ``WorkerDropped`` if ``worker`` has been poisoned."""
+        with self._lock:
+            at = self._poisoned.get(worker)
+        if at is not None:
+            raise WorkerDropped(worker, at)
+
+    def _check_poison_locked(self, worker: str) -> None:
+        at = self._poisoned.get(worker)
+        if at is not None:
+            raise WorkerDropped(worker, at)
 
     def _check_alive(self, worker: str, new_time: float) -> None:
         """Raise WorkerDropped if moving ``worker``'s clock to ``new_time``
@@ -270,10 +298,32 @@ class InprocBackend:
             )
             self._cv.notify_all()
 
+    def _get_msg(
+        self, channel: str, group: str, me: str, end: str, timeout: Optional[float]
+    ) -> Message:
+        """Blocking single-box take on the delivery condition variable, so a
+        ``poison`` call interrupts a blocked receiver immediately. Caller must
+        NOT hold the lock. Raises ``queue.Empty`` on timeout."""
+        box = self._box(channel, group, me, end)
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            while True:
+                self._check_poison_locked(me)
+                try:
+                    return box.get_nowait()
+                except queue.Empty:
+                    pass
+                remaining = (
+                    None if deadline is None else deadline - time.monotonic()
+                )
+                if remaining is not None and remaining <= 0:
+                    raise queue.Empty
+                self._cv.wait(timeout=remaining)
+
     def recv(
         self, channel: str, group: str, me: str, end: str, timeout: Optional[float]
     ) -> Any:
-        msg = self._box(channel, group, me, end).get(timeout=timeout)
+        msg = self._get_msg(channel, group, me, end, timeout)
         with self._lock:
             self._check_alive(me, msg.arrival)
             self._clock[me] = max(self._clock[me], msg.arrival)
@@ -301,15 +351,8 @@ class InprocBackend:
         deadline = None if timeout is None else time.monotonic() + timeout
         with self._cv:
             while True:
-                best: Optional[Tuple[float, str]] = None
-                for end in ends:
-                    box = self._box(channel, group, me, end)
-                    try:
-                        arrival = box.queue[0].arrival  # type: ignore[attr-defined]
-                    except IndexError:
-                        continue
-                    if best is None or arrival < best[0]:
-                        best = (arrival, end)
+                self._check_poison_locked(me)
+                best = self._earliest_locked(channel, group, me, ends)
                 if best is not None:
                     _, end = best
                     msg = self._box(channel, group, me, end).get_nowait()
@@ -325,6 +368,31 @@ class InprocBackend:
                 if not self._cv.wait(timeout=remaining):
                     raise queue.Empty
 
+    def _earliest_locked(
+        self, channel: str, group: str, me: str, ends: Sequence[str]
+    ) -> Optional[Tuple[float, str]]:
+        best: Optional[Tuple[float, str]] = None
+        for end in ends:
+            box = self._box(channel, group, me, end)
+            try:
+                arrival = box.queue[0].arrival  # type: ignore[attr-defined]
+            except IndexError:
+                continue
+            if best is None or arrival < best[0]:
+                best = (arrival, end)
+        return best
+
+    def earliest(
+        self, channel: str, group: str, me: str, ends: Sequence[str]
+    ) -> Optional[Tuple[float, str]]:
+        """Non-consuming query: ``(arrival, end)`` of the earliest available
+        message from any of ``ends``, or ``None``. Lets a worker that listens
+        on several channels (an intermediate aggregator: trainers below, the
+        root above) pick the globally earliest message — see
+        ``recv_any_multi``."""
+        with self._lock:
+            return self._earliest_locked(channel, group, me, ends)
+
     def recv_fifo(
         self,
         channel: str,
@@ -336,7 +404,7 @@ class InprocBackend:
         """Drain one message from each end, yielding in emulated-arrival order."""
         msgs: List[Tuple[float, str, Any]] = []
         for end in ends:
-            m = self._box(channel, group, me, end).get(timeout=timeout)
+            m = self._get_msg(channel, group, me, end, timeout)
             msgs.append((m.arrival, end, m.payload))
         msgs.sort(key=lambda t: t[0])
         with self._lock:
@@ -369,6 +437,56 @@ class InprocBackend:
         """Force a worker's clock forward to ``at`` (arrival / re-join)."""
         with self._lock:
             self._clock[worker] = max(self._clock[worker], float(at))
+
+
+def recv_any_multi(
+    sources: Sequence[Tuple[ChannelEnd, Sequence[str]]],
+    timeout: Optional[float] = None,
+    poll: float = 0.005,
+) -> Tuple[ChannelEnd, str, Any, float]:
+    """Earliest available message across *several channels*.
+
+    ``sources`` is ``[(channel_end, candidate_peers), ...]`` — typically an
+    intermediate aggregator's down channel (trainer updates) and up channel
+    (root broadcasts), which live on different backends and therefore cannot
+    share one condition variable. Returns ``(end, src, payload, arrival)``
+    for the globally earliest message, advancing the receiver's clock on the
+    winning backend only (callers bridge clocks across backends themselves).
+
+    Raises ``queue.Empty`` on timeout and ``WorkerDropped`` if the receiver
+    is poisoned/dropped on any involved backend.
+    """
+
+    def _scan() -> Optional[Tuple[float, ChannelEnd, str]]:
+        best: Optional[Tuple[float, ChannelEnd, str]] = None
+        for end, peers in sources:
+            if not peers:
+                continue
+            cand = end.earliest(peers)
+            if cand is not None and (best is None or cand[0] < best[0]):
+                best = (cand[0], end, cand[1])
+        return best
+
+    deadline = None if timeout is None else time.monotonic() + timeout
+    while True:
+        best = _scan()
+        if best is not None:
+            # settle: near-simultaneous wall-clock senders may not all have
+            # enqueued yet — one short extra poll keeps virtual-arrival order
+            # from being decided by thread scheduling (kept well under the
+            # idle poll so the per-message overhead stays negligible)
+            time.sleep(min(poll, 0.002))
+            best = _scan() or best
+            _, end, src = best
+            # single-consumer mailboxes: the message seen by earliest() can
+            # only be taken by us, so a short timeout is a safety net
+            s, payload, arrival = end.recv_any([src], timeout=1.0)
+            return end, s, payload, arrival
+        for end, _ in sources:
+            end._backend.check_poison(end.me)
+        if deadline is not None and time.monotonic() >= deadline:
+            raise queue.Empty
+        time.sleep(poll)
 
 
 _BACKEND_FACTORIES: Dict[str, Callable[[], InprocBackend]] = {}

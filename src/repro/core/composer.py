@@ -11,7 +11,7 @@ re-chaining or touching the core library.
 from __future__ import annotations
 
 import threading
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional
 
 _current_composer = threading.local()
 

@@ -19,7 +19,7 @@ import itertools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.registry import ResourceRegistry
-from repro.core.tag import DEFAULT_GROUP, DatasetSpec, Role, TAG, TagError
+from repro.core.tag import DEFAULT_GROUP, TAG, DatasetSpec, Role, TagError
 
 
 @dataclasses.dataclass(frozen=True)

@@ -174,7 +174,7 @@ def _wire_sum(x: jax.Array, stage: AggregationStage) -> jax.Array:
             g.astype(jnp.float32), axis=tuple(range(n_lead))
         )
     if wire == "int8":
-        from repro.fl.compression import dequantize_int8, quantize_int8
+        from repro.fl.compression import quantize_int8
 
         q, scale = quantize_int8(x)
         gq = gather_all(q)

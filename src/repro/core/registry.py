@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Tuple
 
 from repro.core.tag import DatasetSpec
 

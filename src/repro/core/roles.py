@@ -11,12 +11,13 @@ Table 3 is done over these files in the benchmark suite).
 from __future__ import annotations
 
 import abc
+import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.channels import ChannelEnd, ChannelManager
-from repro.core.composer import Chain, CloneComposer, Composer, Loop, Tasklet
+from repro.core.composer import CloneComposer, Composer, Loop, Tasklet
 from repro.core.expansion import WorkerConfig
 from repro.core.tag import TAG
 
@@ -54,6 +55,40 @@ class RoleContext:
 
     def now(self, channel: str) -> float:
         return self.channels.backend(channel).now(self.worker.worker_id)
+
+
+def bridge_clock(ctx: "RoleContext", channel: str) -> None:
+    """Carry a worker's latest virtual time onto ``channel``'s backend.
+
+    A node on several channels (an intermediate aggregator: receiver below,
+    sender above) has one clock per backend; without bridging, a send on the
+    other channel would depart *before* the work that produced it finished,
+    undercounting tree round times."""
+    me = ctx.worker.worker_id
+    t = max(ctx.now(c) for c in ctx.worker.groups)
+    ctx.channels.backend(channel).set_clock(me, t)
+
+
+def await_peer(ctx: "RoleContext", end: "ChannelEnd", timeout: float = 5.0) -> str:
+    """First peer on ``end``, waiting out transient empty membership.
+
+    During a dropout/re-join window a parent briefly leaves its channels; a
+    child probing ``ends()`` right then must wait for the re-join (or for its
+    own orphan poison) instead of crashing on an empty peer list."""
+    backend = ctx.channels.backend(end.channel)
+    me = ctx.worker.worker_id
+    deadline = time.monotonic() + timeout
+    while True:
+        peers = end.ends()
+        if peers:
+            return peers[0]
+        backend.check_poison(me)
+        if time.monotonic() >= deadline:
+            raise RuntimeError(
+                f"{me}: no peer on channel {end.channel!r} after {timeout}s "
+                "(did the only upstream worker drop without a re-join?)"
+            )
+        time.sleep(0.01)
 
 
 def weighted_mean(
@@ -150,8 +185,7 @@ class Trainer(Role):
     # ----------------------------- tasklets --------------------------- #
     def fetch(self) -> None:
         end = self.ctx.end(self.param_channel)
-        aggs = end.ends()
-        msg = end.recv(aggs[0])
+        msg = end.recv(await_peer(self.ctx, end))
         self.weights = msg["weights"]
         self._server_version = msg.get("version", self._server_version)
         self._work_done = bool(msg.get("done", False))
@@ -167,7 +201,7 @@ class Trainer(Role):
         update = {"weights": self.weights, "num_samples": self.num_samples}
         if self._server_version is not None:
             update["version"] = self._server_version
-        end.send(end.ends()[0], update)
+        end.send(await_peer(self.ctx, end), update)
 
     def compose(self) -> None:
         with Composer() as composer:
@@ -222,22 +256,24 @@ class Aggregator(_AggregatorBase):
 
     def fetch(self) -> None:
         end = self.ctx.end(self.up_channel)
-        msg = end.recv(end.ends()[0])
+        msg = end.recv(await_peer(self.ctx, end))
         self.weights = msg["weights"]
         self._server_version = msg.get("version", self._server_version)
         self._work_done = bool(msg.get("done", False))
+        bridge_clock(self.ctx, self.down_channel)
 
     def upload(self) -> None:
         if self._work_done:
             return
         end = self.ctx.end(self.up_channel)
+        bridge_clock(self.ctx, self.up_channel)
         self.ctx.advance_clock(
             self.up_channel, float(self.config.get("compute_time", 0.0))
         )
         update = {"weights": self.weights, "num_samples": self.agg_samples}
         if self._server_version is not None:
             update["version"] = self._server_version
-        end.send(end.ends()[0], update)
+        end.send(await_peer(self.ctx, end), update)
 
     def compose(self) -> None:
         with Composer() as composer:

@@ -1,7 +1,8 @@
-"""Asynchronous / semi-synchronous root-aggregator programs.
+"""Asynchronous / semi-synchronous aggregator programs (root + intermediate).
 
 These are the lowering targets of ``repro.core.runtime.RuntimePolicy``: the
-same TAG whose root role is a ``GlobalAggregator`` subclass executes
+same TAG whose aggregation tree is built from ``GlobalAggregator`` /
+``Aggregator`` subclasses executes
 
 * ``mode="sync"``     — the classic barriered rounds (unchanged base class);
 * ``mode="deadline"`` — semi-sync partial participation: each round closes at
@@ -11,20 +12,32 @@ same TAG whose root role is a ``GlobalAggregator`` subclass executes
   al. 2022): the server reacts to whichever trainer finishes first, weights
   each update by its staleness, and applies the buffer every K updates.
 
-``make_policy_program(base_cls, mode)`` grafts the matching mixin onto the
-user's aggregator class, so user-defined ``initialize``/``evaluate`` hooks
-survive the policy lowering — the paper's "deployment detail, not application
-logic" claim extended to execution semantics.
+Policy lowering is *hierarchy-wide*: ``RuntimePolicy.tiers`` assigns a mode
+per role, so an intermediate H-FL aggregator can collect from its group under
+its own deadline (``DeadlineAggregatorMixin``) or FedBuff buffer
+(``AsyncAggregatorMixin``) and relay staleness-annotated partial aggregates
+upward, independent of the root's mode. Version vectors propagate down with
+broadcasts (root version echoed upward, local sub-version echoed by trainers)
+so every tier staleness-weights correctly.
+
+``make_policy_program(base_cls, mode)`` grafts the matching mixin family onto
+the user's aggregator class — root mixins for ``GlobalAggregator`` subclasses,
+intermediate mixins for ``Aggregator`` subclasses — so user-defined
+``initialize``/``evaluate`` hooks survive the policy lowering: the paper's
+"deployment detail, not application logic" claim extended to execution
+semantics over the whole aggregation tree.
 """
 from __future__ import annotations
 
 import queue
+import time
 from typing import Any, Dict, List, Optional, Tuple, Type
 
 import numpy as np
 
+from repro.core.channels import WorkerDropped, recv_any_multi
 from repro.core.composer import Composer, Loop, Tasklet
-from repro.core.roles import Role, weighted_mean
+from repro.core.roles import Role, await_peer, bridge_clock, weighted_mean
 
 
 def _tree_sub(a: Any, b: Any) -> Any:
@@ -33,16 +46,67 @@ def _tree_sub(a: Any, b: Any) -> Any:
     return jax.tree_util.tree_map(lambda x, y: np.asarray(x) - np.asarray(y), a, b)
 
 
-def _tree_add_scaled(params: Any, delta: Any, scale: float) -> Any:
+def _tree_copy(t: Any) -> Any:
     import jax
 
-    return jax.tree_util.tree_map(
-        lambda p, d: np.asarray(p) + scale * np.asarray(d), params, delta
-    )
+    return jax.tree_util.tree_map(np.asarray, t)
 
 
-class _PolicyRootBase:
-    """Shared policy plumbing for the deadline/async root mixins."""
+class _SnapshotStore:
+    """Bounded per-version weight snapshots for staleness-based deltas.
+
+    A policy server needs the snapshot a trainer *trained from* to compute
+    the update's delta. Keeping every version leaks memory over a long async
+    run, so the store keeps only versions within the maximum staleness
+    observed so far (plus a one-version safety margin) and clamps requests
+    for evicted versions to the oldest retained snapshot, reporting the
+    clamp so the caller can log the *effective* staleness it weighted with.
+    """
+
+    def __init__(self) -> None:
+        self._snaps: Dict[int, Any] = {}
+        self._window = 1  # max staleness observed so far
+
+    def __len__(self) -> int:
+        return len(self._snaps)
+
+    def versions(self) -> List[int]:
+        return sorted(self._snaps)
+
+    @property
+    def window(self) -> int:
+        return self._window
+
+    def put(self, version: int, weights: Any, keep_from: Optional[int] = None) -> None:
+        """Store ``version`` and evict what no live client can still need.
+
+        ``keep_from`` is the version-vector floor: the oldest version any
+        currently-tracked client was last handed (minus an in-flight margin).
+        Without it, eviction falls back to the observed-staleness window
+        alone, and a straggler past the window gets a clamped base."""
+        self._snaps[version] = weights
+        floor = version - self._window - 1
+        if keep_from is not None:
+            floor = min(floor, keep_from)
+        for v in [v for v in self._snaps if v < floor]:
+            del self._snaps[v]
+
+    def base_for(self, trained_from: int, current: int) -> Tuple[Any, int, bool]:
+        """``(base_weights, effective_staleness, clamped)`` for an update that
+        trained from ``trained_from`` while the server is at ``current``."""
+        if trained_from in self._snaps:
+            staleness = max(0, current - trained_from)
+            clamped = False
+        else:
+            trained_from = min(self._snaps)
+            staleness = max(0, current - trained_from)
+            clamped = True
+        self._window = max(self._window, staleness)
+        return self._snaps[trained_from], staleness, clamped
+
+
+class _PolicyBase:
+    """Shared policy plumbing for the deadline/async mixins (any tier)."""
 
     def _policy(self) -> Any:
         pol = self.config.get("runtime_policy")
@@ -56,40 +120,24 @@ class _PolicyRootBase:
     def _trainers(self) -> List[str]:
         return sorted(self._down().ends())
 
+    def _collect_deadline(
+        self, expected: List[str], version: int, round_start: float
+    ) -> Tuple[List[Tuple[str, Any, float]], List[Tuple[str, Any, float]], set, float]:
+        """Drain ``version``-stamped updates from ``expected`` until the
+        straggler deadline (virtual clock) or the wall-clock grace expires.
 
-class DeadlineRootMixin(_PolicyRootBase):
-    """Per-round straggler deadline on the virtual clock (semi-sync)."""
-
-    def __init__(self, ctx) -> None:
-        super().__init__(ctx)
-        self._version = 0
-        self._round_start = 0.0
-        self._expected: List[str] = []
-        self.participation_log: List[Dict[str, Any]] = []
-
-    # --------------------------- tasklets ----------------------------- #
-    def begin_round(self) -> None:
-        end = self._down()
-        self._expected = self._trainers()
-        self._round_start = self.ctx.now(self.down_channel)
-        for t in self._expected:
-            end.send(
-                t,
-                {"weights": self.weights, "done": False, "version": self._version},
-            )
-
-    def collect(self) -> None:
+        Returns ``(on_time, late, remaining, round_end)`` — each update as
+        ``(src, msg, arrival)`` — after advancing this worker's down-channel
+        clock to the round end (and honoring its own dropout schedule)."""
         pol = self._policy()
-        deadline = self._round_start + float(pol.deadline)
+        deadline = round_start + float(pol.deadline)
         end = self._down()
-        remaining = set(self._expected)
+        remaining = set(expected)
         arrived: List[Tuple[str, Any, float]] = []
-        import time as _time
-
-        grace_end = _time.monotonic() + float(pol.grace)
+        grace_end = time.monotonic() + float(pol.grace)
         backend = self.ctx.channels.backend(self.down_channel)
         while remaining:
-            timeout = grace_end - _time.monotonic()
+            timeout = grace_end - time.monotonic()
             if timeout <= 0:
                 break
             # peers already scheduled to drop before this round's deadline
@@ -110,7 +158,7 @@ class DeadlineRootMixin(_PolicyRootBase):
                 if not live:
                     break
                 continue
-            if msg.get("version") != self._version:
+            if msg.get("version") != version:
                 continue  # stale leftover from a missed deadline: discard
             arrived.append((src, msg, arrival))
             remaining.discard(src)
@@ -125,20 +173,63 @@ class DeadlineRootMixin(_PolicyRootBase):
             on_time.extend(late[:need])
             late = late[need:]
 
+        # the round closes at the deadline when anyone was cut or missing,
+        # else at the last on-time arrival
+        cut = bool(late) or bool(remaining)
+        last_arrival = max((a[2] for a in on_time), default=round_start)
+        round_end = max(deadline if cut else last_arrival, last_arrival)
+        if not np.isfinite(round_end):
+            round_end = last_arrival
+        me = self.ctx.worker.worker_id
+        backend.set_clock(me, round_end)
+        drop_at = backend.drop_time(me)
+        if drop_at is not None and round_end > drop_at:
+            raise WorkerDropped(me, drop_at)
+        return on_time, late, remaining, round_end
+
+
+class _DeadlineBase(_PolicyBase):
+    """Shared round plumbing of the deadline root and intermediate mixins:
+    version-stamped round opening, deadline-bounded collection with
+    participation logging, and the sub-round version counter."""
+
+    def __init__(self, ctx) -> None:
+        super().__init__(ctx)
+        self._version = 0
+        self._round_start = 0.0
+        self._expected: List[str] = []
+        self.participation_log: List[Dict[str, Any]] = []
+
+    def _open_round(self, done: bool = False) -> None:
+        """Stamp the current weights with the sub-round version (echoed by
+        the group, used to discard leftovers from missed deadlines) and
+        start the round clock."""
+        end = self._down()
+        self._expected = self._trainers()
+        self._round_start = self.ctx.now(self.down_channel)
+        for t in self._expected:
+            end.send(
+                t,
+                {"weights": self.weights, "done": done, "version": self._version},
+            )
+
+    def _close_round(self) -> None:
+        """Collect under the deadline, fold the on-time updates into the
+        model, log participation and bump the sub-round version."""
+        on_time, late, remaining, round_end = self._collect_deadline(
+            self._expected, self._version, self._round_start
+        )
         agg, total = weighted_mean(
             [(m["weights"], float(m.get("num_samples", 1))) for _, m, _ in on_time]
         )
         if agg is not None:
-            self.weights = agg
+            self.agg_weights = agg
             self.agg_samples = int(total)
-        # the round closes at the deadline when anyone was cut or missing,
-        # else at the last on-time arrival
-        cut = bool(late) or bool(remaining)
-        last_arrival = max((a[2] for a in on_time), default=self._round_start)
-        round_end = max(deadline if cut else last_arrival, last_arrival)
-        if not np.isfinite(round_end):
-            round_end = last_arrival
-        backend.set_clock(self.ctx.worker.worker_id, round_end)
+            self.weights = agg
+        else:
+            # nothing arrived on time: keep the current model and carry zero
+            # sample weight so an upstream tier ignores the relay
+            self.agg_samples = 0
         self.participation_log.append(
             {
                 "round": self._version,
@@ -150,13 +241,31 @@ class DeadlineRootMixin(_PolicyRootBase):
         )
         self._version += 1
 
+
+class DeadlineRootMixin(_DeadlineBase):
+    """Per-round straggler deadline on the virtual clock (semi-sync root)."""
+
+    # --------------------------- tasklets ----------------------------- #
+    def begin_round(self) -> None:
+        self._open_round()
+
+    def collect(self) -> None:
+        self._close_round()
+
     def check_rounds(self) -> None:
+        if not self.participation_log:
+            raise RuntimeError(
+                "DeadlineRootMixin.check_rounds ran with an empty "
+                "participation_log: the deadline workflow requires "
+                "begin_round >> collect before check_rounds — did a subclass "
+                "reorder the tasklet chain?"
+            )
         self._round += 1
         self.metrics.append(
-            {"round": self._round, **{
-                k: v for k, v in self.participation_log[-1].items()
-                if k == "round_time"
-            }}
+            {
+                "round": self._round,
+                "round_time": self.participation_log[-1]["round_time"],
+            }
         )
         if self._round >= self.rounds:
             self._work_done = True
@@ -181,23 +290,19 @@ class DeadlineRootMixin(_PolicyRootBase):
             ) >> tl_end
 
 
-class AsyncRootMixin(_PolicyRootBase):
-    """FedBuff-style buffered asynchronous aggregation.
-
-    The server is purely reactive: it processes updates in virtual-arrival
-    order (``recv_any``), weights each by staleness (server version now minus
-    version the client trained from), and applies the buffered average every
-    ``buffer_size`` updates. Trainers never barrier — each gets fresh weights
-    back immediately after its upload is absorbed.
-    """
+class _BufferedAsyncBase(_PolicyBase):
+    """Shared FedBuff machinery of the async root and async intermediate."""
 
     def __init__(self, ctx) -> None:
         super().__init__(ctx)
         self._version = 0
-        self._snapshots: Dict[int, Any] = {}
+        self._snapshots = _SnapshotStore()
         self._strategy = None
         self._strategy_state = None
         self._greeted: set = set()
+        # client -> last version handed to it (the downward version vector);
+        # bounds snapshot eviction so a slow client's base stays available
+        self._version_vector: Dict[str, int] = {}
         self.staleness_log: List[Dict[str, Any]] = []
 
     def _init_strategy(self) -> None:
@@ -225,15 +330,78 @@ class AsyncRootMixin(_PolicyRootBase):
             )
         self._strategy_state = self._strategy.init(self.weights)
 
+    def _send_weights(self, end, client: str, version: int, done: bool = False) -> None:
+        """Send the current weights to ``client`` and record the handed-out
+        version in the version vector (drives snapshot retention)."""
+        self._version_vector[client] = version
+        end.send(
+            client, {"weights": self.weights, "done": done, "version": version}
+        )
+
+    def _snapshot_floor(self) -> int:
+        """Oldest version a tracked client may still be training from: its
+        last handed version minus one (an upload based on the *previous*
+        hand-out can still be in flight when a new one is sent)."""
+        if not self._version_vector:
+            return self._version
+        return min(self._version_vector.values()) - 1
+
+    def _prune_version_vector(self, members: set) -> None:
+        """Forget clients that left the channel so a dead straggler cannot
+        pin old snapshots in memory forever."""
+        for t in [t for t in self._version_vector if t not in members]:
+            del self._version_vector[t]
+
+    def _absorb(self, src: str, msg: Any, arrival: float) -> bool:
+        """Staleness-weight one update into the buffer; on a buffer flush,
+        apply it, bump the local version and snapshot. Returns True when a
+        new version was produced."""
+        # an unstamped update (sync-tier sender) counts as fresh, not maximal
+        trained_from = int(msg.get("version", self._version))
+        base, staleness, clamped = self._snapshots.base_for(
+            trained_from, self._version
+        )
+        delta = _tree_sub(msg["weights"], base)
+        self._strategy_state = self._strategy.accumulate(
+            self._strategy_state, delta, np.int32(staleness)
+        )
+        entry = {
+            "src": src, "staleness": staleness, "version": self._version,
+            "arrival": arrival,
+        }
+        if clamped:
+            entry["clamped"] = True
+        self.staleness_log.append(entry)
+        if not bool(self._strategy.ready(self._strategy_state)):
+            return False
+        new_w, self._strategy_state = self._strategy.apply(
+            self.weights, None, self._strategy_state
+        )
+        self.weights = _tree_copy(new_w)
+        self._version += 1
+        self._snapshots.put(
+            self._version, self.weights, keep_from=self._snapshot_floor()
+        )
+        return True
+
+
+class AsyncRootMixin(_BufferedAsyncBase):
+    """FedBuff-style buffered asynchronous aggregation at the root.
+
+    The server is purely reactive: it processes updates in virtual-arrival
+    order (``recv_any``), weights each by staleness (server version now minus
+    version the client trained from), and applies the buffered average every
+    ``buffer_size`` updates. Trainers never barrier — each gets fresh weights
+    back immediately after its upload is absorbed.
+    """
+
     def bootstrap(self) -> None:
         self._init_strategy()
-        import jax
-
-        self._snapshots[0] = jax.tree_util.tree_map(np.asarray, self.weights)
+        self._snapshots.put(0, _tree_copy(self.weights))
         end = self._down()
         self._greeted = set(self._trainers())
         for t in sorted(self._greeted):
-            end.send(t, {"weights": self.weights, "done": False, "version": 0})
+            self._send_weights(end, t, 0)
 
     def _target_versions(self) -> int:
         pol = self._policy()
@@ -242,8 +410,6 @@ class AsyncRootMixin(_PolicyRootBase):
         return self.rounds
 
     def serve(self) -> None:
-        import jax
-
         pol = self._policy()
         end = self._down()
         trainers = self._trainers()
@@ -254,11 +420,9 @@ class AsyncRootMixin(_PolicyRootBase):
         # channel: dynamic membership — they start from the current weights
         current = set(trainers)
         for t in sorted(current - self._greeted):
-            end.send(
-                t,
-                {"weights": self.weights, "done": False, "version": self._version},
-            )
+            self._send_weights(end, t, self._version)
         self._greeted = current  # forget leavers so a re-join is greeted again
+        self._prune_version_vector(current)
         try:
             src, msg, arrival = end.recv_any(trainers, timeout=float(pol.grace))
         except queue.Empty:
@@ -277,35 +441,183 @@ class AsyncRootMixin(_PolicyRootBase):
             )
             self._work_done = True
             return
-        trained_from = int(msg.get("version", self._version))
-        staleness = max(0, self._version - trained_from)
-        base = self._snapshots.get(trained_from, self._snapshots[self._version])
-        delta = _tree_sub(msg["weights"], base)
-        self._strategy_state = self._strategy.accumulate(
-            self._strategy_state, delta, np.int32(staleness)
-        )
-        self.staleness_log.append(
-            {"src": src, "staleness": staleness, "version": self._version,
-             "arrival": arrival}
-        )
-        if bool(self._strategy.ready(self._strategy_state)):
-            new_w, self._strategy_state = self._strategy.apply(
-                self.weights, None, self._strategy_state
-            )
-            self.weights = jax.tree_util.tree_map(np.asarray, new_w)
-            self._version += 1
+        # a zero-sample relay (an intermediate whose whole group missed its
+        # deadline) carries no training content: absorbing it would fill a
+        # buffer slot, dilute the flushed aggregate and advance the version
+        # on nothing — skip it, but still hand fresh weights back
+        if float(msg.get("num_samples", 1)) > 0 and self._absorb(src, msg, arrival):
             self._round = self._version
-            self._snapshots[self._version] = self.weights
             self.evaluate()
             self.metrics.append({"round": self._version, "virtual_time": arrival})
             if self._version >= self._target_versions():
                 self._work_done = True
                 return
         # hand the uploader fresh weights so it keeps training (no barrier)
-        end.send(
-            src,
-            {"weights": self.weights, "done": False, "version": self._version},
+        self._send_weights(end, src, self._version)
+
+    def finish(self) -> None:
+        end = self._down()
+        for t in self._trainers():
+            end.send(t, {"weights": self.weights, "done": True})
+
+    def compose(self) -> None:
+        with Composer() as composer:
+            self.composer = composer
+            tl_init = Tasklet("init", self.initialize)
+            tl_boot = Tasklet("bootstrap", self.bootstrap)
+            tl_serve = Tasklet("serve", self.serve)
+            tl_finish = Tasklet("finish", self.finish)
+            loop = Loop(loop_check_fn=lambda: self._work_done)
+            tl_init >> tl_boot >> loop(tl_serve) >> tl_finish
+
+
+# ====================================================================== #
+# Intermediate-aggregator mixins (hierarchy-wide lowering)
+# ====================================================================== #
+class DeadlineAggregatorMixin(_DeadlineBase):
+    """Per-sub-round straggler deadline for an intermediate aggregator.
+
+    Keeps the base ``Aggregator`` chain shape (fetch >> distribute >>
+    aggregate >> upload), so it interoperates with *any* root policy: only
+    the group collection is deadline-bounded. Broadcasts stamp a local
+    sub-round version (echoed by the trainers, used to discard leftovers
+    from missed deadlines) while uploads echo the root's version — set by
+    the base ``Aggregator.fetch`` — so the root staleness-weights the
+    relayed aggregate correctly.
+    """
+
+    def distribute(self) -> None:
+        self._open_round(done=self._work_done)
+
+    def aggregate(self) -> None:
+        if self._work_done:
+            return  # peers were just told to exit; nothing will arrive
+        self._close_round()
+
+class AsyncAggregatorMixin(_BufferedAsyncBase):
+    """FedBuff-style buffered aggregation at an intermediate tier.
+
+    The node is simultaneously a receiver (trainer updates on the down
+    channel) and a sender (partial aggregates on the up channel):
+    ``serve()`` multiplexes both directions in virtual-arrival order via
+    ``recv_any_multi``. Trainer staleness is measured against the node's
+    *local* sub-version; every buffer flush relays the partial aggregate
+    upward annotated with the flushed updates' staleness
+    (``tier_staleness``) and the last root version seen (``version``), so
+    the root's own staleness weighting stays correct. A root broadcast
+    rebases the node: the new global weights become the next local version.
+    """
+
+    def __init__(self, ctx) -> None:
+        super().__init__(ctx)
+        self._root_version: Optional[int] = None
+        self._buffer_samples = 0.0
+        self._buffer_staleness: List[int] = []
+        self.relay_log: List[Dict[str, Any]] = []
+
+    def _up(self):
+        return self.ctx.end(self.up_channel)
+
+    def bootstrap(self) -> None:
+        up = self._up()
+        msg = up.recv(await_peer(self.ctx, up))
+        self.weights = msg["weights"]
+        self._root_version = msg.get("version")
+        self._work_done = bool(msg.get("done", False))
+        self._init_strategy()
+        bridge_clock(self.ctx, self.down_channel)
+        self._snapshots.put(0, _tree_copy(self.weights))
+        if self._work_done:
+            return
+        end = self._down()
+        self._greeted = set(self._trainers())
+        for t in sorted(self._greeted):
+            self._send_weights(end, t, 0)
+
+    def serve(self) -> None:
+        pol = self._policy()
+        down = self._down()
+        up = self._up()
+        trainers = self._trainers()
+        current = set(trainers)
+        for t in sorted(current - self._greeted):
+            self._send_weights(down, t, self._version)
+        self._greeted = current
+        self._prune_version_vector(current)
+        roots = up.ends()
+        sources = [(down, sorted(current)), (up, sorted(roots))]
+        try:
+            end, src, msg, arrival = recv_any_multi(
+                sources, timeout=float(pol.grace)
+            )
+        except queue.Empty:
+            if set(self._trainers()) != current:
+                return  # membership changed while waiting: re-greet first
+            if current or roots:
+                self.metrics.append({"early_stop": True, "version": self._version})
+                # a barriered root above would block forever on this silent
+                # exit: relay once to unblock its current round, then leave
+                # so later rounds skip us. Partially-buffered updates were
+                # never applied to self.weights, so the relay must carry
+                # zero sample weight or the root would overweight a stale
+                # model by the unapplied updates' sample counts
+                self._buffer_samples = 0.0
+                self._buffer_staleness = []
+                self._relay_up()
+            self._work_done = True
+            up.leave()
+            return
+        if end is up:
+            # root direction: rebase on the new global model
+            self.weights = msg["weights"]
+            self._root_version = msg.get("version", self._root_version)
+            self._work_done = bool(msg.get("done", False))
+            if self._work_done:
+                return
+            self._version += 1
+            self._snapshots.put(
+                self._version, _tree_copy(self.weights),
+                keep_from=self._snapshot_floor(),
+            )
+            bridge_clock(self.ctx, self.down_channel)
+            return
+        # trainer direction: buffer the update; on flush, relay upward
+        # (zero-sample updates carry no content — skip, as the root does)
+        if float(msg.get("num_samples", 1)) > 0:
+            self._buffer_samples += float(msg.get("num_samples", 1))
+            flushed = self._absorb(src, msg, arrival)
+            self._buffer_staleness.append(int(self.staleness_log[-1]["staleness"]))
+            if flushed:
+                self._relay_up()
+        self._send_weights(down, src, self._version)
+
+    def _relay_up(self) -> None:
+        up = self._up()
+        roots = up.ends()
+        if not roots:
+            return
+        bridge_clock(self.ctx, self.up_channel)
+        self.ctx.advance_clock(
+            self.up_channel, float(self.config.get("compute_time", 0.0))
         )
+        update: Dict[str, Any] = {
+            "weights": self.weights,
+            "num_samples": int(self._buffer_samples),
+            "tier_staleness": list(self._buffer_staleness),
+        }
+        if self._root_version is not None:
+            update["version"] = self._root_version
+        up.send(roots[0], update)
+        self.relay_log.append(
+            {
+                "version": self._version,
+                "num_samples": int(self._buffer_samples),
+                "tier_staleness": list(self._buffer_staleness),
+                "root_version": self._root_version,
+            }
+        )
+        self._buffer_samples = 0.0
+        self._buffer_staleness = []
 
     def finish(self) -> None:
         end = self._down()
@@ -325,19 +637,40 @@ class AsyncRootMixin(_PolicyRootBase):
 
 _PROGRAM_CACHE: Dict[Tuple[type, str], type] = {}
 
-_MIXINS: Dict[str, type] = {
+_ROOT_MIXINS: Dict[str, type] = {
     "deadline": DeadlineRootMixin,
     "async": AsyncRootMixin,
 }
 
+_AGG_MIXINS: Dict[str, type] = {
+    "deadline": DeadlineAggregatorMixin,
+    "async": AsyncAggregatorMixin,
+}
+
 
 def make_policy_program(base_cls: Type[Role], mode: str) -> Type[Role]:
-    """Graft the policy mixin for ``mode`` onto a root-aggregator class."""
-    if mode not in _MIXINS:
-        raise ValueError(f"unknown policy mode {mode!r}; known: {sorted(_MIXINS)}")
+    """Graft the policy mixin for ``mode`` onto an aggregator class.
+
+    Root aggregators (``GlobalAggregator`` subclasses) get the root mixin
+    family; intermediate H-FL aggregators (``Aggregator`` subclasses) get the
+    intermediate family, so the whole aggregation tree lowers tier by tier.
+    """
+    from repro.core.roles import Aggregator, GlobalAggregatorBase
+
+    if issubclass(base_cls, GlobalAggregatorBase):
+        family = _ROOT_MIXINS
+    elif issubclass(base_cls, Aggregator):
+        family = _AGG_MIXINS
+    else:
+        raise TypeError(
+            f"cannot policy-lower {base_cls.__name__}: not a GlobalAggregator "
+            "or Aggregator subclass"
+        )
+    if mode not in family:
+        raise ValueError(f"unknown policy mode {mode!r}; known: {sorted(family)}")
     key = (base_cls, mode)
     if key not in _PROGRAM_CACHE:
-        mixin = _MIXINS[mode]
+        mixin = family[mode]
         _PROGRAM_CACHE[key] = type(
             f"{mode.capitalize()}{base_cls.__name__}", (mixin, base_cls), {}
         )

@@ -12,9 +12,17 @@ Executes an expanded job under a ``RuntimePolicy``:
   root aggregator reacts to updates in virtual-arrival order, staleness-
   weights them, and never barriers.
 
+Lowering is hierarchy-wide: ``RuntimePolicy.tiers`` assigns a mode per role
+so intermediate H-FL aggregators run their own deadline/FedBuff collection
+(see ``repro.core.roles_async``) independent of the root's mode; with
+``tiers`` unset only the root is lowered (bit-identical to the original
+root-only behavior).
+
 The policy also drives the event scheduler: per-worker arrival times,
 mid-round dropout (enforced on the virtual clock by the channel layer),
-and dynamic re-join. Per-worker link models (bandwidth/latency) emulate the
+and dynamic re-join — including an intermediate aggregator dying with live
+children, whose orphans are surfaced (or re-parented on re-join) instead of
+silently hanging. Per-worker link models (bandwidth/latency) emulate the
 paper's heterogeneous-network experiments on the virtual clock kept by the
 inproc backends.
 """
@@ -29,7 +37,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 from repro.core.channels import ChannelManager, InprocBackend, LinkModel, WorkerDropped
 from repro.core.expansion import JobSpec, WorkerConfig, expand
 from repro.core.registry import ResourceRegistry
-from repro.core.roles import GlobalAggregatorBase, Role, RoleContext
+from repro.core.roles import Aggregator, GlobalAggregatorBase, Role, RoleContext
 from repro.core.tag import TAG
 
 
@@ -62,6 +70,13 @@ class RuntimePolicy:
     """
 
     mode: str = "sync"  # "sync" | "deadline" | "async"
+    # role name -> mode, lowering *every* tier of the aggregation tree:
+    # intermediate H-FL aggregators listed here collect from their group
+    # under their own deadline / FedBuff buffer and relay staleness-annotated
+    # partial aggregates upward. Roles not listed default to the root-only
+    # behavior: the root aggregator runs ``mode``, everything else is sync.
+    # ``tiers={}`` (the default) is bit-identical to root-only lowering.
+    tiers: Dict[str, str] = dataclasses.field(default_factory=dict)
     # worker_id -> virtual arrival time (seconds); absent workers arrive at 0
     arrivals: Dict[str, float] = dataclasses.field(default_factory=dict)
     # worker_id -> virtual time at which the worker drops mid-round
@@ -88,6 +103,12 @@ class RuntimePolicy:
             raise ValueError(
                 f"unknown RuntimePolicy.mode {self.mode!r}; one of {self.MODES}"
             )
+        for role, mode in self.tiers.items():
+            if mode not in self.MODES:
+                raise ValueError(
+                    f"unknown RuntimePolicy.tiers mode {mode!r} for role "
+                    f"{role!r}; one of {self.MODES}"
+                )
         for wid, t in self.rejoins.items():
             if wid not in self.dropouts:
                 raise ValueError(
@@ -99,9 +120,14 @@ class RuntimePolicy:
                 )
 
     @property
+    def is_lowering(self) -> bool:
+        """True when any tier of the tree is policy-lowered (non-sync)."""
+        return self.mode != "sync" or any(m != "sync" for m in self.tiers.values())
+
+    @property
     def is_event_driven(self) -> bool:
         return bool(
-            self.mode != "sync" or self.arrivals or self.dropouts or self.rejoins
+            self.is_lowering or self.arrivals or self.dropouts or self.rejoins
         )
 
 
@@ -154,11 +180,19 @@ class JobResult:
         return self.programs[worker_id]
 
     def global_weights(self) -> Any:
+        # resolve the root by program class, not by worker-id prefix: a TAG
+        # is free to name its root role anything (renamed roles broke the
+        # old "global-aggregator" string match)
+        for prog in self.programs.values():
+            if isinstance(prog, GlobalAggregatorBase):
+                return prog.weights
+        # custom root programs that don't subclass GlobalAggregator still
+        # resolve by the conventional role name
         for wid, prog in self.programs.items():
-            if wid.startswith("global-aggregator"):
+            if wid.startswith("global-aggregator") and hasattr(prog, "weights"):
                 return prog.weights
         # distributed topology: any trainer holds the consensus weights
-        for wid, prog in self.programs.items():
+        for prog in self.programs.values():
             if hasattr(prog, "weights"):
                 return prog.weights
         return None
@@ -183,6 +217,15 @@ class JobRuntime:
         self.per_worker_hyperparams = dict(per_worker_hyperparams or {})
         self.program_overrides = dict(program_overrides or {})
         self.policy = policy or RuntimePolicy()
+        # a typo'd role name in tiers would silently lower nothing while
+        # still flipping the runtime into event-driven mode — reject up front
+        role_names = {r.name for r in job.tag.roles}
+        for role in self.policy.tiers:
+            if role not in role_names:
+                raise KeyError(
+                    f"RuntimePolicy.tiers entry for unknown role {role!r}; "
+                    f"TAG roles: {sorted(role_names)}"
+                )
         self._membership = static_membership(self.workers, job.tag)
         for (channel, worker), model in self.link_models.items():
             self.channels.backend(channel).set_link(channel, worker, model)
@@ -190,34 +233,56 @@ class JobRuntime:
     # ------------------------------------------------------------------ #
     # program construction (incl. policy lowering of the root aggregator)
     # ------------------------------------------------------------------ #
+    def _tier_mode(self, w: WorkerConfig, cls: type) -> str:
+        """Per-tier policy resolution: an explicit ``tiers`` entry wins; the
+        root aggregator defaults to the policy's ``mode`` (PR-1 root-only
+        behavior); every other role defaults to sync."""
+        explicit = self.policy.tiers.get(w.role)
+        if explicit is not None:
+            return explicit
+        if issubclass(cls, GlobalAggregatorBase):
+            return self.policy.mode
+        return "sync"
+
     def _resolve_class(self, w: WorkerConfig) -> type:
         if w.role in self.program_overrides:
             cls = self.program_overrides[w.role]
         else:
             cls = resolve_program(w.program)
-        if self.policy.mode in ("deadline", "async") and issubclass(
-            cls, GlobalAggregatorBase
-        ):
-            # lowering replaces the whole tasklet chain, so it is only sound
-            # for the standard root-aggregator workflow. A subclass with its
-            # own compose() (e.g. CoordGlobalAggregator's coordinator
-            # handshake) would be silently broken — fail fast instead.
-            if cls.compose is not GlobalAggregatorBase.compose:
-                raise ValueError(
-                    f"cannot lower {cls.__name__} to {self.policy.mode!r} "
-                    "mode: it overrides compose(); policy modes support the "
-                    "standard GlobalAggregator round workflow only"
-                )
-            from repro.core.roles_async import make_policy_program
+        mode = self._tier_mode(w, cls)
+        if mode == "sync":
+            return cls
+        is_root = issubclass(cls, GlobalAggregatorBase)
+        if not is_root and not issubclass(cls, Aggregator):
+            # only reachable via an explicit tiers entry naming a non-
+            # aggregator role — a typo'd role name or a trainer tier
+            raise ValueError(
+                f"RuntimePolicy.tiers lowers role {w.role!r} to {mode!r}, "
+                f"but its program {cls.__name__} is neither a GlobalAggregator "
+                "nor an Aggregator subclass"
+            )
+        # lowering replaces the whole tasklet chain, so it is only sound
+        # for the standard aggregator workflows. A subclass with its own
+        # compose() (e.g. the CO-FL coordinator handshake) would be
+        # silently broken — fail fast instead.
+        base_compose = (
+            GlobalAggregatorBase.compose if is_root else Aggregator.compose
+        )
+        if cls.compose is not base_compose:
+            raise ValueError(
+                f"cannot lower {cls.__name__} to {mode!r} mode: it overrides "
+                "compose(); policy modes support the standard aggregator "
+                "round workflows only"
+            )
+        from repro.core.roles_async import make_policy_program
 
-            cls = make_policy_program(cls, self.policy.mode)
-        return cls
+        return make_policy_program(cls, mode)
 
     def _build_program(self, w: WorkerConfig) -> Role:
         cls = self._resolve_class(w)
         hp = dict(self.job.hyperparams)
         hp.update(self.per_worker_hyperparams.get(w.worker_id, {}))
-        if self.policy.mode != "sync":
+        if self.policy.is_lowering:
             hp.setdefault("runtime_policy", self.policy)
         static = {
             ch: self._membership[(ch, group)] for ch, group in w.groups.items()
@@ -310,7 +375,7 @@ class JobRuntime:
         # among the initial cohort); late arrivals join dynamically — except
         # in sync mode, whose barriered servers cannot handle membership
         # growth: there an arrival only offsets the worker's virtual clock
-        dynamic_join = self.policy.mode != "sync"
+        dynamic_join = self.policy.is_lowering
         initial = [
             w for w in self.workers
             if not dynamic_join
@@ -331,6 +396,34 @@ class JobRuntime:
             prog.pre_run()
             return prog
 
+        def _cascade_orphans(wid: str, at: float) -> None:
+            """A dead worker with no re-join scheduled may leave 'children'
+            behind: workers whose only distribute-side peer it was. Poison
+            them so their pending/next receive surfaces as a dropout instead
+            of silently hanging until the recv timeout."""
+            w = by_id[wid]
+            for ch_name, group in w.groups.items():
+                spec = self.channels.spec(ch_name)
+                a, b = spec.pair
+                if a == b or w.role not in (a, b):
+                    continue
+                # only cascade downstream: the dead worker must have been a
+                # distributor (parent) on this channel
+                if "distribute" not in spec.func_tags.for_role(w.role):
+                    continue
+                child_role = spec.other_end(w.role)
+                backend = self.channels.backend(ch_name)
+                members = backend.peers(ch_name, group, wid)
+                if any(m.rsplit("-", 1)[0] == w.role for m in members):
+                    continue  # a replica parent remains in the group
+                for child in members:
+                    if child.rsplit("-", 1)[0] != child_role:
+                        continue
+                    for cb in self._backends_of(by_id[child]):
+                        cb.poison(child, at)
+                    with lock:
+                        loop.record(at, "orphaned", child)
+
         def _runner(wid: str, prog: Role) -> None:
             try:
                 prog.run()
@@ -338,12 +431,17 @@ class JobRuntime:
                 with lock:
                     dropped[wid] = e.at
                     loop.record(e.at, "dropout", wid)
+                rejoin_at = self.policy.rejoins.get(wid)
+                if rejoin_at is None:
+                    # poison orphans BEFORE the dead worker leaves its
+                    # channels: a child probing ends() in between must see
+                    # either its parent or the poison, never a limbo state
+                    _cascade_orphans(wid, e.at)
                 try:
                     prog.on_dropped(e.at)
                 except BaseException as hook_err:  # noqa: BLE001
                     errors[wid] = hook_err
                     return
-                rejoin_at = self.policy.rejoins.get(wid)
                 if rejoin_at is None:
                     return
                 try:

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 from typing import Dict, Optional, Sequence, Tuple
 
-from repro.core.tag import Channel, FuncTags, Role, TAG, DEFAULT_GROUP
+from repro.core.tag import DEFAULT_GROUP, TAG, Channel, FuncTags, Role
 
 
 def classical_fl(

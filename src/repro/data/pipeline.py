@@ -4,7 +4,7 @@ staging. Kept numpy-side so the jitted steps receive ready arrays.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional, Sequence
+from typing import Dict, Iterator, Sequence
 
 import numpy as np
 

@@ -1,3 +1,12 @@
+from repro.fl.compression import (
+    dequantize_int8,
+    quantize_int8,
+    topk_densify,
+    topk_sparsify,
+)
+from repro.fl.privacy import DPConfig, clip_and_noise
+from repro.fl.sampling import FedBalancerSampler, SelectAllSampler
+from repro.fl.selection import OortSelector, RandomSelector, SelectAll
 from repro.fl.strategies import (
     FedAdagrad,
     FedAdam,
@@ -9,15 +18,6 @@ from repro.fl.strategies import (
     ServerStrategy,
     get_strategy,
 )
-from repro.fl.compression import (
-    dequantize_int8,
-    quantize_int8,
-    topk_sparsify,
-    topk_densify,
-)
-from repro.fl.selection import OortSelector, RandomSelector, SelectAll
-from repro.fl.sampling import FedBalancerSampler, SelectAllSampler
-from repro.fl.privacy import DPConfig, clip_and_noise
 
 __all__ = [
     "ServerStrategy",

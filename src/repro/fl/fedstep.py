@@ -19,15 +19,14 @@ Semantics per round (classic FedAvg-style local SGD):
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
-from repro.core.mesh_lowering import AggregationPlan, apply_plan
+from repro.core.mesh_lowering import AggregationPlan
 from repro.fl.privacy import DPConfig, clip_and_noise
 from repro.fl.strategies import ServerStrategy
 

@@ -7,7 +7,7 @@ per-sample losses and trains on samples whose loss falls inside a moving
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 import numpy as np
 

@@ -16,7 +16,7 @@ FedBuff     Nguyen et al. 2022           buffered async aggregation (K of N)
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -36,13 +36,13 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCH_IDS, get_config, long_decode_variant
+from repro.fl.fedstep import FedStepConfig
 from repro.launch import sharding as shd
 from repro.launch.analysis import Roofline, parse_collectives
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import build_serve_step, build_train_step
-from repro.fl.fedstep import FedStepConfig
-from repro.models.config import SHAPES, ModelConfig, ShapeConfig
 from repro.models.blocks import layer_kinds
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
 
 HBM_PER_CHIP = 16 * 1024**3  # v5e
 

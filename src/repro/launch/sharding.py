@@ -12,7 +12,7 @@ Stacked layer dims (scan-over-layers / encdec stacks) get a leading ``None``.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

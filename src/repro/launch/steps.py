@@ -10,7 +10,6 @@ data-parallel step on the single-pod mesh (no pod axis ⇒ one client).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -24,7 +23,7 @@ from repro.fl.fedstep import FedStepConfig, init_server_state, make_fl_train_ste
 from repro.fl.strategies import get_strategy
 from repro.launch import sharding as shd
 from repro.models.api import ModelBundle, build_model
-from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.config import ModelConfig
 from repro.models.moe import shard_profile
 
 Tree = Any

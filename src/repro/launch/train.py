@@ -17,15 +17,13 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro.checkpoint.checkpoint import save as save_checkpoint
 from repro.configs import get_config
 from repro.data.datasets import synthetic_lm_batches
 from repro.fl.fedstep import FedStepConfig
-from repro.launch import sharding as shd
 from repro.launch.mesh import make_smoke_mesh
 from repro.launch.steps import build_train_step
-from repro.checkpoint.checkpoint import save as save_checkpoint
 
 
 def make_mesh_for_devices():

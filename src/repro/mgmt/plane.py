@@ -16,7 +16,7 @@ import enum
 import itertools
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core.channels import ChannelManager, LinkModel
 from repro.core.expansion import JobSpec, WorkerConfig, expand

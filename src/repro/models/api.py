@@ -16,7 +16,7 @@ Serve batches are ``{"token": (B, 1) int32}`` against a model cache.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

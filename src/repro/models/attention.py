@@ -10,7 +10,7 @@ blocking is provided by the Pallas flash kernel (``repro.kernels``);
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -9,16 +9,15 @@ carried in the cache.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import attention as attn
-from repro.models.blocks import attn_cache_init, _attn_core_full, _attn_core_decode
+from repro.models.blocks import _attn_core_decode, _attn_core_full, attn_cache_init
 from repro.models.config import ModelConfig
 from repro.models.layers import (
-    dense_apply,
     embed_apply,
     embed_init,
     mlp_apply,

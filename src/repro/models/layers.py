@@ -6,7 +6,7 @@ so bf16 params behave like TPU MXU matmuls.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -15,15 +15,13 @@ router probability.
 from __future__ import annotations
 
 import functools
-
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro.models.config import ModelConfig
-from repro.models.layers import dense_init, mlp_init, mlp_apply
+from repro.models.layers import dense_init, mlp_apply, mlp_init
 
 Tree = Dict[str, jax.Array]
 

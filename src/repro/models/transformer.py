@@ -11,7 +11,6 @@ decode positions derive from ``len``.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -25,8 +24,8 @@ from repro.models.blocks import (
 )
 from repro.models.config import ModelConfig
 from repro.models.layers import (
-    embed_init,
     embed_apply,
+    embed_init,
     rmsnorm_apply,
     rmsnorm_init,
     unembed_apply,

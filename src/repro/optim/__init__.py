@@ -1,4 +1,4 @@
-from repro.optim.optimizers import Optimizer, adamw, sgd, get_optimizer
+from repro.optim.optimizers import Optimizer, adamw, get_optimizer, sgd
 from repro.optim.schedules import constant, cosine_decay, linear_warmup_cosine
 
 __all__ = [

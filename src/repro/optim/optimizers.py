@@ -7,8 +7,7 @@ the server strategy).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, NamedTuple, Optional, Tuple, Union
+from typing import Any, Callable, NamedTuple, Tuple, Union
 
 import jax
 import jax.numpy as jnp

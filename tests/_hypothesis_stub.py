@@ -8,7 +8,6 @@ of erroring at import time. See ``tests/conftest.py`` for the activation.
 """
 from __future__ import annotations
 
-import functools
 import zlib
 
 import numpy as np

@@ -1,9 +1,8 @@
 """RuntimePolicy: sync/deadline/async execution of the same TAG, plus
 straggler/dropout/re-join emulation and the buffered-async server family."""
+import jax.numpy as jnp
 import numpy as np
 import pytest
-
-import jax.numpy as jnp
 
 from repro.core.expansion import JobSpec
 from repro.core.roles import Trainer

@@ -1,4 +1,5 @@
 """Channel API (Table 2), backends, and the tasklet composer (Table 1)."""
+import numpy as np
 import pytest
 
 from repro.core.channels import (
@@ -8,16 +9,13 @@ from repro.core.channels import (
     payload_bytes,
 )
 from repro.core.composer import (
-    Chain,
     CloneComposer,
     Composer,
     ComposerError,
     Loop,
     Tasklet,
 )
-from repro.core.tag import Channel as ChannelSpec, FuncTags
-
-import numpy as np
+from repro.core.tag import Channel as ChannelSpec
 
 
 def _spec(name="ch", backend="inproc", wire="f32", pair=("a", "b")):

@@ -1,0 +1,106 @@
+"""Checkpoint round-trips of policy-server state trees.
+
+The async/deadline servers carry ``(version, weights, staleness_log)`` plus
+dict-of-list metadata and 0-d scalars; ``repro.checkpoint`` must round-trip
+all of it, and strict-mode ``restore`` must reject checkpoints whose schema
+drifted (extra/unknown keys)."""
+import numpy as np
+import pytest
+
+from repro import checkpoint
+
+
+def _policy_server_state():
+    return {
+        "version": np.int64(3),  # 0-d scalar
+        "weights": {
+            "w": np.arange(8, dtype=np.float32),
+            "b": np.zeros((2, 2), np.float32),
+        },
+        "staleness_log": [
+            {"staleness": np.int32(0), "arrival": np.float64(1.5)},
+            {"staleness": np.int32(2), "arrival": np.float64(3.25)},
+        ],
+        "participation": {
+            "included": [np.int32(0), np.int32(1)],  # dict-of-list metadata
+            "round_time": np.float32(2.0),  # 0-d scalar leaf
+        },
+    }
+
+
+def _assert_trees_equal(a, b):
+    import jax
+
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class TestPolicyStateRoundTrip:
+    def test_round_trip_version_weights_staleness(self, tmp_path):
+        state = _policy_server_state()
+        checkpoint.save(str(tmp_path), 3, state)
+        assert checkpoint.latest_step(str(tmp_path)) == 3
+        like = {
+            "version": np.int64(0),
+            "weights": {
+                "w": np.zeros((8,), np.float32),
+                "b": np.ones((2, 2), np.float32),
+            },
+            "staleness_log": [
+                {"staleness": np.int32(0), "arrival": np.float64(0)},
+                {"staleness": np.int32(0), "arrival": np.float64(0)},
+            ],
+            "participation": {
+                "included": [np.int32(0), np.int32(0)],
+                "round_time": np.float32(0),
+            },
+        }
+        restored = checkpoint.restore(str(tmp_path), 3, like)
+        _assert_trees_equal(restored, state)
+        # 0-d scalars stay 0-d
+        assert np.shape(restored["version"]) == ()
+        assert np.shape(restored["participation"]["round_time"]) == ()
+
+    def test_round_trip_preserves_dtypes(self, tmp_path):
+        state = _policy_server_state()
+        checkpoint.save(str(tmp_path), 0, state)
+        restored = checkpoint.restore(str(tmp_path), 0, state)
+        assert restored["version"].dtype == np.int64
+        assert restored["weights"]["w"].dtype == np.float32
+        assert restored["staleness_log"][0]["staleness"].dtype == np.int32
+
+
+class TestStrictRestore:
+    def test_strict_rejects_unknown_keys(self, tmp_path):
+        state = _policy_server_state()
+        checkpoint.save(str(tmp_path), 1, state)
+        # a restore tree missing 'participation' silently drops those keys
+        # in the default mode ...
+        subset = {
+            "version": state["version"],
+            "weights": state["weights"],
+            "staleness_log": state["staleness_log"],
+        }
+        restored = checkpoint.restore(str(tmp_path), 1, subset)
+        _assert_trees_equal(restored, subset)
+        # ... but strict mode rejects them
+        with pytest.raises(KeyError, match="unknown key"):
+            checkpoint.restore(str(tmp_path), 1, subset, strict=True)
+
+    def test_strict_accepts_exact_match(self, tmp_path):
+        state = _policy_server_state()
+        checkpoint.save(str(tmp_path), 2, state)
+        restored = checkpoint.restore(str(tmp_path), 2, state, strict=True)
+        _assert_trees_equal(restored, state)
+
+    def test_missing_key_still_raises_in_both_modes(self, tmp_path):
+        state = {"w": np.ones((2,), np.float32)}
+        checkpoint.save(str(tmp_path), 0, state)
+        wider = {"w": np.ones((2,), np.float32), "extra": np.zeros((1,))}
+        with pytest.raises(KeyError, match="missing"):
+            checkpoint.restore(str(tmp_path), 0, wider)
+        with pytest.raises(KeyError, match="missing"):
+            checkpoint.restore(str(tmp_path), 0, wider, strict=True)

@@ -1,0 +1,283 @@
+"""Hierarchy-wide policy lowering: per-tier modes on a two-level H-FL tree,
+sync-equivalence of the root-only default, intermediate-aggregator dropout
+with live children, and the async-runtime bugfix sweep (bounded snapshots,
+role-class global-weights resolution, check_rounds guard)."""
+import numpy as np
+import pytest
+
+from repro.core.expansion import JobSpec
+from repro.core.roles import Trainer
+from repro.core.runtime import JobRuntime, RuntimePolicy, run_job
+from repro.core.tag import DEFAULT_GROUP, TAG, Channel, DatasetSpec, FuncTags, Role
+from repro.core.topologies import hierarchical_fl
+
+W0 = {"w": np.full((8,), 2.0, np.float32), "b": np.zeros((2, 2), np.float32)}
+
+
+class AddOneTrainer(Trainer):
+    def train(self):
+        if self.weights is not None:
+            self.weights = {
+                k: np.asarray(v) + 1.0 for k, v in self.weights.items()
+            }
+
+
+def _hier_job(rounds=2, n_groups=2):
+    groups = ("west", "east")[:n_groups]
+    names = [f"d{i}" for i in range(2 * n_groups)]
+    dataset_groups = {
+        g: tuple(names[2 * i: 2 * i + 2]) for i, g in enumerate(groups)
+    }
+    tag = hierarchical_fl(groups=groups, dataset_groups=dataset_groups)
+    return JobSpec(
+        tag=tag,
+        datasets=tuple(DatasetSpec(name=n) for n in names),
+        hyperparams={"rounds": rounds, "init_weights": W0},
+    )
+
+
+# distinct compute times -> distinct virtual arrivals -> deterministic
+# processing order for the bit-identical equivalence assertions
+_PER_WORKER = {f"trainer-{i}": {"compute_time": 0.5 + 0.25 * i} for i in range(4)}
+
+
+def _run(policy, rounds=2, **kw):
+    res = run_job(
+        _hier_job(rounds=rounds), timeout=60, policy=policy,
+        program_overrides={"trainer": AddOneTrainer},
+        per_worker_hyperparams=kw.pop("per_worker_hyperparams", _PER_WORKER),
+        **kw,
+    )
+    assert not res.errors, res.errors
+    return res
+
+
+class TestPolicyTiersValidation:
+    def test_unknown_tier_mode_rejected(self):
+        with pytest.raises(ValueError):
+            RuntimePolicy(tiers={"aggregator": "semi-sync"})
+
+    def test_tier_on_non_aggregator_role_rejected(self):
+        pol = RuntimePolicy(mode="sync", tiers={"trainer": "async"}, grace=1.0)
+        with pytest.raises(ValueError, match="neither a GlobalAggregator"):
+            run_job(_hier_job(), timeout=30, policy=pol)
+
+    def test_tier_on_unknown_role_rejected(self):
+        """A typo'd tiers role name must fail fast, not silently lower
+        nothing while flipping the runtime into event-driven mode."""
+        pol = RuntimePolicy(mode="sync", tiers={"aggregater": "deadline"},
+                            deadline=2.0, grace=1.0)
+        with pytest.raises(KeyError, match="unknown role"):
+            JobRuntime(_hier_job(), policy=pol)
+
+
+class TestTierEquivalence:
+    """``tiers={}`` (or only naming the root) is bit-identical to the PR-1
+    root-only lowering — the backward-compatibility acceptance criterion."""
+
+    @pytest.mark.parametrize("mode", ["deadline", "async"])
+    def test_empty_tiers_bit_identical_to_root_only(self, mode):
+        base = RuntimePolicy(mode=mode, deadline=5.0, grace=1.5, buffer_size=2)
+        variants = [
+            RuntimePolicy(mode=mode, tiers={}, deadline=5.0, grace=1.5,
+                          buffer_size=2),
+            RuntimePolicy(mode="sync", tiers={"global-aggregator": mode},
+                          deadline=5.0, grace=1.5, buffer_size=2),
+        ]
+        ref = _run(base)
+        for pol in variants:
+            res = _run(pol)
+            np.testing.assert_array_equal(
+                res.global_weights()["w"], ref.global_weights()["w"]
+            )
+            assert res.channel_bytes == ref.channel_bytes
+
+    def test_sync_tiers_match_legacy_sync(self):
+        legacy = _run(None)
+        tiered = _run(RuntimePolicy(mode="sync", tiers={}))
+        np.testing.assert_array_equal(
+            tiered.global_weights()["w"], legacy.global_weights()["w"]
+        )
+        assert tiered.channel_bytes == legacy.channel_bytes
+
+
+class TestAllTierCombos:
+    """Acceptance: one two-level H-FL TAG lowers to every (root, middle)
+    policy combination independently."""
+
+    @pytest.mark.parametrize("root", ["sync", "deadline", "async"])
+    @pytest.mark.parametrize("mid", ["sync", "deadline", "async"])
+    def test_combo_completes_and_progresses(self, root, mid):
+        pol = RuntimePolicy(
+            mode=root, tiers={"aggregator": mid},
+            deadline=5.0, grace=1.5, buffer_size=2,
+        )
+        res = _run(pol)
+        assert float(res.global_weights()["w"][0]) > float(W0["w"][0])
+
+    def test_deadline_middle_excludes_group_straggler(self):
+        """A straggler inside one group is cut by its *intermediate*'s
+        deadline — the root never waits for it (hierarchy-wide lowering)."""
+        per_worker = {f"trainer-{i}": {"compute_time": 0.5} for i in range(4)}
+        per_worker["trainer-3"]["compute_time"] = 50.0
+        pol = RuntimePolicy(
+            mode="sync", tiers={"aggregator": "deadline"},
+            deadline=2.0, grace=1.5,
+        )
+        res = _run(pol, per_worker_hyperparams=per_worker)
+        # trainer-3 sits under the west aggregator (aggregator-0)
+        agg = res.program("aggregator-0")
+        assert "trainer-3" in agg.participation_log[0]["excluded"]
+        assert agg.participation_log[0]["round_time"] == pytest.approx(2.0)
+
+    def test_async_middle_relays_staleness_annotated_aggregates(self):
+        pol = RuntimePolicy(
+            mode="async", tiers={"aggregator": "async"},
+            grace=1.5, buffer_size=2,
+        )
+        res = _run(pol, rounds=3)
+        agg = res.program("aggregator-0")
+        assert agg.relay_log, "async intermediate never relayed upward"
+        for entry in agg.relay_log:
+            assert len(entry["tier_staleness"]) >= 1
+        # root staleness-weights relayed updates by their echoed root version
+        glob = res.program("global-aggregator-0")
+        assert glob.staleness_log
+
+
+class TestIntermediateDropout:
+    """Acceptance: an intermediate aggregator dying with live children does
+    not silently strand them."""
+
+    def test_orphans_surfaced_when_intermediate_dies(self):
+        pol = RuntimePolicy(
+            mode="async", tiers={"aggregator": "async"},
+            grace=1.5, buffer_size=2,
+            dropouts={"aggregator-0": 0.5},
+        )
+        per_worker = {f"trainer-{i}": {"compute_time": 1.0} for i in range(4)}
+        res = run_job(
+            _hier_job(rounds=3), timeout=60, policy=pol,
+            program_overrides={"trainer": AddOneTrainer},
+            per_worker_hyperparams=per_worker,
+        )
+        assert not res.errors, res.errors
+        assert res.dropped.get("aggregator-0") == 0.5
+        # aggregator-0 parents the west group = trainer-2, trainer-3; both
+        # must be surfaced as dropped (orphaned), not silently hung
+        assert res.dropped.get("trainer-2") == 0.5
+        assert res.dropped.get("trainer-3") == 0.5
+        orphaned = {w for _, kind, w in res.events if kind == "orphaned"}
+        assert orphaned == {"trainer-2", "trainer-3"}
+        # the surviving (east) subtree still progresses the global model
+        assert float(res.global_weights()["w"][0]) > float(W0["w"][0])
+
+    def test_children_reparented_on_intermediate_rejoin(self):
+        pol = RuntimePolicy(
+            mode="async", tiers={"aggregator": "async"},
+            grace=1.5, buffer_size=2,
+            dropouts={"aggregator-0": 0.5}, rejoins={"aggregator-0": 1.5},
+        )
+        per_worker = {f"trainer-{i}": {"compute_time": 1.0} for i in range(4)}
+        res = run_job(
+            _hier_job(rounds=3), timeout=60, policy=pol,
+            program_overrides={"trainer": AddOneTrainer},
+            per_worker_hyperparams=per_worker,
+        )
+        assert not res.errors, res.errors
+        # only the aggregator itself dropped; its children were re-parented
+        assert set(res.dropped) == {"aggregator-0"}
+        assert (1.5, "rejoin", "aggregator-0") in res.events
+        assert not any(kind == "orphaned" for _, kind, _ in res.events)
+
+
+class TestSnapshotBounding:
+    def test_snapshot_store_evicts_and_clamps(self):
+        from repro.core.roles_async import _SnapshotStore
+
+        store = _SnapshotStore()
+        for v in range(10):
+            store.put(v, {"w": np.full((2,), float(v))})
+        # window never observed above 1 -> only a small tail is retained
+        assert len(store) <= 3
+        assert 9 in store.versions()
+        # requesting an evicted version clamps to the oldest retained one
+        base, staleness, clamped = store.base_for(0, 9)
+        assert clamped
+        oldest = store.versions()[0]
+        assert staleness == 9 - oldest
+        np.testing.assert_array_equal(base["w"], np.full((2,), float(oldest)))
+        # a fresh version is served unclamped
+        base, staleness, clamped = store.base_for(9, 9)
+        assert not clamped and staleness == 0
+
+    def test_async_root_snapshots_stay_bounded(self):
+        pol = RuntimePolicy(mode="async", buffer_size=1, grace=1.5)
+        from repro.core.topologies import classical_fl
+
+        job = JobSpec(
+            tag=classical_fl(),
+            datasets=(DatasetSpec(name="d0"),),
+            hyperparams={"rounds": 8, "init_weights": W0},
+        )
+        res = run_job(
+            job, timeout=60, policy=pol,
+            program_overrides={"trainer": AddOneTrainer},
+        )
+        assert not res.errors, res.errors
+        glob = res.program("global-aggregator-0")
+        assert glob._version == 8
+        # 9 versions were produced but the store keeps only the staleness
+        # window (one trainer -> staleness 0 throughout)
+        assert len(glob._snapshots) < 8
+        assert len(glob._snapshots) <= glob._snapshots.window + 2
+
+
+class TestBugfixSweep:
+    def test_check_rounds_before_collect_raises_descriptive_error(self):
+        rt = JobRuntime(
+            _hier_job(),
+            policy=RuntimePolicy(mode="deadline", deadline=2.0, grace=1.0),
+        )
+        glob_w = next(
+            w for w in rt.workers if w.role == "global-aggregator"
+        )
+        prog = rt._build_program(glob_w)
+        with pytest.raises(RuntimeError, match="participation_log"):
+            prog.check_rounds()
+
+    def test_global_weights_resolves_renamed_root_role(self):
+        param = Channel(
+            name="param-channel",
+            pair=("trainer", "fleet-server"),
+            func_tags=FuncTags(
+                {
+                    "trainer": ("fetch", "upload"),
+                    "fleet-server": ("distribute", "aggregate"),
+                }
+            ),
+        )
+        trainer = Role(
+            name="trainer",
+            program="repro.core.roles.Trainer",
+            is_data_consumer=True,
+            group_association=({"param-channel": DEFAULT_GROUP},),
+        )
+        server = Role(
+            name="fleet-server",
+            program="repro.core.roles.GlobalAggregator",
+            group_association=({"param-channel": DEFAULT_GROUP},),
+        )
+        tag = TAG(name="renamed-root", roles=(trainer, server), channels=(param,))
+        tag.validate()
+        job = JobSpec(
+            tag=tag,
+            datasets=tuple(DatasetSpec(name=f"d{i}") for i in range(2)),
+            hyperparams={"rounds": 2, "init_weights": W0},
+        )
+        res = run_job(
+            job, timeout=60, program_overrides={"trainer": AddOneTrainer}
+        )
+        assert not res.errors, res.errors
+        # must be the root's weights, not a trainer's (resolved by class)
+        assert res.global_weights() is res.programs["fleet-server-0"].weights

@@ -1,6 +1,5 @@
 """End-to-end in-process FL jobs for every topology template (fiab-style)."""
 import numpy as np
-import pytest
 
 from repro.core.expansion import JobSpec
 from repro.core.runtime import run_job

@@ -15,7 +15,7 @@ from repro.kernels.quant.ops import (
     dequantize_flat,
     quantize_flat,
 )
-from repro.kernels.quant.ref import reference_dequantize, reference_quantize
+from repro.kernels.quant.ref import reference_quantize
 
 
 class TestFlashAttention:

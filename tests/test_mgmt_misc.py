@@ -1,11 +1,10 @@
 """Management plane, registry/realms, checkpointing, selection/sampling,
 sharding rules and HLO analysis."""
+import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
-
-import jax
-import jax.numpy as jnp
 
 
 class TestRegistry:

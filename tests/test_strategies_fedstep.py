@@ -5,18 +5,16 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro import compat
 from repro.core.mesh_lowering import (
     AggregationStage,
     lower_tag_to_mesh,
     stage_reduce_mean,
 )
-from repro.core.topologies import classical_fl, hierarchical_fl, distributed_fl
+from repro.core.topologies import classical_fl, distributed_fl, hierarchical_fl
 from repro.fl.fedstep import FedStepConfig, init_server_state, make_fl_train_step
-from repro.fl.strategies import get_strategy
 from repro.fl.privacy import DPConfig
-
-
-from repro import compat
+from repro.fl.strategies import get_strategy
 
 
 def _mesh1():

@@ -3,14 +3,12 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.expansion import ExpansionError, JobSpec, expand
-from repro.core.tag import TAG, Channel, DatasetSpec, FuncTags, Role, TagError, diff_tags
+from repro.core.tag import TAG, Channel, DatasetSpec, Role, TagError, diff_tags
 from repro.core.topologies import (
     TEMPLATES,
     classical_fl,
     coordinated_fl,
-    distributed_fl,
     hierarchical_fl,
-    hybrid_fl,
 )
 
 
