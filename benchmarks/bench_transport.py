@@ -1,0 +1,76 @@
+"""Transport benchmark: round-trip latency vs payload size, per backend.
+
+Measures the raw channel hot path — ``send`` + blocking ``recv`` of a weight
+pytree through a ``ChannelManager`` end pair — on the in-process reference
+backend and on the multiproc loopback (real sockets + deterministic wire
+format through a ``TransportHub``). The gap between the two columns is the
+serialization + socket cost a real process deployment pays per message.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro import transport as _transport  # noqa: F401 - registers the loopback
+from repro.core.channels import ChannelManager
+from repro.core.tag import Channel as ChannelSpec
+
+from benchmarks.common import result_meta
+
+# payload sizes in float32 elements (x4 bytes on the f32 wire)
+SIZES = {"4KB": 1024, "256KB": 65536, "4MB": 1 << 20}
+SMOKE_SIZES = {"4KB": 1024, "256KB": 65536}
+BACKENDS = ("inproc", "multiproc")
+
+
+def _roundtrip_secs(backend: str, n_elems: int, iters: int) -> float:
+    mgr = ChannelManager(
+        [ChannelSpec(name="bench-ch", pair=("a", "b"), backend=backend)]
+    )
+    try:
+        ea = mgr.end("bench-ch", "default", "a-0")
+        eb = mgr.end("bench-ch", "default", "b-0")
+        payload = {"w": np.random.default_rng(0).normal(size=n_elems).astype(np.float32)}
+        # warmup (first send walks lazy imports / connection setup)
+        ea.send("b-0", payload)
+        eb.recv("a-0")
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            ea.send("b-0", payload)
+            eb.recv("a-0")
+        return (time.perf_counter() - t0) / iters
+    finally:
+        mgr.close()
+
+
+def run(smoke: bool = False) -> List[Dict[str, object]]:
+    sizes = SMOKE_SIZES if smoke else SIZES
+    iters = 10 if smoke else 50
+    rows: List[Dict[str, object]] = []
+    print(f"{'payload':>10} {'backend':>10} {'roundtrip':>12} {'throughput':>14}")
+    for label, n in sizes.items():
+        nbytes = n * 4
+        for backend in BACKENDS:
+            secs = _roundtrip_secs(backend, n, iters)
+            rows.append(
+                result_meta(
+                    backend=backend,
+                    payload=label,
+                    payload_bytes=nbytes,
+                    roundtrip_ms=secs * 1e3,
+                    mb_per_s=nbytes / secs / 1e6,
+                )
+            )
+            print(
+                f"{label:>10} {backend:>10} {secs * 1e3:>10.3f}ms "
+                f"{nbytes / secs / 1e6:>12.1f}MB/s"
+            )
+    # sanity: the loopback moved real bytes for every size
+    assert all(r["roundtrip_ms"] > 0 for r in rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -3,6 +3,7 @@ workload — softmax regression on the synthetic federated classification data
 — plugged into Flame roles via the user programming model (Fig. 5)."""
 from __future__ import annotations
 
+import os
 from typing import Dict
 
 import numpy as np
@@ -11,6 +12,23 @@ from repro.core.roles import HybridTrainer, Trainer
 
 FEATURES, CLASSES = 32, 10
 LR = 0.2
+
+
+def active_backend() -> str:
+    """The transport backend this benchmark run targets.
+
+    Benches that don't take a backend argument read ``REPRO_BENCH_BACKEND``
+    (default ``inproc``); either way the name lands in the emitted JSON via
+    ``result_meta`` so bench trajectories are comparable across backends.
+    """
+    return os.environ.get("REPRO_BENCH_BACKEND", "inproc")
+
+
+def result_meta(**fields: object) -> Dict[str, object]:
+    """A result row stamped with the active backend (overridable per row)."""
+    row: Dict[str, object] = {"backend": active_backend()}
+    row.update(fields)
+    return row
 
 
 def init_weights(seed: int = 0) -> Dict[str, np.ndarray]:

@@ -22,7 +22,11 @@ def main(argv=None):
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
 
-    results = {}
+    from benchmarks.common import active_backend
+
+    # every emitted JSON names the backend it ran against, so trajectories
+    # from different transports (inproc vs multiproc vs ...) stay comparable
+    results = {"meta": {"backend": active_backend()}}
     t0 = time.time()
 
     if args.smoke:
@@ -46,6 +50,13 @@ def main(argv=None):
         from benchmarks import bench_hier_async
 
         results["hier_async"] = bench_hier_async.run(smoke=True)
+
+        print("=" * 72)
+        print("Smoke — transport round-trip latency (inproc vs multiproc)")
+        print("=" * 72)
+        from benchmarks import bench_transport
+
+        results["transport"] = bench_transport.run(smoke=True)
 
         print("=" * 72)
         print(f"smoke benchmarks passed in {time.time()-t0:.1f}s")
@@ -95,6 +106,13 @@ def main(argv=None):
     from benchmarks import bench_hier_async
 
     results["hier_async"] = bench_hier_async.run()
+
+    print("=" * 72)
+    print("Transport — round-trip latency vs payload size, per backend")
+    print("=" * 72)
+    from benchmarks import bench_transport
+
+    results["transport"] = bench_transport.run()
 
     import os
 

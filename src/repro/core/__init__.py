@@ -1,6 +1,14 @@
 """Flame core: TAG abstraction, expansion, composer, channels, mesh lowering."""
 from repro.core import topologies
-from repro.core.channels import ChannelManager, InprocBackend, LinkModel, payload_bytes
+from repro.core.channels import (
+    ChannelManager,
+    InprocBackend,
+    LinkModel,
+    TransportBackend,
+    payload_bytes,
+    register_backend,
+    registered_backends,
+)
 from repro.core.composer import Chain, CloneComposer, Composer, Loop, Tasklet
 from repro.core.expansion import JobSpec, WorkerConfig, expand
 from repro.core.mesh_lowering import (
@@ -18,7 +26,8 @@ __all__ = [
     "JobSpec", "WorkerConfig", "expand",
     "ComputeSpec", "ResourceRegistry", "realm_matches",
     "Composer", "CloneComposer", "Chain", "Loop", "Tasklet",
-    "ChannelManager", "InprocBackend", "LinkModel", "payload_bytes",
+    "ChannelManager", "InprocBackend", "LinkModel", "TransportBackend",
+    "payload_bytes", "register_backend", "registered_backends",
     "AggregationPlan", "AggregationStage", "apply_plan", "lower_tag_to_mesh",
     "stage_reduce_mean", "topologies",
 ]

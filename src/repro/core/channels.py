@@ -2,18 +2,26 @@
 
 The channel manager gives every role a uniform messaging surface —
 ``join/leave/send/recv/recv_fifo/peek/broadcast/ends/empty`` — regardless of
-the underlying backend. Backends here:
+the underlying backend. The backend itself is a first-class, swappable
+abstraction: anything implementing the ``TransportBackend`` protocol can sit
+behind a ``ChannelEnd``. Backends registered here:
 
 * ``inproc``   — thread-safe in-process queues. This is the emulation backend
   (Flame-in-a-box analogue) used by the paper-experiment reproductions; it
   supports a per-link *bandwidth/latency model* so §6.1/§6.2 straggler and
   backend-selection experiments are measurable.
-* ``mqtt-emu`` — inproc with a shared-broker contention model: all traffic on
-  the channel shares one broker uplink (models the paper's "MQTT traffic over
-  WAN via a broker" inefficiency).
+* ``mqtt-emu`` — inproc with a broker contention model: traffic to the same
+  topic (one receiver's subscription on a channel/group) serializes on the
+  broker, while distinct topics proceed in parallel (models the paper's
+  "MQTT traffic over WAN via a broker" inefficiency per topic).
 * ``p2p-emu``  — inproc with per-link bandwidth (direct peering).
 * ``collective`` — not a message queue at all: marks the channel as lowered to
   jax.lax collectives on the TPU mesh (see ``repro.core.mesh_lowering``).
+
+A real multi-process transport (each worker an OS process, messages over
+sockets) lives in ``repro.transport.multiproc``; it implements the same
+protocol and is driven through the same ``ChannelManager``/``ChannelEnd``
+surface — deployment choice, not application logic (§6.2).
 
 Payloads are pytrees; wire cost is computed from leaf sizes after the
 channel's ``wire_dtype`` / compression policy, so bandwidth emulation and the
@@ -26,7 +34,17 @@ import dataclasses
 import queue
 import threading
 import time
-from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import (
+    Any,
+    Callable,
+    Dict,
+    Iterable,
+    List,
+    Optional,
+    Protocol,
+    Sequence,
+    Tuple,
+)
 
 import numpy as np
 
@@ -78,6 +96,98 @@ class WorkerDropped(RuntimeError):
         self.at = at
 
 
+# Every operation a transport must provide. The conformance suite
+# (``repro.transport.conformance``) checks both presence and semantics of
+# these ops for every registered backend.
+TRANSPORT_OPS: Tuple[str, ...] = (
+    # membership
+    "join", "leave", "peers",
+    # messaging
+    "send", "recv", "recv_any", "recv_fifo", "peek", "earliest",
+    # failure emulation / cancellation
+    "set_drop", "clear_drop", "drop_time", "poison", "check_poison",
+    # link / wire configuration
+    "set_link", "set_wire_dtype", "link",
+    # clocks
+    "now", "advance", "set_clock",
+)
+
+
+class TransportBackend(Protocol):
+    """The pluggable transport contract behind ``ChannelEnd``.
+
+    ``InprocBackend`` (threads + queues, virtual clock) is the reference
+    implementation; ``repro.transport.multiproc.MultiprocBackend`` speaks the
+    same protocol over sockets to a broker in the driver process. ``ChannelEnd``,
+    ``recv_any_multi``, the backend registry and ``ChannelManager`` depend only
+    on this protocol — never on a concrete class.
+
+    Semantics every implementation must honor (enforced by the shared
+    conformance suite):
+
+    * per-``(channel, group, dst, src)`` FIFO mailboxes;
+    * ``recv``/``recv_any`` block (wall-clock) until delivery, ``queue.Empty``
+      on timeout;
+    * ``poison(worker)`` wakes any blocked receive of ``worker`` immediately
+      with ``WorkerDropped``;
+    * clock ops (``now``/``advance``/``set_clock``) keep a monotone per-worker
+      time in seconds, and any operation carrying a worker's clock past its
+      ``set_drop`` time raises ``WorkerDropped``.
+    """
+
+    name: str
+    stats: Dict[str, float]
+
+    # --------------------------- membership --------------------------- #
+    def join(self, channel: str, group: str, worker: str) -> None: ...
+    def leave(self, channel: str, group: str, worker: str) -> None: ...
+    def peers(self, channel: str, group: str, me: str) -> List[str]: ...
+
+    # ---------------------------- messaging --------------------------- #
+    def send(self, channel: str, group: str, src: str, dst: str, payload: Any) -> None: ...
+    def recv(
+        self, channel: str, group: str, me: str, end: str, timeout: Optional[float]
+    ) -> Any: ...
+    def recv_any(
+        self,
+        channel: str,
+        group: str,
+        me: str,
+        ends: Sequence[str],
+        timeout: Optional[float],
+        advance: bool = True,
+    ) -> Tuple[str, Any, float]: ...
+    def recv_fifo(
+        self,
+        channel: str,
+        group: str,
+        me: str,
+        ends: Sequence[str],
+        timeout: Optional[float],
+    ) -> Iterable[Tuple[str, Any]]: ...
+    def peek(self, channel: str, group: str, me: str, end: str) -> Optional[Any]: ...
+    def earliest(
+        self, channel: str, group: str, me: str, ends: Sequence[str]
+    ) -> Optional[Tuple[float, str]]: ...
+
+    # ------------------- failure emulation / cancel -------------------- #
+    def set_drop(self, worker: str, at: float) -> None: ...
+    def clear_drop(self, worker: str) -> None: ...
+    def drop_time(self, worker: str) -> Optional[float]: ...
+    def poison(self, worker: str, at: float) -> None: ...
+    def check_poison(self, worker: str) -> None: ...
+
+    # ------------------------- configuration -------------------------- #
+    def set_link(self, channel: str, worker: str, model: LinkModel) -> None: ...
+    def set_wire_dtype(self, channel: str, dtype: str) -> None: ...
+    def link(self, channel: str, worker: str) -> LinkModel: ...
+
+    # ----------------------------- clocks ------------------------------ #
+    def now(self, worker: str) -> float: ...
+    def advance(self, worker: str, seconds: float) -> None: ...
+    def set_clock(self, worker: str, at: float) -> None: ...
+
+
 class ChannelEnd:
     """One worker's handle on a channel — implements Table 2.
 
@@ -90,7 +200,7 @@ class ChannelEnd:
 
     def __init__(
         self,
-        backend: "InprocBackend",
+        backend: TransportBackend,
         channel: str,
         group: str,
         me: str,
@@ -162,30 +272,71 @@ class ChannelEnd:
     def empty(self) -> bool:
         return not self.ends()
 
+    # ------------------- clocks / failure emulation -------------------- #
+    # Role bodies reach the backend only through ChannelEnd; these wrappers
+    # cover the clock and cancellation surface so no role needs a concrete
+    # backend handle (the driver/worker split of the multiproc transport).
+    def now(self) -> float:
+        return self._backend.now(self.me)
+
+    def advance(self, seconds: float) -> None:
+        self._backend.advance(self.me, seconds)
+
+    def set_clock(self, at: float) -> None:
+        self._backend.set_clock(self.me, at)
+
+    def check_poison(self) -> None:
+        self._backend.check_poison(self.me)
+
+    def drop_time(self, worker: Optional[str] = None) -> Optional[float]:
+        return self._backend.drop_time(worker if worker is not None else self.me)
+
 
 class InprocBackend:
     """Thread-safe in-process message transport with an emulated clock.
 
-    Every (channel, group) is a mailbox keyed by (dst, src). Virtual time
-    advances by each message's modeled transfer duration; ``recv`` blocks the
-    receiving thread until real delivery, while ``delivered_at`` records the
-    *emulated* completion time used by the paper-experiment harnesses.
+    The reference ``TransportBackend`` implementation. Every (channel, group)
+    is a mailbox keyed by (dst, src). Virtual time advances by each message's
+    modeled transfer duration; ``recv`` blocks the receiving thread until real
+    delivery, while ``delivered_at`` records the *emulated* completion time
+    used by the paper-experiment harnesses.
+
+    ``wall_clock=True`` maps real elapsed time onto the same clock API: a
+    worker's clock never falls behind the wall-clock seconds since backend
+    creation, so transfer modeling, dropout schedules and arrival ordering
+    keep working when the backend serves real OS processes (the multiproc
+    transport hub wraps an instance in this mode).
     """
 
-    def __init__(self, name: str = "inproc", shared_broker: bool = False):
+    def __init__(
+        self,
+        name: str = "inproc",
+        shared_broker: bool = False,
+        wall_clock: bool = False,
+    ):
         self.name = name
         self.shared_broker = shared_broker
+        self.wall_clock = wall_clock
+        self._t0 = time.monotonic()
         self._lock = threading.RLock()
         self._cv = threading.Condition(self._lock)  # signaled on every delivery
         self._members: Dict[Tuple[str, str], List[str]] = collections.defaultdict(list)
         self._boxes: Dict[Tuple[str, str, str, str], "queue.Queue[Message]"] = {}
         self._links: Dict[Tuple[str, str], LinkModel] = {}
         self._wire_dtype: Dict[str, str] = {}
-        self._broker_free_at: Dict[str, float] = collections.defaultdict(float)
+        # broker contention is per *topic* — one receiver's subscription on a
+        # (channel, group): transfers to the same receiver serialize on the
+        # broker uplink, distinct topics proceed in parallel (§6.2)
+        self._broker_free_at: Dict[Tuple[str, str, str], float] = collections.defaultdict(
+            float
+        )
         self._clock: Dict[str, float] = collections.defaultdict(float)  # per-worker
         self._drop_at: Dict[str, float] = {}  # worker -> scheduled dropout time
         self._poisoned: Dict[str, float] = {}  # worker -> orphaned-at time
         self.stats: Dict[str, float] = collections.defaultdict(float)
+
+    def _wall(self) -> float:
+        return time.monotonic() - self._t0
 
     # ------------------------- configuration -------------------------- #
     def set_link(self, channel: str, worker: str, model: LinkModel) -> None:
@@ -272,24 +423,27 @@ class InprocBackend:
         nbytes = payload_bytes(payload, wire)
         sender_link = self.link(channel, src)
         dur = sender_link.transfer_time(nbytes)
+        topic = (channel, group, dst)
         with self._lock:
             start = self._clock[src]
+            if self.wall_clock:
+                start = max(start, self._wall())
             if self.shared_broker:
-                # broker serializes all transfers on the channel
-                start = max(start, self._broker_free_at[channel])
+                # broker serializes transfers on the destination's topic only
+                start = max(start, self._broker_free_at[topic])
             arrival = start + dur
             drop_at = self._drop_at.get(src)
             if drop_at is not None and arrival > drop_at:
                 # sender dies mid-transfer: nothing is delivered, and on a
-                # shared broker the aborted transfer occupies the uplink
+                # shared broker the aborted transfer occupies the topic
                 # only until the moment of death
                 if self.shared_broker:
-                    self._broker_free_at[channel] = max(
-                        self._broker_free_at[channel], min(drop_at, start + dur)
+                    self._broker_free_at[topic] = max(
+                        self._broker_free_at[topic], min(drop_at, start + dur)
                     )
                 self._check_alive(src, arrival)  # raises WorkerDropped
             if self.shared_broker:
-                self._broker_free_at[channel] = start + dur
+                self._broker_free_at[topic] = start + dur
             self._clock[src] = arrival
             self.stats[f"bytes:{channel}"] += nbytes
             self.stats[f"msgs:{channel}"] += 1
@@ -425,6 +579,14 @@ class InprocBackend:
     # ---------------------------- clocks ------------------------------ #
     def now(self, worker: str) -> float:
         with self._lock:
+            if self.wall_clock:
+                t = self._wall()
+                # a dropped worker's clock stays frozen at its dropout time —
+                # wall time must not silently resurrect it
+                drop_at = self._drop_at.get(worker)
+                if drop_at is not None:
+                    t = min(t, drop_at)
+                self._clock[worker] = max(self._clock[worker], t)
             return self._clock[worker]
 
     def advance(self, worker: str, seconds: float) -> None:
@@ -483,17 +645,30 @@ def recv_any_multi(
             s, payload, arrival = end.recv_any([src], timeout=1.0)
             return end, s, payload, arrival
         for end, _ in sources:
-            end._backend.check_poison(end.me)
+            end.check_poison()
         if deadline is not None and time.monotonic() >= deadline:
             raise queue.Empty
         time.sleep(poll)
 
 
-_BACKEND_FACTORIES: Dict[str, Callable[[], InprocBackend]] = {}
+_BACKEND_FACTORIES: Dict[str, Callable[[], TransportBackend]] = {}
 
 
-def register_backend(name: str, factory: Callable[[], InprocBackend]) -> None:
+def register_backend(name: str, factory: Callable[[], TransportBackend]) -> None:
     _BACKEND_FACTORIES[name] = factory
+
+
+def registered_backends() -> List[str]:
+    """Names of all registered transport backends."""
+    return sorted(_BACKEND_FACTORIES)
+
+
+def backend_factory(name: str) -> Callable[[], TransportBackend]:
+    if name not in _BACKEND_FACTORIES:
+        raise KeyError(
+            f"unknown backend {name!r}; registered: {sorted(_BACKEND_FACTORIES)}"
+        )
+    return _BACKEND_FACTORIES[name]
 
 
 register_backend("inproc", lambda: InprocBackend("inproc"))
@@ -506,28 +681,54 @@ register_backend("collective", lambda: InprocBackend("collective"))
 
 class ChannelManager:
     """Per-job channel fabric: instantiates one backend per channel spec and
-    hands out ``ChannelEnd`` s to workers (the SDK's channel manager)."""
+    hands out ``ChannelEnd`` s to workers (the SDK's channel manager).
 
-    def __init__(self, channel_specs: Sequence[ChannelSpec]):
+    ``backend_factory`` overrides the registry lookup with a per-spec factory
+    — the hook the multiproc worker runtime uses to route *every* channel
+    through its socket connection to the driver's transport hub while the
+    application code keeps talking to plain ``ChannelEnd`` s.
+    """
+
+    def __init__(
+        self,
+        channel_specs: Sequence[ChannelSpec],
+        backend_factory: Optional[Callable[[ChannelSpec], TransportBackend]] = None,
+    ):
         self._specs = {c.name: c for c in channel_specs}
-        self._backends: Dict[str, InprocBackend] = {}
+        self._backends: Dict[str, TransportBackend] = {}
         for c in channel_specs:
-            if c.backend not in _BACKEND_FACTORIES:
-                raise KeyError(
-                    f"unknown backend {c.backend!r} for channel {c.name!r}; "
-                    f"registered: {sorted(_BACKEND_FACTORIES)}"
-                )
-            backend = _BACKEND_FACTORIES[c.backend]()
+            if backend_factory is not None:
+                backend = backend_factory(c)
+            else:
+                if c.backend not in _BACKEND_FACTORIES:
+                    # the socket-backed flavors register on import of the
+                    # transport package — pull it in before giving up
+                    try:
+                        import repro.transport  # noqa: F401
+                    except ModuleNotFoundError as exc:
+                        # only a genuinely absent package is survivable; a
+                        # transitive import failure inside it must surface,
+                        # not masquerade as "unknown backend"
+                        if exc.name not in ("repro", "repro.transport"):
+                            raise
+                if c.backend not in _BACKEND_FACTORIES:
+                    raise KeyError(
+                        f"unknown backend {c.backend!r} for channel {c.name!r}; "
+                        f"registered: {sorted(_BACKEND_FACTORIES)}"
+                    )
+                backend = _BACKEND_FACTORIES[c.backend]()
             backend.set_wire_dtype(c.name, c.wire_dtype)
             self._backends[c.name] = backend
 
     def spec(self, channel: str) -> ChannelSpec:
         return self._specs[channel]
 
-    def backend(self, channel: str) -> InprocBackend:
+    def backend(self, channel: str) -> TransportBackend:
         return self._backends[channel]
 
-    def end(self, channel: str, group: str, worker: str) -> ChannelEnd:
+    def end(
+        self, channel: str, group: str, worker: str, join: bool = True
+    ) -> ChannelEnd:
         spec = self._specs[channel]
         my_role = worker.rsplit("-", 1)[0]
         peer_role: Optional[str] = None
@@ -537,8 +738,24 @@ class ChannelManager:
         e = ChannelEnd(
             self._backends[channel], channel, group, worker, peer_role=peer_role
         )
-        e.join()
+        if join:
+            e.join()
         return e
 
     def total_bytes(self, channel: str) -> float:
         return self._backends[channel].stats.get(f"bytes:{channel}", 0.0)
+
+    def close(self) -> None:
+        """Release transports that hold OS resources (idempotent).
+
+        Emu backends are plain objects and have no ``close``; socket-backed
+        ones (the multiproc loopback owns a listening hub) must be shut down
+        when the job ends or a long-lived control plane leaks fds/threads.
+        """
+        for backend in self._backends.values():
+            close = getattr(backend, "close", None)
+            if close is not None:
+                try:
+                    close()
+                except OSError:  # pragma: no cover - teardown best-effort
+                    pass

@@ -24,8 +24,14 @@ from repro.core.tag import TAG
 
 class RoleContext:
     """Everything a worker needs at runtime: its config, channel ends, the
-    job hyperparameters and a handle on the backend clocks (for emulated
-    compute time)."""
+    job hyperparameters and a handle on the per-channel clocks (for emulated
+    compute time).
+
+    Role bodies reach the transport exclusively through ``ChannelEnd`` — the
+    context's clock helpers resolve an end first, so the same program runs
+    unchanged whether the end is backed by in-process queues or by a socket
+    to the multiproc transport hub.
+    """
 
     def __init__(
         self,
@@ -43,6 +49,7 @@ class RoleContext:
         # computed statically from the expansion (no join races).
         self.static_members = dict(static_members or {})
         self._ends: Dict[str, ChannelEnd] = {}
+        self._clock_ends: Dict[str, ChannelEnd] = {}
 
     def end(self, channel: str) -> ChannelEnd:
         if channel not in self._ends:
@@ -50,11 +57,27 @@ class RoleContext:
             self._ends[channel] = self.channels.end(channel, group, self.worker.worker_id)
         return self._ends[channel]
 
+    def clock_end(self, channel: str) -> ChannelEnd:
+        """An end usable for clock/poison queries without joining the channel
+        (a HybridTrainer non-leader models compute time on the uplink it never
+        joins — joining as a side effect would corrupt the membership)."""
+        if channel in self._ends:
+            return self._ends[channel]
+        if channel not in self._clock_ends:
+            group = self.worker.group_of(channel)
+            self._clock_ends[channel] = self.channels.end(
+                channel, group, self.worker.worker_id, join=False
+            )
+        return self._clock_ends[channel]
+
     def advance_clock(self, channel: str, seconds: float) -> None:
-        self.channels.backend(channel).advance(self.worker.worker_id, seconds)
+        self.clock_end(channel).advance(seconds)
 
     def now(self, channel: str) -> float:
-        return self.channels.backend(channel).now(self.worker.worker_id)
+        return self.clock_end(channel).now()
+
+    def set_clock(self, channel: str, at: float) -> None:
+        self.clock_end(channel).set_clock(at)
 
 
 def bridge_clock(ctx: "RoleContext", channel: str) -> None:
@@ -64,9 +87,8 @@ def bridge_clock(ctx: "RoleContext", channel: str) -> None:
     sender above) has one clock per backend; without bridging, a send on the
     other channel would depart *before* the work that produced it finished,
     undercounting tree round times."""
-    me = ctx.worker.worker_id
     t = max(ctx.now(c) for c in ctx.worker.groups)
-    ctx.channels.backend(channel).set_clock(me, t)
+    ctx.set_clock(channel, t)
 
 
 def await_peer(ctx: "RoleContext", end: "ChannelEnd", timeout: float = 5.0) -> str:
@@ -75,14 +97,13 @@ def await_peer(ctx: "RoleContext", end: "ChannelEnd", timeout: float = 5.0) -> s
     During a dropout/re-join window a parent briefly leaves its channels; a
     child probing ``ends()`` right then must wait for the re-join (or for its
     own orphan poison) instead of crashing on an empty peer list."""
-    backend = ctx.channels.backend(end.channel)
     me = ctx.worker.worker_id
     deadline = time.monotonic() + timeout
     while True:
         peers = end.ends()
         if peers:
             return peers[0]
-        backend.check_poison(me)
+        end.check_poison()
         if time.monotonic() >= deadline:
             raise RuntimeError(
                 f"{me}: no peer on channel {end.channel!r} after {timeout}s "
@@ -111,6 +132,38 @@ def weighted_mean(
     if acc is None or total <= 0:
         return None, 0.0
     return jax.tree_util.tree_map(lambda x: x / total, acc), total
+
+
+def _fold_allreduce(
+    me: str,
+    own_weights: Any,
+    own_samples: float,
+    received: Sequence[Tuple[str, Any]],
+) -> Tuple[Any, int]:
+    """Sample-weighted mean of own + received models, folded in sorted
+    worker-id order so every ring member — on any transport backend, whatever
+    the arrival order — accumulates in the same sequence and lands on
+    byte-identical consensus weights."""
+    import jax
+
+    contributions = sorted(
+        [(me, {"weights": own_weights, "num_samples": own_samples})]
+        + list(received),
+        key=lambda t: t[0],
+    )
+    total = 0.0
+    acc = None
+    for _, msg in contributions:
+        n = float(msg.get("num_samples", 1))
+        total += n
+        scaled = jax.tree_util.tree_map(
+            lambda x: np.asarray(x, dtype=np.float64) * n, msg["weights"]
+        )
+        acc = scaled if acc is None else jax.tree_util.tree_map(np.add, acc, scaled)
+    mean = jax.tree_util.tree_map(
+        lambda a: (a / total).astype(np.float32), acc
+    )
+    return mean, int(total)
 
 
 class Role(abc.ABC):
@@ -238,9 +291,13 @@ class _AggregatorBase(Role):
         if self._work_done:
             return  # peers were just told to exit; nothing will arrive
         end = self.ctx.end(self.down_channel)
+        # sort by source id before folding: float accumulation order is then
+        # independent of join/arrival order, so the same seeded job produces
+        # byte-identical weights on every transport backend
+        arrived = sorted(end.recv_fifo(end.ends()), key=lambda t: t[0])
         updates = [
             (msg["weights"], float(msg.get("num_samples", 1)))
-            for _, msg in end.recv_fifo(end.ends())
+            for _, msg in arrived
         ]
         mean, total = weighted_mean(updates)
         if mean is not None:
@@ -371,25 +428,12 @@ class DistributedTrainer(Trainer):
             self.weights = self.config.get("init_weights")
 
     def allreduce(self) -> None:
-        import jax
-
         end = self.ctx.end(self.ring_channel)
         peers = end.ends()
         end.broadcast({"weights": self.weights, "num_samples": self.num_samples})
-        total = float(self.num_samples)
-        acc = jax.tree_util.tree_map(
-            lambda x: np.asarray(x, dtype=np.float64) * total, self.weights
-        )
-        for _, msg in end.recv_fifo(peers):
-            n = float(msg.get("num_samples", 1))
-            total += n
-            acc = jax.tree_util.tree_map(
-                lambda a, x: a + np.asarray(x, dtype=np.float64) * n,
-                acc,
-                msg["weights"],
-            )
-        self.weights = jax.tree_util.tree_map(
-            lambda a: (a / total).astype(np.float32), acc
+        received = list(end.recv_fifo(peers))
+        self.weights, _ = _fold_allreduce(
+            end.me, self.weights, float(self.num_samples), received
         )
         self._round += 1
         if self._round >= self.rounds:
@@ -430,29 +474,15 @@ class HybridTrainer(Trainer):
     def cluster_allreduce(self) -> None:
         if self._work_done:
             return
-        import jax
-
         end = self.ctx.end(self.ring_channel)
         peers = end.ends()
         if not peers:
             return
         end.broadcast({"weights": self.weights, "num_samples": self.num_samples})
-        total = float(self.num_samples)
-        acc = jax.tree_util.tree_map(
-            lambda x: np.asarray(x, dtype=np.float64) * total, self.weights
+        received = list(end.recv_fifo(peers))
+        self.weights, self._cluster_samples = _fold_allreduce(
+            end.me, self.weights, float(self.num_samples), received
         )
-        for _, msg in end.recv_fifo(peers):
-            n = float(msg.get("num_samples", 1))
-            total += n
-            acc = jax.tree_util.tree_map(
-                lambda a, x: a + np.asarray(x, dtype=np.float64) * n,
-                acc,
-                msg["weights"],
-            )
-        self.weights = jax.tree_util.tree_map(
-            lambda a: (a / total).astype(np.float32), acc
-        )
-        self._cluster_samples = int(total)
 
     def fetch(self) -> None:
         """Leader fetches from the aggregator and re-broadcasts in-cluster."""

@@ -112,7 +112,10 @@ class _PolicyBase:
         pol = self.config.get("runtime_policy")
         if pol is None:
             raise RuntimeError("policy-lowered aggregator needs 'runtime_policy'")
-        return pol
+        # per-tier parameter overrides: a tiers entry may be a dict like
+        # {"mode": "deadline", "deadline": 1.5} — resolve this role's view so
+        # an edge tier can run a tighter deadline than the core
+        return pol.for_role(self.ctx.worker.role)
 
     def _down(self):
         return self.ctx.end(self.down_channel)
@@ -135,7 +138,6 @@ class _PolicyBase:
         remaining = set(expected)
         arrived: List[Tuple[str, Any, float]] = []
         grace_end = time.monotonic() + float(pol.grace)
-        backend = self.ctx.channels.backend(self.down_channel)
         while remaining:
             timeout = grace_end - time.monotonic()
             if timeout <= 0:
@@ -146,7 +148,7 @@ class _PolicyBase:
             live = [
                 t
                 for t in remaining
-                if backend.drop_time(t) is None or backend.drop_time(t) > deadline
+                if end.drop_time(t) is None or end.drop_time(t) > deadline
             ]
             if not live:
                 timeout = min(timeout, 0.25)
@@ -181,8 +183,8 @@ class _PolicyBase:
         if not np.isfinite(round_end):
             round_end = last_arrival
         me = self.ctx.worker.worker_id
-        backend.set_clock(me, round_end)
-        drop_at = backend.drop_time(me)
+        end.set_clock(round_end)
+        drop_at = end.drop_time()
         if drop_at is not None and round_end > drop_at:
             raise WorkerDropped(me, drop_at)
         return on_time, late, remaining, round_end

@@ -34,7 +34,12 @@ import importlib
 import threading
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.channels import ChannelManager, InprocBackend, LinkModel, WorkerDropped
+from repro.core.channels import (
+    ChannelManager,
+    LinkModel,
+    TransportBackend,
+    WorkerDropped,
+)
 from repro.core.expansion import JobSpec, WorkerConfig, expand
 from repro.core.registry import ResourceRegistry
 from repro.core.roles import Aggregator, GlobalAggregatorBase, Role, RoleContext
@@ -70,13 +75,19 @@ class RuntimePolicy:
     """
 
     mode: str = "sync"  # "sync" | "deadline" | "async"
-    # role name -> mode, lowering *every* tier of the aggregation tree:
-    # intermediate H-FL aggregators listed here collect from their group
-    # under their own deadline / FedBuff buffer and relay staleness-annotated
-    # partial aggregates upward. Roles not listed default to the root-only
-    # behavior: the root aggregator runs ``mode``, everything else is sync.
-    # ``tiers={}`` (the default) is bit-identical to root-only lowering.
-    tiers: Dict[str, str] = dataclasses.field(default_factory=dict)
+    # role name -> mode (or parameter-override dict), lowering *every* tier
+    # of the aggregation tree: intermediate H-FL aggregators listed here
+    # collect from their group under their own deadline / FedBuff buffer and
+    # relay staleness-annotated partial aggregates upward. Roles not listed
+    # default to the root-only behavior: the root aggregator runs ``mode``,
+    # everything else is sync. ``tiers={}`` (the default) is bit-identical to
+    # root-only lowering.
+    #
+    # A value is either a plain mode string ("deadline") or an override dict
+    # {"mode": "deadline", "deadline": 1.5, "buffer_size": 3, ...} so an edge
+    # tier can run tighter knobs than the core; keys other than "mode" fall
+    # back to the policy-wide fields (see ``TIER_PARAM_KEYS``).
+    tiers: Dict[str, Any] = dataclasses.field(default_factory=dict)
     # worker_id -> virtual arrival time (seconds); absent workers arrive at 0
     arrivals: Dict[str, float] = dataclasses.field(default_factory=dict)
     # worker_id -> virtual time at which the worker drops mid-round
@@ -97,13 +108,33 @@ class RuntimePolicy:
     grace: float = 5.0
 
     MODES = ("sync", "deadline", "async")
+    # numeric knobs a tiers override dict may set per role
+    TIER_PARAM_KEYS = (
+        "deadline", "min_participants", "buffer_size", "staleness_exp", "grace",
+    )
 
     def __post_init__(self) -> None:
         if self.mode not in self.MODES:
             raise ValueError(
                 f"unknown RuntimePolicy.mode {self.mode!r}; one of {self.MODES}"
             )
-        for role, mode in self.tiers.items():
+        for role, entry in self.tiers.items():
+            if isinstance(entry, dict):
+                if "mode" not in entry:
+                    raise ValueError(
+                        f"RuntimePolicy.tiers override dict for role {role!r} "
+                        "needs a 'mode' key"
+                    )
+                unknown = set(entry) - {"mode"} - set(self.TIER_PARAM_KEYS)
+                if unknown:
+                    raise ValueError(
+                        f"unknown RuntimePolicy.tiers override key(s) "
+                        f"{sorted(unknown)} for role {role!r}; allowed: "
+                        f"{('mode',) + self.TIER_PARAM_KEYS}"
+                    )
+                mode = entry["mode"]
+            else:
+                mode = entry
             if mode not in self.MODES:
                 raise ValueError(
                     f"unknown RuntimePolicy.tiers mode {mode!r} for role "
@@ -119,10 +150,31 @@ class RuntimePolicy:
                     f"rejoin time for {wid!r} must be after its dropout"
                 )
 
+    def tier_mode(self, role: str) -> Optional[str]:
+        """The mode a ``tiers`` entry assigns to ``role`` (None if absent)."""
+        entry = self.tiers.get(role)
+        if entry is None:
+            return None
+        return entry["mode"] if isinstance(entry, dict) else entry
+
+    def for_role(self, role: str) -> "RuntimePolicy":
+        """This policy as seen by ``role``: tiers override dicts replace the
+        policy-wide numeric knobs; a plain-string (or absent) entry shares
+        them — keeping plain strings working exactly as before."""
+        entry = self.tiers.get(role)
+        if not isinstance(entry, dict):
+            return self
+        overrides = {k: v for k, v in entry.items() if k != "mode"}
+        if not overrides:
+            return self
+        return dataclasses.replace(self, mode=entry["mode"], **overrides)
+
     @property
     def is_lowering(self) -> bool:
         """True when any tier of the tree is policy-lowered (non-sync)."""
-        return self.mode != "sync" or any(m != "sync" for m in self.tiers.values())
+        return self.mode != "sync" or any(
+            self.tier_mode(r) != "sync" for r in self.tiers
+        )
 
     @property
     def is_event_driven(self) -> bool:
@@ -182,9 +234,13 @@ class JobResult:
     def global_weights(self) -> Any:
         # resolve the root by program class, not by worker-id prefix: a TAG
         # is free to name its root role anything (renamed roles broke the
-        # old "global-aggregator" string match)
+        # old "global-aggregator" string match). Multiproc jobs return
+        # RemoteProgram stubs that carry the class check's verdict as an
+        # ``is_root`` flag (the class itself stays in the worker process).
         for prog in self.programs.values():
-            if isinstance(prog, GlobalAggregatorBase):
+            if isinstance(prog, GlobalAggregatorBase) or getattr(
+                prog, "is_root", False
+            ):
                 return prog.weights
         # custom root programs that don't subclass GlobalAggregator still
         # resolve by the conventional role name
@@ -237,7 +293,7 @@ class JobRuntime:
         """Per-tier policy resolution: an explicit ``tiers`` entry wins; the
         root aggregator defaults to the policy's ``mode`` (PR-1 root-only
         behavior); every other role defaults to sync."""
-        explicit = self.policy.tiers.get(w.role)
+        explicit = self.policy.tier_mode(w.role)
         if explicit is not None:
             return explicit
         if issubclass(cls, GlobalAggregatorBase):
@@ -292,16 +348,20 @@ class JobRuntime:
         )
         return cls(ctx)
 
-    def _backends_of(self, w: WorkerConfig) -> List[InprocBackend]:
+    def _backends_of(self, w: WorkerConfig) -> List[TransportBackend]:
         return [self.channels.backend(ch) for ch in w.groups]
 
     # ------------------------------------------------------------------ #
     # execution
     # ------------------------------------------------------------------ #
     def run(self, timeout: float = 120.0) -> JobResult:
-        if self.policy.is_event_driven:
-            return self._run_events(timeout)
-        return self._run_sync(timeout)
+        try:
+            if self.policy.is_event_driven:
+                return self._run_events(timeout)
+            return self._run_sync(timeout)
+        finally:
+            # release socket-backed channel transports (no-op for emu ones)
+            self.channels.close()
 
     def _run_sync(self, timeout: float) -> JobResult:
         """Classic barriered execution (byte-identical to the pre-policy

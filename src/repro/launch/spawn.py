@@ -1,0 +1,276 @@
+"""Multi-process job launcher: an expanded TAG as a real process tree (§5.3).
+
+This is the driver/worker split of the multiproc transport:
+
+* the **driver** (this process) expands the JobSpec, starts a
+  ``TransportHub`` owning all channel state, spawns one OS process per
+  worker, and collects a ``JobResult``;
+* each **worker process** rebuilds its ``RoleContext`` against a
+  ``ChannelManager`` whose every channel routes through a socket to the hub
+  (``MultiprocBackend``) and runs its role program unchanged — the same
+  classes that run threaded against ``InprocBackend``.
+
+A seeded sync job therefore produces byte-identical global weights on both
+deployments (the transport-layer acceptance criterion); what changes is the
+deployment, never the application logic.
+
+Scope: the spawner lowers the classic barriered **sync** execution. Policy
+modes (deadline/async) and dropout/re-join schedules are the in-process
+event runtime's territory (``JobRuntime``) until the hub grows a process
+supervisor; requesting them here raises ``NotImplementedError`` up front
+rather than hanging a process tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+import multiprocessing
+import queue as queue_mod
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.channels import ChannelManager, LinkModel
+from repro.core.expansion import JobSpec, WorkerConfig, expand
+from repro.core.registry import ResourceRegistry
+from repro.core.roles import GlobalAggregatorBase, RoleContext
+from repro.core.runtime import (
+    JobResult,
+    RuntimePolicy,
+    resolve_program,
+    static_membership,
+)
+from repro.transport.multiproc import TransportHub, hub_backend_factory
+
+__all__ = ["MultiprocLauncher", "RemoteProgram", "run_job_multiproc"]
+
+
+@dataclasses.dataclass
+class RemoteProgram:
+    """Driver-side stub for a program that ran in a worker process.
+
+    Carries the result surface (`weights`, `metrics`) back across the
+    process boundary; ``is_root`` records the worker-side
+    ``isinstance(prog, GlobalAggregatorBase)`` verdict so
+    ``JobResult.global_weights`` resolves the root without the class."""
+
+    worker_id: str
+    role: str
+    weights: Any = None
+    metrics: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+    is_root: bool = False
+
+
+def _worker_entry(
+    address: Tuple[str, int],
+    job: JobSpec,
+    worker: WorkerConfig,
+    hyperparams: Dict[str, Any],
+    static_members: Dict[str, List[str]],
+    program_cls: Optional[type],
+    barrier: Any,
+    result_q: Any,
+    barrier_timeout: float,
+) -> None:
+    """Runs inside the spawned worker process."""
+    worker_id = worker.worker_id
+    try:
+        channels = ChannelManager(
+            job.tag.channels, backend_factory=hub_backend_factory(address)
+        )
+        cls = program_cls if program_cls is not None else resolve_program(worker.program)
+        ctx = RoleContext(
+            worker, job.tag, channels,
+            hyperparams=hyperparams, static_members=static_members,
+        )
+        prog = cls(ctx)
+        prog.pre_run()
+        # same barrier the threaded runtime enforces between pre_run and run:
+        # no worker may see a half-joined group
+        barrier.wait(timeout=barrier_timeout)
+        prog.run()
+        summary = {
+            "weights": getattr(prog, "weights", None),
+            "metrics": list(getattr(prog, "metrics", [])),
+            "is_root": isinstance(prog, GlobalAggregatorBase),
+        }
+        result_q.put((worker_id, "ok", summary))
+    except BaseException as exc:  # noqa: BLE001 - marshalled to the driver
+        # break the start barrier so healthy peers fail fast (as
+        # BrokenBarrierError) instead of waiting out the whole job timeout
+        # for a party that will never arrive; harmless once everyone passed
+        try:
+            barrier.abort()
+        except Exception:
+            pass
+        try:
+            result_q.put((worker_id, "err", (type(exc).__name__, str(exc))))
+        except Exception:
+            pass
+
+
+class MultiprocLauncher:
+    """Expand + deploy + run a JobSpec as one OS process per worker."""
+
+    def __init__(
+        self,
+        job: JobSpec,
+        registry: Optional[ResourceRegistry] = None,
+        link_models: Optional[Dict[Tuple[str, str], LinkModel]] = None,
+        per_worker_hyperparams: Optional[Dict[str, Dict[str, Any]]] = None,
+        program_overrides: Optional[Dict[str, type]] = None,
+        policy: Optional[RuntimePolicy] = None,
+        start_method: str = "spawn",
+    ) -> None:
+        if policy is not None and (policy.is_event_driven or policy.mode != "sync"):
+            raise NotImplementedError(
+                "the multiproc spawner runs the barriered sync execution; "
+                "deadline/async policies and dropout schedules run on the "
+                "in-process event runtime (repro.core.runtime.JobRuntime)"
+            )
+        self.job = job
+        self.workers = expand(job, registry)
+        self.link_models = dict(link_models or {})
+        self.per_worker_hyperparams = dict(per_worker_hyperparams or {})
+        self.program_overrides = dict(program_overrides or {})
+        # "spawn" keeps children clear of the driver's jax/thread state; the
+        # override exists for hosts where spawn is unavailable
+        self._ctx = multiprocessing.get_context(start_method)
+        self._membership = static_membership(self.workers, job.tag)
+
+    # ------------------------------------------------------------------ #
+    def _worker_args(
+        self, w: WorkerConfig, address: Tuple[str, int], barrier: Any,
+        result_q: Any, barrier_timeout: float,
+    ) -> Tuple[Any, ...]:
+        hp = dict(self.job.hyperparams)
+        hp.update(self.per_worker_hyperparams.get(w.worker_id, {}))
+        static = {
+            ch: self._membership[(ch, group)] for ch, group in w.groups.items()
+        }
+        return (
+            address, self.job, w, hp, static,
+            self.program_overrides.get(w.role), barrier, result_q, barrier_timeout,
+        )
+
+    def run(self, timeout: float = 120.0) -> JobResult:
+        hub = TransportHub()
+        for c in self.job.tag.channels:
+            hub.backend.set_wire_dtype(c.name, c.wire_dtype)
+        for (channel, worker), model in self.link_models.items():
+            hub.backend.set_link(channel, worker, model)
+
+        result_q = self._ctx.Queue()
+        barrier = self._ctx.Barrier(len(self.workers))
+        procs: Dict[str, Any] = {}
+        programs: Dict[str, Any] = {}
+        errors: Dict[str, BaseException] = {}
+        deadline = time.monotonic() + timeout
+        try:
+            for w in self.workers:
+                p = self._ctx.Process(
+                    target=_worker_entry,
+                    args=self._worker_args(w, hub.address, barrier, result_q, timeout),
+                    name=f"flame-{w.worker_id}",
+                    daemon=True,
+                )
+                p.start()
+                procs[w.worker_id] = p
+
+            # drain results before joining: a child blocks on its queue
+            # feeder thread until the driver consumes its (possibly large)
+            # weights payload
+            pending = {w.worker_id for w in self.workers}
+            by_id = {w.worker_id: w for w in self.workers}
+
+            def _absorb(wid: str, status: str, payload: Any) -> None:
+                pending.discard(wid)
+                if status == "ok":
+                    programs[wid] = RemoteProgram(
+                        worker_id=wid,
+                        role=by_id[wid].role,
+                        weights=payload["weights"],
+                        metrics=payload["metrics"],
+                        is_root=bool(payload["is_root"]),
+                    )
+                else:
+                    etype, emsg = payload
+                    errors[wid] = RuntimeError(f"[{etype}] {emsg}")
+
+            while pending:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break
+                try:
+                    item = result_q.get(timeout=min(remaining, 0.5))
+                except queue_mod.Empty:
+                    if all(not procs[wid].is_alive() for wid in pending):
+                        break  # every straggler died without reporting
+                    continue
+                _absorb(*item)
+
+            # final sweep: a worker may have exited between the Empty poll
+            # and the liveness check with its result still buffered in the
+            # queue's pipe — don't misreport it as result-less
+            while pending:
+                try:
+                    item = result_q.get(timeout=0.5)
+                except queue_mod.Empty:
+                    break
+                _absorb(*item)
+
+            if pending:
+                alive = [wid for wid in pending if procs[wid].is_alive()]
+                if alive:
+                    errors["__timeout__"] = TimeoutError(
+                        f"{len(alive)} worker processes still running after "
+                        f"{timeout}s: {sorted(alive)}"
+                    )
+                for wid in pending:
+                    if wid in errors:
+                        continue
+                    if procs[wid].is_alive():
+                        errors[wid] = TimeoutError(
+                            f"worker process {wid!r} hung past the {timeout}s "
+                            "deadline (killed by the driver)"
+                        )
+                    else:
+                        errors[wid] = RuntimeError(
+                            f"worker process {wid!r} exited without a result "
+                            f"(exitcode={procs[wid].exitcode})"
+                        )
+        finally:
+            # hard stop: a hung child must never wedge the driver (or CI)
+            for p in procs.values():
+                p.join(timeout=5.0)
+                if p.is_alive():
+                    p.terminate()
+                    p.join(timeout=5.0)
+                if p.is_alive():  # pragma: no cover - last resort
+                    p.kill()
+                    p.join(timeout=5.0)
+            result_q.close()
+            hub.close()
+
+        channel_bytes = {
+            c.name: hub.backend.stats.get(f"bytes:{c.name}", 0.0)
+            for c in self.job.tag.channels
+        }
+        for w in self.workers:  # stubs for workers that returned nothing
+            programs.setdefault(
+                w.worker_id, RemoteProgram(worker_id=w.worker_id, role=w.role)
+            )
+        return JobResult(
+            workers=self.workers,
+            programs=programs,
+            channel_bytes=channel_bytes,
+            errors=errors,
+        )
+
+
+def run_job_multiproc(
+    job: JobSpec,
+    registry: Optional[ResourceRegistry] = None,
+    **kwargs: Any,
+) -> JobResult:
+    """One-call multiproc deployment, mirroring ``repro.core.runtime.run_job``."""
+    timeout = float(kwargs.pop("timeout", 120.0))
+    return MultiprocLauncher(job, registry, **kwargs).run(timeout=timeout)

@@ -18,7 +18,7 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
-from repro.core.channels import ChannelManager, LinkModel
+from repro.core.channels import ChannelManager, LinkModel, TransportBackend
 from repro.core.expansion import JobSpec, WorkerConfig, expand
 from repro.core.registry import ComputeSpec, RegistryError, ResourceRegistry
 from repro.core.roles import Role, RoleContext
@@ -183,6 +183,10 @@ class JobRecord:
     link_models: Dict[Tuple[str, str], LinkModel] = dataclasses.field(
         default_factory=dict
     )
+    # optional transport override: route every channel of this job through a
+    # caller-provided backend (e.g. a MultiprocBackend client pointed at a
+    # TransportHub) instead of the per-spec registry lookup
+    backend_factory: Optional[Callable[[Any], TransportBackend]] = None
 
 
 class Controller:
@@ -206,7 +210,9 @@ class Controller:
         self.db[record.spec.job_id] = record
         record.workers = expand(record.spec, self.registry)
         record.membership = static_membership(record.workers, record.spec.tag)
-        record.channels = ChannelManager(record.spec.tag.channels)
+        record.channels = ChannelManager(
+            record.spec.tag.channels, backend_factory=record.backend_factory
+        )
         for (channel, worker), model in record.link_models.items():
             record.channels.backend(channel).set_link(channel, worker, model)
         record.state = JobState.EXPANDED
@@ -247,6 +253,11 @@ class Controller:
         elif "failed" in statuses:
             record.state = JobState.FAILED
         self.notifier.publish(Event("revoke", job_id, {}))
+        # release socket-backed transports only once the job actually ended —
+        # a timed-out wait leaves a RUNNING job's channels alive
+        if record.state in (JobState.COMPLETED, JobState.FAILED):
+            if record.channels is not None:
+                record.channels.close()
         return record.state
 
     def terminate(self, job_id: str) -> None:
@@ -254,6 +265,8 @@ class Controller:
         for agent in record.agents.values():
             agent.terminate()
         record.state = JobState.TERMINATED
+        if record.channels is not None:
+            record.channels.close()  # release socket-backed transports
 
     def _on_worker_status(self, event: Event) -> None:
         record = self.db.get(event.job_id)
@@ -286,12 +299,14 @@ class APIServer:
         per_worker_hyperparams: Optional[Dict[str, Dict[str, Any]]] = None,
         program_overrides: Optional[Dict[str, type]] = None,
         link_models: Optional[Dict[Tuple[str, str], LinkModel]] = None,
+        backend_factory: Optional[Callable[[Any], TransportBackend]] = None,
     ) -> str:
         record = JobRecord(
             spec=spec,
             per_worker_hyperparams=dict(per_worker_hyperparams or {}),
             program_overrides=dict(program_overrides or {}),
             link_models=dict(link_models or {}),
+            backend_factory=backend_factory,
         )
         self.controller.submit(record)
         return spec.job_id

@@ -1,0 +1,22 @@
+"""Pluggable transport subsystem.
+
+``repro.core.channels`` defines the ``TransportBackend`` protocol and the
+in-process emulation backends; this package adds everything needed to leave
+the process boundary:
+
+* ``wire``       — deterministic binary serialization of jax/numpy pytrees and
+  ``Message`` envelopes (no pickle on the wire), plus length-prefixed socket
+  framing.
+* ``multiproc``  — a real multi-process transport: a ``TransportHub`` broker in
+  the driver process and a ``MultiprocBackend`` client speaking the protocol
+  over local sockets from each worker process.
+* ``conformance``— the shared transport-conformance suite every backend
+  (inproc, mqtt-emu, multiproc, ...) must pass.
+
+The process-tree launcher that deploys an expanded TAG over this transport
+lives in ``repro.launch.spawn``.
+"""
+from repro.transport.multiproc import MultiprocBackend, TransportHub
+from repro.transport.wire import decode, encode
+
+__all__ = ["MultiprocBackend", "TransportHub", "encode", "decode"]

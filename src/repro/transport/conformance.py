@@ -1,0 +1,357 @@
+"""Shared transport-conformance suite.
+
+Every ``TransportBackend`` implementation — inproc, mqtt-emu, p2p-emu,
+multiproc — must pass the same semantics checks; ``tests/
+test_transport_conformance.py`` parametrizes this suite over all registered
+backends plus a live ``TransportHub``. Keeping the checks in the library (not
+the test tree) means worker *processes* can import the reference programs
+(classes defined inside a test function would not survive a ``spawn``
+pickle), and downstream backends get the suite for free.
+
+Each check takes a zero-argument ``factory`` producing a **fresh** backend
+and raises ``AssertionError`` (or an unexpected exception) on a conformance
+violation. Checks that assert exact clock arithmetic expect virtual-clock
+semantics — run hubs with ``wall_clock=False`` here; the wall-clock mapping
+is exercised by the end-to-end multiproc job tests.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.channels import (
+    TRANSPORT_OPS,
+    ChannelEnd,
+    LinkModel,
+    TransportBackend,
+    WorkerDropped,
+    recv_any_multi,
+)
+from repro.core.roles import Trainer
+
+Factory = Callable[[], TransportBackend]
+
+CH, G = "conf-ch", "default"
+
+
+def _pair(backend: TransportBackend, a: str = "a-0", b: str = "b-0"):
+    backend.join(CH, G, a)
+    backend.join(CH, G, b)
+    return (
+        ChannelEnd(backend, CH, G, a),
+        ChannelEnd(backend, CH, G, b),
+    )
+
+
+# ------------------------------------------------------------------ #
+# checks
+# ------------------------------------------------------------------ #
+def check_protocol_surface(factory: Factory) -> None:
+    """Every protocol op exists and is callable; name/stats attributes too."""
+    be = factory()
+    for op in TRANSPORT_OPS:
+        assert callable(getattr(be, op, None)), f"missing transport op {op!r}"
+    assert isinstance(be.name, str) and be.name
+    assert hasattr(be, "stats")
+
+
+def check_send_recv_roundtrip(factory: Factory) -> None:
+    """A nested pytree with float32 arrays round-trips bit-exactly."""
+    be = factory()
+    ea, eb = _pair(be)
+    payload = {
+        "weights": {
+            "w": np.arange(12, dtype=np.float32).reshape(3, 4) * np.float32(0.1),
+            "b": np.zeros((4,), np.float32),
+        },
+        "num_samples": 7,
+        "tags": ["x", "y"],
+        "done": False,
+        "version": None,
+    }
+    ea.send("b-0", payload)
+    got = eb.recv("a-0")
+    assert got["num_samples"] == 7 and got["done"] is False and got["version"] is None
+    assert got["tags"] == ["x", "y"]
+    assert np.asarray(got["weights"]["w"]).tobytes() == payload["weights"]["w"].tobytes()
+    assert np.asarray(got["weights"]["b"]).dtype == np.float32
+
+
+def check_membership(factory: Factory) -> None:
+    be = factory()
+    for w in ("a-0", "a-1", "b-0"):
+        be.join(CH, G, w)
+    be.join(CH, G, "a-0")  # double join is idempotent
+    assert sorted(be.peers(CH, G, "b-0")) == ["a-0", "a-1"]
+    assert sorted(be.peers(CH, G, "a-0")) == ["a-1", "b-0"]
+    be.leave(CH, G, "a-1")
+    assert sorted(be.peers(CH, G, "b-0")) == ["a-0"]
+    # role filtering through ChannelEnd
+    end = ChannelEnd(be, CH, G, "b-0", peer_role="a")
+    assert end.ends() == ["a-0"]
+
+
+def check_fifo_order(factory: Factory) -> None:
+    """recv_fifo yields in emulated-arrival order and advances the clock."""
+    be = factory()
+    be.set_link(CH, "a-0", LinkModel(latency=5.0))
+    be.set_link(CH, "a-1", LinkModel(latency=2.0))
+    for w in ("a-0", "a-1", "b-0"):
+        be.join(CH, G, w)
+    # fast sender first so the expected order also holds under a contended
+    # shared-broker model (serialization can only push a-0 later)
+    be.send(CH, G, "a-1", "b-0", "fast")
+    be.send(CH, G, "a-0", "b-0", "slow")
+    got = list(be.recv_fifo(CH, G, "b-0", ["a-0", "a-1"], timeout=5.0))
+    assert got == [("a-1", "fast"), ("a-0", "slow")]
+    assert be.now("b-0") >= 5.0
+
+
+def check_peek_nonblocking(factory: Factory) -> None:
+    be = factory()
+    ea, eb = _pair(be)
+    assert eb.peek("a-0") is None
+    ea.send("b-0", 42)
+    assert eb.peek("a-0") == 42  # non-consuming
+    assert eb.recv("a-0") == 42
+    assert eb.peek("a-0") is None
+
+
+def check_earliest_empty_ends(factory: Factory) -> None:
+    """``earliest`` over no ends / empty mailboxes is None, never an error."""
+    be = factory()
+    ea, eb = _pair(be)
+    assert eb.earliest([]) is None
+    assert eb.earliest(["a-0"]) is None  # joined, nothing sent
+    assert eb.earliest(["ghost-7"]) is None  # never joined at all
+    be.set_link(CH, "a-0", LinkModel(latency=3.0))
+    ea.send("b-0", "x")
+    got = eb.earliest(["a-0", "ghost-7"])
+    assert got is not None
+    arrival, end = got
+    assert end == "a-0" and arrival >= 3.0
+    # non-consuming: the message is still there
+    assert eb.recv("a-0") == "x"
+
+
+def check_recv_timeout_empty(factory: Factory) -> None:
+    be = factory()
+    _, eb = _pair(be)
+    t0 = time.monotonic()
+    try:
+        eb.recv("a-0", timeout=0.1)
+    except queue.Empty:
+        pass
+    else:
+        raise AssertionError("recv on an empty mailbox must raise queue.Empty")
+    try:
+        eb.recv_any(["a-0"], timeout=0.1)
+    except queue.Empty:
+        pass
+    else:
+        raise AssertionError("recv_any on empty mailboxes must raise queue.Empty")
+    assert time.monotonic() - t0 < 5.0
+
+
+def check_recv_any_picks_earliest(factory: Factory) -> None:
+    be = factory()
+    be.set_link(CH, "a-0", LinkModel(latency=9.0))
+    be.set_link(CH, "a-1", LinkModel(latency=1.0))
+    for w in ("a-0", "a-1", "b-0"):
+        be.join(CH, G, w)
+    be.send(CH, G, "a-1", "b-0", "early")
+    be.send(CH, G, "a-0", "b-0", "late")
+    end, payload, arrival = be.recv_any(CH, G, "b-0", ["a-0", "a-1"], timeout=5.0)
+    assert (end, payload) == ("a-1", "early")
+    assert arrival >= 1.0
+    # advance=False leaves the receiver clock untouched
+    before = be.now("b-0")
+    end, payload, arrival = be.recv_any(
+        CH, G, "b-0", ["a-0", "a-1"], timeout=5.0, advance=False
+    )
+    assert (end, payload) == ("a-0", "late")
+    assert be.now("b-0") == before
+
+
+def check_poison_wakes_blocked_recv(factory: Factory) -> None:
+    """poison() interrupts a receive already blocked in the transport."""
+    be = factory()
+    _, eb = _pair(be)
+    caught: List[BaseException] = []
+    started = threading.Event()
+
+    def _blocked() -> None:
+        started.set()
+        try:
+            eb.recv("a-0", timeout=30.0)
+        except BaseException as exc:  # noqa: BLE001
+            caught.append(exc)
+
+    t = threading.Thread(target=_blocked, daemon=True)
+    t.start()
+    started.wait(5.0)
+    time.sleep(0.2)  # let the receive actually block inside the transport
+    be.poison("b-0", at=1.25)
+    t.join(timeout=5.0)
+    assert not t.is_alive(), "poison did not wake the blocked recv"
+    assert len(caught) == 1 and isinstance(caught[0], WorkerDropped)
+    assert caught[0].worker == "b-0" and caught[0].at == 1.25
+
+
+def check_poison_wakes_recv_any_multi(factory: Factory) -> None:
+    """poison() unblocks a cross-channel recv_any_multi promptly."""
+    be = factory()
+    be.join(CH, G, "b-0")
+    be.join("conf-ch2", G, "b-0")
+    end1 = ChannelEnd(be, CH, G, "b-0")
+    end2 = ChannelEnd(be, "conf-ch2", G, "b-0")
+    caught: List[BaseException] = []
+    started = threading.Event()
+
+    def _blocked() -> None:
+        started.set()
+        try:
+            recv_any_multi([(end1, ["a-0"]), (end2, ["c-0"])], timeout=30.0)
+        except BaseException as exc:  # noqa: BLE001
+            caught.append(exc)
+
+    t = threading.Thread(target=_blocked, daemon=True)
+    t.start()
+    started.wait(5.0)
+    time.sleep(0.2)
+    t0 = time.monotonic()
+    be.poison("b-0", at=2.5)
+    t.join(timeout=5.0)
+    assert not t.is_alive(), "poison did not wake recv_any_multi"
+    assert time.monotonic() - t0 < 3.0, "recv_any_multi woke too slowly"
+    assert len(caught) == 1 and isinstance(caught[0], WorkerDropped)
+    assert caught[0].at == 2.5
+
+
+def check_dropout_mid_recv_fifo(factory: Factory) -> None:
+    """A receiver whose dropout time precedes a message's arrival dies while
+    consuming recv_fifo — not silently after it."""
+    be = factory()
+    be.set_link(CH, "a-0", LinkModel(latency=10.0))  # arrival at t=10
+    ea, eb = _pair(be)
+    be.set_drop("b-0", at=5.0)  # b-0 dies before the delivery completes
+    ea.send("b-0", "never-seen")
+    gen = eb.recv_fifo(["a-0"], timeout=5.0)
+    try:
+        list(gen)
+    except WorkerDropped as exc:
+        assert exc.worker == "b-0" and exc.at == 5.0
+    else:
+        raise AssertionError("recv_fifo ignored the receiver's dropout schedule")
+    # the receiver's clock froze at the dropout time
+    assert be.now("b-0") == 5.0
+
+
+def check_dropout_on_send(factory: Factory) -> None:
+    """A sender dying mid-transfer delivers nothing."""
+    be = factory()
+    be.set_link(CH, "a-0", LinkModel(bandwidth=10.0))  # 100B -> 10s transfer
+    ea, eb = _pair(be)
+    be.set_drop("a-0", at=4.0)
+    try:
+        ea.send("b-0", np.zeros(25, np.float32))
+    except WorkerDropped as exc:
+        assert exc.worker == "a-0" and exc.at == 4.0
+    else:
+        raise AssertionError("send ignored the sender's dropout schedule")
+    assert eb.peek("a-0") is None
+    be.clear_drop("a-0")
+    ea.send("b-0", "ok")  # clear_drop revives the sender
+    assert eb.recv("a-0") == "ok"
+
+
+def check_clock_ops(factory: Factory) -> None:
+    be = factory()
+    be.join(CH, G, "a-0")
+    assert be.now("a-0") == 0.0
+    be.advance("a-0", 2.5)
+    assert be.now("a-0") == 2.5
+    be.set_clock("a-0", 1.0)  # never moves backwards
+    assert be.now("a-0") == 2.5
+    be.set_clock("a-0", 7.0)
+    assert be.now("a-0") == 7.0
+    assert be.drop_time("a-0") is None
+
+
+def check_stats_accounting(factory: Factory) -> None:
+    """Byte/message accounting honors the channel wire dtype."""
+    be = factory()
+    be.set_wire_dtype(CH, "bf16")
+    ea, _ = _pair(be)
+    ea.send("b-0", {"w": np.zeros((10, 10), np.float32)})
+    stats = dict(be.stats)
+    assert stats.get(f"bytes:{CH}") == 200.0  # 100 elements x 2 bytes
+    assert stats.get(f"msgs:{CH}") == 1.0
+
+
+CONFORMANCE_CHECKS: Dict[str, Callable[[Factory], None]] = {
+    "protocol_surface": check_protocol_surface,
+    "send_recv_roundtrip": check_send_recv_roundtrip,
+    "membership": check_membership,
+    "fifo_order": check_fifo_order,
+    "peek_nonblocking": check_peek_nonblocking,
+    "earliest_empty_ends": check_earliest_empty_ends,
+    "recv_timeout_empty": check_recv_timeout_empty,
+    "recv_any_picks_earliest": check_recv_any_picks_earliest,
+    "poison_wakes_blocked_recv": check_poison_wakes_blocked_recv,
+    "poison_wakes_recv_any_multi": check_poison_wakes_recv_any_multi,
+    "dropout_mid_recv_fifo": check_dropout_mid_recv_fifo,
+    "dropout_on_send": check_dropout_on_send,
+    "clock_ops": check_clock_ops,
+    "stats_accounting": check_stats_accounting,
+}
+
+
+def run_conformance(
+    factory: Factory, checks: Optional[Sequence[str]] = None
+) -> List[str]:
+    """Run (a subset of) the suite against ``factory``; returns check names
+    run. Raises on first violation."""
+    names = list(checks) if checks is not None else sorted(CONFORMANCE_CHECKS)
+    for name in names:
+        CONFORMANCE_CHECKS[name](factory)
+    return names
+
+
+# ------------------------------------------------------------------ #
+# reference workload for cross-backend equivalence
+# ------------------------------------------------------------------ #
+class SeededSGDTrainer(Trainer):
+    """Deterministic softmax-regression trainer for transport equivalence.
+
+    Pure numpy, seeded by the worker's dataset name — a seeded sync FedAvg
+    job built on it must produce *byte-identical* global weights on every
+    transport backend. Lives in the library (not the test tree) so spawned
+    worker processes can import it.
+    """
+
+    def load_data(self) -> None:
+        from repro.data.datasets import synthetic_classification
+
+        d = synthetic_classification(self.ctx.worker.dataset or "d0")
+        self.x, self.y = d.x, d.y
+        self.num_samples = d.num_samples
+
+    def train(self) -> None:
+        if self.weights is None:
+            return
+        w = np.asarray(self.weights["w"], np.float32).copy()
+        b = np.asarray(self.weights["b"], np.float32).copy()
+        z = self.x @ w + b
+        z = z - z.max(axis=1, keepdims=True)
+        e = np.exp(z)
+        p = e / e.sum(axis=1, keepdims=True)
+        onehot = np.eye(w.shape[1], dtype=np.float32)[self.y]
+        g = (p - onehot) / np.float32(self.x.shape[0])
+        w -= np.float32(0.2) * (self.x.T @ g)
+        b -= np.float32(0.2) * g.sum(axis=0)
+        self.weights = {"w": w, "b": b}

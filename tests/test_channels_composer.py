@@ -90,7 +90,7 @@ class TestBandwidthEmulation:
         be.send("ch", "g", "a-0", "b-0", np.zeros(25, np.float32))  # 100 B
         assert be.now("a-0") == pytest.approx(10.0)
 
-    def test_mqtt_broker_serializes(self):
+    def test_mqtt_broker_serializes_same_topic(self):
         be = InprocBackend(shared_broker=True)
         be.set_link("ch", "a-0", LinkModel(bandwidth=10.0))
         be.set_link("ch", "a-1", LinkModel(bandwidth=10.0))
@@ -98,8 +98,53 @@ class TestBandwidthEmulation:
             be.join("ch", "g", w)
         be.send("ch", "g", "a-0", "b-0", np.zeros(25, np.float32))
         be.send("ch", "g", "a-1", "b-0", np.zeros(25, np.float32))
-        # second transfer waits for the broker: arrival 20, not 10
+        # second transfer to the SAME topic (b-0's subscription) waits for
+        # the broker: arrival 20, not 10
         assert be.now("a-1") == pytest.approx(20.0)
+
+    def test_mqtt_broker_distinct_topics_run_in_parallel(self):
+        """Per-topic queues: uploads to different receivers (distinct topics)
+        don't contend, so §6.2-style experiments see realistic per-topic
+        contention instead of one whole-channel serialization."""
+        be = InprocBackend(shared_broker=True)
+        for w in ("a-0", "a-1", "b-0", "b-1"):
+            be.set_link("ch", w, LinkModel(bandwidth=10.0))
+            be.join("ch", "g", w)
+        be.send("ch", "g", "a-0", "b-0", np.zeros(25, np.float32))
+        be.send("ch", "g", "a-1", "b-1", np.zeros(25, np.float32))
+        # different topics: both transfers complete at t=10 (no queueing)
+        assert be.now("a-0") == pytest.approx(10.0)
+        assert be.now("a-1") == pytest.approx(10.0)
+        # a second upload to b-0's topic starts only when the topic frees
+        # (t=10) and occupies it until t=20
+        be.send("ch", "g", "a-0", "b-0", np.zeros(25, np.float32))
+        assert be.now("a-0") == pytest.approx(20.0)
+
+    def test_wall_clock_maps_elapsed_and_freezes_at_drop(self):
+        import time as _t
+
+        be = InprocBackend(wall_clock=True)
+        _t.sleep(0.02)
+        # real elapsed time is mapped onto the clock API
+        assert be.now("a-0") >= 0.02
+        be2 = InprocBackend(wall_clock=True)
+        be2.set_drop("a-0", at=0.001)
+        _t.sleep(0.02)
+        # a dropped worker's clock freezes at its dropout time — wall time
+        # must not silently resurrect it
+        assert be2.now("a-0") == 0.001
+
+    def test_mqtt_groups_use_distinct_topics(self):
+        be = InprocBackend(shared_broker=True)
+        for g in ("g1", "g2"):
+            be.set_link("ch", f"a-{g}", LinkModel(bandwidth=10.0))
+            be.join("ch", g, f"a-{g}")
+            be.join("ch", g, "b-0")
+        be.send("ch", "g1", "a-g1", "b-0", np.zeros(25, np.float32))
+        be.send("ch", "g2", "a-g2", "b-0", np.zeros(25, np.float32))
+        # same receiver id but different groups -> different topics
+        assert be.now("a-g1") == pytest.approx(10.0)
+        assert be.now("a-g2") == pytest.approx(10.0)
 
 
 class TestComposer:

@@ -101,6 +101,86 @@ class TestTierEquivalence:
         assert tiered.channel_bytes == legacy.channel_bytes
 
 
+class TestPerTierParameters:
+    """``RuntimePolicy.tiers`` values can be override dicts — per-tier
+    numeric knobs — while plain mode strings keep working unchanged."""
+
+    def test_override_dict_requires_mode(self):
+        with pytest.raises(ValueError, match="'mode'"):
+            RuntimePolicy(tiers={"aggregator": {"deadline": 1.0}})
+
+    def test_override_dict_rejects_unknown_keys(self):
+        with pytest.raises(ValueError, match="unknown RuntimePolicy.tiers"):
+            RuntimePolicy(
+                tiers={"aggregator": {"mode": "deadline", "deadlien": 1.0}}
+            )
+
+    def test_override_dict_rejects_unknown_mode(self):
+        with pytest.raises(ValueError, match="semi-sync"):
+            RuntimePolicy(tiers={"aggregator": {"mode": "semi-sync"}})
+
+    def test_for_role_resolution(self):
+        pol = RuntimePolicy(
+            mode="deadline", deadline=5.0, buffer_size=2,
+            tiers={
+                "aggregator": {"mode": "deadline", "deadline": 1.5},
+                "relay": "async",
+            },
+        )
+        # plain string and absent roles share the policy-wide knobs
+        assert pol.for_role("relay") is pol
+        assert pol.for_role("global-aggregator") is pol
+        assert pol.tier_mode("relay") == "async"
+        assert pol.tier_mode("aggregator") == "deadline"
+        assert pol.tier_mode("nope") is None
+        # dict overrides produce a per-role view; untouched knobs inherited
+        view = pol.for_role("aggregator")
+        assert view.deadline == 1.5
+        assert view.buffer_size == 2
+        assert pol.deadline == 5.0  # the shared policy is untouched
+
+    def test_mode_only_dict_equivalent_to_plain_string(self):
+        ref = _run(RuntimePolicy(
+            mode="sync", tiers={"aggregator": "deadline"},
+            deadline=2.0, grace=1.5,
+        ))
+        res = _run(RuntimePolicy(
+            mode="sync", tiers={"aggregator": {"mode": "deadline"}},
+            deadline=2.0, grace=1.5,
+        ))
+        np.testing.assert_array_equal(
+            res.global_weights()["w"], ref.global_weights()["w"]
+        )
+        assert res.channel_bytes == ref.channel_bytes
+
+    def test_edge_tier_runs_tighter_deadline_than_core(self):
+        """The policy-wide deadline is lax (100s) but the edge aggregators
+        override it to 2s: the group straggler must be cut at 2s, proving
+        the per-tier knob — not the shared one — governed the round."""
+        per_worker = {f"trainer-{i}": {"compute_time": 0.5} for i in range(4)}
+        per_worker["trainer-3"]["compute_time"] = 50.0
+        pol = RuntimePolicy(
+            mode="sync",
+            tiers={"aggregator": {"mode": "deadline", "deadline": 2.0}},
+            deadline=100.0, grace=1.5,
+        )
+        res = _run(pol, per_worker_hyperparams=per_worker)
+        agg = res.program("aggregator-0")
+        assert "trainer-3" in agg.participation_log[0]["excluded"]
+        assert agg.participation_log[0]["round_time"] == pytest.approx(2.0)
+
+    def test_edge_tier_buffer_size_override(self):
+        pol = RuntimePolicy(
+            mode="async", buffer_size=2, grace=1.5,
+            tiers={"aggregator": {"mode": "async", "buffer_size": 1}},
+        )
+        res = _run(pol, rounds=3)
+        agg = res.program("aggregator-0")
+        assert agg.relay_log
+        # buffer_size=1 at the edge: every relay flushes exactly one update
+        assert all(len(e["tier_staleness"]) == 1 for e in agg.relay_log)
+
+
 class TestAllTierCombos:
     """Acceptance: one two-level H-FL TAG lowers to every (root, middle)
     policy combination independently."""

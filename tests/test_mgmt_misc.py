@@ -55,6 +55,39 @@ class TestManagementPlane:
         rec = api.job(job_id)
         assert len(rec.workers) == 4  # 3 trainers + 1 aggregator
 
+    def test_job_lifecycle_over_transport_hub(self):
+        """The mgmt plane can point a whole job at a different transport:
+        here every channel routes through a socket TransportHub while the
+        deployer/agent machinery stays unchanged (backend as a deployment
+        detail, not application logic)."""
+        from repro.core.expansion import JobSpec
+        from repro.core.registry import ComputeSpec
+        from repro.core.tag import DatasetSpec
+        from repro.core.topologies import classical_fl
+        from repro.mgmt.plane import APIServer, InprocDeployer, JobState
+        from repro.transport.multiproc import TransportHub, hub_backend_factory
+
+        api = APIServer()
+        api.register_compute(InprocDeployer(ComputeSpec("c0", realm="default")))
+        datasets = tuple(DatasetSpec(name=f"d{i}", realm="default") for i in range(2))
+        for d in datasets:
+            api.register_dataset(d)
+        w0 = {"w": np.ones(4, np.float32)}
+        with TransportHub(wall_clock=False) as hub:
+            job_id = api.create_job(
+                JobSpec(
+                    tag=classical_fl(),
+                    datasets=datasets,
+                    hyperparams={"rounds": 2, "init_weights": w0},
+                ),
+                backend_factory=hub_backend_factory(hub.address),
+            )
+            api.start_job(job_id)
+            state = api.wait_job(job_id, timeout=60)
+            assert state == JobState.COMPLETED
+            # traffic crossed the hub, not in-process queues
+            assert hub.backend.stats.get("bytes:param-channel", 0.0) > 0
+
 
 class TestCheckpoint:
     def test_roundtrip(self, tmp_path):

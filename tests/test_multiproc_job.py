@@ -1,0 +1,159 @@
+"""End-to-end jobs on the multi-process transport (driver + OS processes).
+
+Marked ``multiproc``: CI runs these in a dedicated job with a hard timeout so
+a hung child process can never wedge the main suite. All program classes are
+module-level — spawned workers re-import them by qualified name.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.expansion import JobSpec
+from repro.core.roles import GlobalAggregator, Trainer
+from repro.core.runtime import RuntimePolicy, run_job
+from repro.core.tag import DatasetSpec
+from repro.core.topologies import classical_fl, hierarchical_fl
+from repro.launch.spawn import MultiprocLauncher, run_job_multiproc
+from repro.transport.conformance import SeededSGDTrainer  # noqa: F401 - spawn target
+
+pytestmark = pytest.mark.multiproc
+
+# shapes match the synthetic classification data SeededSGDTrainer trains on
+_RNG = np.random.default_rng(7)
+W0 = {
+    "w": (0.01 * _RNG.normal(size=(32, 10))).astype(np.float32),
+    "b": np.zeros((10,), np.float32),
+}
+
+
+def _classical_job(rounds=3, n_datasets=3):
+    tag = classical_fl(
+        trainer_program="repro.transport.conformance.SeededSGDTrainer"
+    )
+    return JobSpec(
+        tag=tag,
+        datasets=tuple(DatasetSpec(name=f"d{i}") for i in range(n_datasets)),
+        hyperparams={"rounds": rounds, "init_weights": W0},
+    )
+
+
+def _assert_trees_byte_identical(a, b):
+    assert a is not None and b is not None
+    assert sorted(a) == sorted(b)
+    for k in a:
+        assert np.asarray(a[k]).dtype == np.asarray(b[k]).dtype
+        assert np.asarray(a[k]).tobytes() == np.asarray(b[k]).tobytes(), (
+            f"leaf {k!r} differs between backends"
+        )
+
+
+class TestByteIdenticalAcrossBackends:
+    def test_seeded_sync_fedavg_inproc_vs_multiproc(self):
+        """The transport-layer acceptance criterion: same seeded sync job,
+        byte-identical global weights and identical wire accounting on the
+        threaded inproc runtime vs the real process tree."""
+        job = _classical_job()
+        res_in = run_job(job, timeout=60)
+        assert not res_in.errors, res_in.errors
+        res_mp = run_job_multiproc(job, timeout=120)
+        assert not res_mp.errors, res_mp.errors
+        _assert_trees_byte_identical(
+            res_in.global_weights(), res_mp.global_weights()
+        )
+        assert res_in.channel_bytes == res_mp.channel_bytes
+        # training actually happened (weights moved off the init)
+        assert not np.array_equal(res_mp.global_weights()["w"], W0["w"])
+
+    def test_hierarchical_sync_job_over_multiproc(self):
+        tag = hierarchical_fl(
+            groups=("west", "east"),
+            dataset_groups={"west": ("d0", "d1"), "east": ("d2", "d3")},
+            trainer_program="repro.transport.conformance.SeededSGDTrainer",
+        )
+        job = JobSpec(
+            tag=tag,
+            datasets=tuple(DatasetSpec(name=f"d{i}") for i in range(4)),
+            hyperparams={"rounds": 2, "init_weights": W0},
+        )
+        res_in = run_job(job, timeout=60)
+        assert not res_in.errors, res_in.errors
+        res_mp = run_job_multiproc(job, timeout=120)
+        assert not res_mp.errors, res_mp.errors
+        _assert_trees_byte_identical(
+            res_in.global_weights(), res_mp.global_weights()
+        )
+        # both tiers moved bytes over the hub
+        assert res_mp.channel_bytes["param-channel"] > 0
+        assert res_mp.channel_bytes["global-channel"] > 0
+
+
+class FailingTrainer(Trainer):
+    def load_data(self):
+        raise RuntimeError("boom: load_data")
+
+
+class FailingAggregator(GlobalAggregator):
+    def initialize(self):
+        raise RuntimeError("boom: initialize")
+
+
+class SleepyTrainer(Trainer):
+    def train(self):
+        time.sleep(300.0)
+
+
+class BadPreRunTrainer(Trainer):
+    def pre_run(self):
+        raise RuntimeError("boom: pre_run")
+
+
+class TestFailureHandling:
+    def test_worker_errors_marshalled_to_driver(self):
+        res = run_job_multiproc(
+            _classical_job(rounds=1, n_datasets=2),
+            program_overrides={
+                "trainer": FailingTrainer,
+                "global-aggregator": FailingAggregator,
+            },
+            timeout=60,
+        )
+        assert set(res.errors) >= {"trainer-0", "trainer-1", "global-aggregator-0"}
+        assert "boom: load_data" in str(res.errors["trainer-0"])
+        assert "boom: initialize" in str(res.errors["global-aggregator-0"])
+
+    def test_pre_barrier_failure_breaks_barrier_fast(self):
+        """A worker dying before the start barrier aborts it, so healthy
+        workers fail fast (BrokenBarrierError) instead of waiting out the
+        whole job timeout for a party that will never arrive."""
+        t0 = time.monotonic()
+        res = run_job_multiproc(
+            _classical_job(rounds=1, n_datasets=2),
+            program_overrides={"trainer": BadPreRunTrainer},
+            timeout=60,
+        )
+        assert "boom: pre_run" in str(res.errors["trainer-0"])
+        assert "global-aggregator-0" in res.errors  # broken barrier, surfaced
+        assert time.monotonic() - t0 < 30.0
+
+    def test_hung_child_is_killed_not_wedged(self):
+        t0 = time.monotonic()
+        res = run_job_multiproc(
+            _classical_job(rounds=1, n_datasets=2),
+            program_overrides={"trainer": SleepyTrainer},
+            timeout=8.0,
+        )
+        assert "__timeout__" in res.errors
+        # the driver reclaimed the process tree well before the sleep ended
+        assert time.monotonic() - t0 < 60.0
+
+    def test_policy_modes_rejected_up_front(self):
+        with pytest.raises(NotImplementedError):
+            MultiprocLauncher(
+                _classical_job(), policy=RuntimePolicy(mode="async")
+            )
+        with pytest.raises(NotImplementedError):
+            MultiprocLauncher(
+                _classical_job(),
+                policy=RuntimePolicy(mode="sync", dropouts={"trainer-0": 1.0}),
+            )

@@ -1,0 +1,135 @@
+"""Shared transport-conformance suite, parametrized over every registered
+backend plus a live multiproc hub.
+
+The suite itself lives in ``repro.transport.conformance`` (library, not test
+tree) so worker processes and downstream backends can reuse it; this module
+is the pytest harness fanning it out: every (backend x check) pair is its own
+test, so a semantics regression names the exact backend and guarantee it
+broke.
+"""
+import numpy as np
+import pytest
+
+from repro import transport as _transport  # noqa: F401 - registers socket flavors
+from repro.core.channels import backend_factory as registry_factory
+from repro.core.channels import registered_backends
+from repro.transport.conformance import CONFORMANCE_CHECKS, run_conformance
+from repro.transport.multiproc import MultiprocBackend, TransportHub
+
+# "collective" is membership-only during emulation but still an InprocBackend
+# underneath — holding it to the same contract keeps the registry honest.
+BACKENDS = registered_backends()
+
+
+@pytest.fixture
+def tracked_factory(request):
+    """Wrap a factory so every backend it creates is closed on teardown
+    (loopback multiproc backends own a hub + socket threads)."""
+    created = []
+
+    def _wrap(make):
+        def _factory():
+            be = make()
+            created.append(be)
+            return be
+
+        return _factory
+
+    yield _wrap
+    for be in created:
+        close = getattr(be, "close", None)
+        if close is not None:
+            close()
+
+
+@pytest.mark.parametrize("backend_name", BACKENDS)
+@pytest.mark.parametrize("check_name", sorted(CONFORMANCE_CHECKS))
+def test_registered_backend_conformance(backend_name, check_name, tracked_factory):
+    factory = tracked_factory(registry_factory(backend_name))
+    run_conformance(factory, checks=[check_name])
+
+
+@pytest.mark.parametrize("check_name", sorted(CONFORMANCE_CHECKS))
+def test_shared_hub_conformance(check_name):
+    """Many clients of ONE hub (the production topology: every worker process
+    connects to the driver's hub) — distinct from the loopback flavor above,
+    which spins a private hub per backend."""
+    with TransportHub(wall_clock=False) as hub:
+        run_conformance(
+            lambda: MultiprocBackend(hub.address), checks=[check_name]
+        )
+
+
+class TestWireFormat:
+    def test_roundtrip_is_bit_exact_and_deterministic(self):
+        from repro.transport.wire import decode, encode
+
+        payload = {
+            "weights": {"w": np.linspace(0, 1, 12, dtype=np.float32).reshape(3, 4)},
+            "num_samples": 3,
+            "version": None,
+            "flags": (True, False),
+            "big": 2**100,
+            "scalar": np.float32(0.25),
+            # np.float64 subclasses float, np.int64 may subclass int: both
+            # must keep their numpy identity across the wire
+            "f64": np.float64(1.5),
+            "i64": np.int64(-7),
+        }
+        buf = encode(payload)
+        back = decode(buf)
+        assert back["num_samples"] == 3 and back["version"] is None
+        assert back["flags"] == (True, False) and back["big"] == 2**100
+        assert isinstance(back["scalar"], np.float32)
+        assert isinstance(back["f64"], np.float64) and back["f64"] == 1.5
+        assert isinstance(back["i64"], np.int64) and back["i64"] == -7
+        assert (
+            back["weights"]["w"].tobytes() == payload["weights"]["w"].tobytes()
+        )
+        assert back["weights"]["w"].dtype == np.float32
+        # deterministic: encode(decode(encode(x))) == encode(x)
+        assert encode(back) == buf
+
+    def test_unencodable_object_rejected(self):
+        from repro.transport.wire import WireError, encode
+
+        with pytest.raises(WireError):
+            encode(object())
+
+    def test_jax_array_encodes_as_numpy(self):
+        import jax.numpy as jnp
+
+        from repro.transport.wire import decode, encode
+
+        arr = jnp.arange(6, dtype=jnp.float32).reshape(2, 3)
+        back = decode(encode({"a": arr}))
+        np.testing.assert_array_equal(back["a"], np.asarray(arr))
+
+    def test_message_envelope(self):
+        from repro.transport.wire import decode_message, encode_message
+
+        src, payload, nbytes, arrival = decode_message(
+            encode_message("trainer-1", {"w": np.ones(2, np.float32)}, 8, 1.5)
+        )
+        assert src == "trainer-1" and nbytes == 8 and arrival == 1.5
+        np.testing.assert_array_equal(payload["w"], np.ones(2, np.float32))
+
+
+class TestLoopbackChannelSelection:
+    def test_channel_spec_can_select_multiproc_backend(self):
+        """Per-channel backend choice (§6.2) reaches across a real socket."""
+        from repro.core.channels import ChannelManager
+        from repro.core.tag import Channel as ChannelSpec
+
+        mgr = ChannelManager(
+            [ChannelSpec(name="ch", pair=("a", "b"), backend="multiproc")]
+        )
+        try:
+            ea = mgr.end("ch", "default", "a-0")
+            eb = mgr.end("ch", "default", "b-0")
+            ea.send("b-0", {"x": np.arange(3, dtype=np.float32)})
+            got = eb.recv("a-0")
+            np.testing.assert_array_equal(got["x"], np.arange(3, dtype=np.float32))
+            assert mgr.total_bytes("ch") == 12.0
+        finally:
+            mgr.close()
