@@ -1,0 +1,74 @@
+"""Process-tree launcher benchmark: job wall-clock vs worker count.
+
+Runs the same seeded sync FedAvg job on the threaded in-process runtime and
+on ``repro.launch.spawn`` (one OS process per worker behind a
+``TransportHub``), per worker count. The gap between the two columns is the
+deployment cost a real process tree pays — interpreter start-up, hub RPCs
+and wire serialization — on top of the identical application work (the two
+runs produce byte-identical global weights, which is asserted).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.expansion import JobSpec
+from repro.core.runtime import run_job
+from repro.core.tag import DatasetSpec
+from repro.core.topologies import classical_fl
+from repro.launch.spawn import run_job_multiproc
+
+from benchmarks.common import init_weights, result_meta
+
+WORKER_COUNTS = (2, 4, 8)
+SMOKE_WORKER_COUNTS = (2,)
+ROUNDS = 2
+
+
+def _job(n_workers: int) -> JobSpec:
+    tag = classical_fl(
+        trainer_program="repro.transport.conformance.SeededSGDTrainer"
+    )
+    return JobSpec(
+        tag=tag,
+        datasets=tuple(DatasetSpec(name=f"d{i}") for i in range(n_workers)),
+        hyperparams={"rounds": ROUNDS, "init_weights": init_weights()},
+    )
+
+
+def run(smoke: bool = False) -> List[Dict[str, object]]:
+    counts = SMOKE_WORKER_COUNTS if smoke else WORKER_COUNTS
+    rows: List[Dict[str, object]] = []
+    print(f"{'workers':>8} {'deployment':>11} {'wall s':>9}")
+    for n in counts:
+        t0 = time.perf_counter()
+        res_in = run_job(_job(n), timeout=120)
+        inproc_s = time.perf_counter() - t0
+        assert not res_in.errors, res_in.errors
+
+        t0 = time.perf_counter()
+        res_mp = run_job_multiproc(_job(n), timeout=240)
+        multiproc_s = time.perf_counter() - t0
+        assert not res_mp.errors, res_mp.errors
+
+        w_in = np.asarray(res_in.global_weights()["w"])
+        w_mp = np.asarray(res_mp.global_weights()["w"])
+        assert w_in.tobytes() == w_mp.tobytes(), "deployments diverged"
+
+        for deployment, secs in (("inproc", inproc_s), ("multiproc", multiproc_s)):
+            rows.append(
+                result_meta(
+                    workers=n,
+                    deployment=deployment,
+                    rounds=ROUNDS,
+                    wall_s=secs,
+                )
+            )
+            print(f"{n:>8} {deployment:>11} {secs:>9.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -59,6 +59,13 @@ def main(argv=None):
         results["transport"] = bench_transport.run(smoke=True)
 
         print("=" * 72)
+        print("Smoke — process-tree launcher: job wall-clock vs worker count")
+        print("=" * 72)
+        from benchmarks import bench_spawn
+
+        results["spawn"] = bench_spawn.run(smoke=True)
+
+        print("=" * 72)
         print(f"smoke benchmarks passed in {time.time()-t0:.1f}s")
         if args.out:
             with open(args.out, "w") as f:
@@ -113,6 +120,13 @@ def main(argv=None):
     from benchmarks import bench_transport
 
     results["transport"] = bench_transport.run()
+
+    print("=" * 72)
+    print("Spawn — process-tree job wall-clock vs worker count")
+    print("=" * 72)
+    from benchmarks import bench_spawn
+
+    results["spawn"] = bench_spawn.run()
 
     import os
 

@@ -718,6 +718,14 @@ class ChannelManager:
                     )
                 backend = _BACKEND_FACTORIES[c.backend]()
             backend.set_wire_dtype(c.name, c.wire_dtype)
+            # opt-in wire codec: only socket-backed transports implement it
+            # (emulation payloads never leave the process — their accounting
+            # knob is wire_dtype); the op is deliberately outside the
+            # TransportBackend protocol
+            codec = getattr(c, "codec", "")
+            set_codec = getattr(backend, "set_codec", None)
+            if codec and set_codec is not None:
+                set_codec(c.name, codec)
             self._backends[c.name] = backend
 
     def spec(self, channel: str) -> ChannelSpec:

@@ -144,12 +144,14 @@ class _PolicyBase:
                 break
             # peers already scheduled to drop before this round's deadline
             # can still have delivered (or be mid-delivery of) an on-time
-            # update — keep draining, but only wait briefly for them
-            live = [
-                t
-                for t in remaining
-                if end.drop_time(t) is None or end.drop_time(t) > deadline
-            ]
+            # update — keep draining, but only wait briefly for them.
+            # Read drop_time once per peer: a concurrent re-join clears the
+            # schedule between two reads (TOCTOU -> None > float TypeError)
+            live = []
+            for t in remaining:
+                drop_at = end.drop_time(t)
+                if drop_at is None or drop_at > deadline:
+                    live.append(t)
             if not live:
                 timeout = min(timeout, 0.25)
             try:

@@ -29,7 +29,6 @@ inproc backends.
 from __future__ import annotations
 
 import dataclasses
-import heapq
 import importlib
 import threading
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -39,6 +38,11 @@ from repro.core.channels import (
     LinkModel,
     TransportBackend,
     WorkerDropped,
+)
+from repro.core.events import (
+    ChannelManagerTransport,
+    EventEngine,
+    VirtualEventLoop,
 )
 from repro.core.expansion import JobSpec, WorkerConfig, expand
 from repro.core.registry import ResourceRegistry
@@ -183,39 +187,87 @@ class RuntimePolicy:
         )
 
 
-@dataclasses.dataclass(order=True)
-class _Event:
-    time: float
-    seq: int
-    kind: str = dataclasses.field(compare=False)
-    worker: str = dataclasses.field(compare=False)
+# The event-queue/engine machinery moved to ``repro.core.events`` (the
+# deployment-agnostic core both this runtime and the multiproc process
+# supervisor bind); re-exported here for backward compatibility.
+__all__ = [
+    "EventEngine",
+    "JobResult",
+    "JobRuntime",
+    "RuntimePolicy",
+    "VirtualEventLoop",
+    "resolve_policy_class",
+    "run_job",
+    "validate_policy_tiers",
+]
 
 
-class VirtualEventLoop:
-    """Minimal virtual-clock event queue driving worker lifecycle events.
+def validate_policy_tiers(policy: RuntimePolicy, tag: TAG) -> None:
+    """Reject a ``tiers`` entry naming a role the TAG does not have — a
+    typo'd role name would silently lower nothing while still flipping the
+    runtime into event-driven mode. Shared by every deployment binding."""
+    role_names = {r.name for r in tag.roles}
+    for role in policy.tiers:
+        if role not in role_names:
+            raise KeyError(
+                f"RuntimePolicy.tiers entry for unknown role {role!r}; "
+                f"TAG roles: {sorted(role_names)}"
+            )
 
-    Virtual time is decoupled from wall-clock time, so the loop never sleeps:
-    it releases lifecycle events (worker starts) in virtual-time order and
-    records every transition in ``log`` for the JobResult timeline.
-    """
 
-    def __init__(self) -> None:
-        self._heap: List[_Event] = []
-        self._seq = 0
-        self.log: List[Tuple[float, str, str]] = []
+def policy_tier_mode(w: WorkerConfig, cls: type, policy: RuntimePolicy) -> str:
+    """Per-tier policy resolution: an explicit ``tiers`` entry wins; the
+    root aggregator defaults to the policy's ``mode`` (PR-1 root-only
+    behavior); every other role defaults to sync."""
+    explicit = policy.tier_mode(w.role)
+    if explicit is not None:
+        return explicit
+    if issubclass(cls, GlobalAggregatorBase):
+        return policy.mode
+    return "sync"
 
-    def schedule(self, time: float, kind: str, worker: str) -> None:
-        heapq.heappush(self._heap, _Event(float(time), self._seq, kind, worker))
-        self._seq += 1
 
-    def record(self, time: float, kind: str, worker: str) -> None:
-        self.log.append((float(time), kind, worker))
+def resolve_policy_class(
+    w: WorkerConfig,
+    policy: RuntimePolicy,
+    program_overrides: Optional[Dict[str, type]] = None,
+) -> type:
+    """The program class for ``w`` under ``policy`` — the user's class, or
+    its policy-lowered graft for a deadline/async tier. Module-level so
+    spawned worker processes resolve exactly like the threaded runtime."""
+    overrides = program_overrides or {}
+    if w.role in overrides:
+        cls = overrides[w.role]
+    else:
+        cls = resolve_program(w.program)
+    mode = policy_tier_mode(w, cls, policy)
+    if mode == "sync":
+        return cls
+    is_root = issubclass(cls, GlobalAggregatorBase)
+    if not is_root and not issubclass(cls, Aggregator):
+        # only reachable via an explicit tiers entry naming a non-
+        # aggregator role — a typo'd role name or a trainer tier
+        raise ValueError(
+            f"RuntimePolicy.tiers lowers role {w.role!r} to {mode!r}, "
+            f"but its program {cls.__name__} is neither a GlobalAggregator "
+            "nor an Aggregator subclass"
+        )
+    # lowering replaces the whole tasklet chain, so it is only sound
+    # for the standard aggregator workflows. A subclass with its own
+    # compose() (e.g. the CO-FL coordinator handshake) would be
+    # silently broken — fail fast instead.
+    base_compose = (
+        GlobalAggregatorBase.compose if is_root else Aggregator.compose
+    )
+    if cls.compose is not base_compose:
+        raise ValueError(
+            f"cannot lower {cls.__name__} to {mode!r} mode: it overrides "
+            "compose(); policy modes support the standard aggregator "
+            "round workflows only"
+        )
+    from repro.core.roles_async import make_policy_program
 
-    def drain(self):
-        while self._heap:
-            ev = heapq.heappop(self._heap)
-            self.record(ev.time, ev.kind, ev.worker)
-            yield ev
+    return make_policy_program(cls, mode)
 
 
 @dataclasses.dataclass
@@ -273,15 +325,7 @@ class JobRuntime:
         self.per_worker_hyperparams = dict(per_worker_hyperparams or {})
         self.program_overrides = dict(program_overrides or {})
         self.policy = policy or RuntimePolicy()
-        # a typo'd role name in tiers would silently lower nothing while
-        # still flipping the runtime into event-driven mode — reject up front
-        role_names = {r.name for r in job.tag.roles}
-        for role in self.policy.tiers:
-            if role not in role_names:
-                raise KeyError(
-                    f"RuntimePolicy.tiers entry for unknown role {role!r}; "
-                    f"TAG roles: {sorted(role_names)}"
-                )
+        validate_policy_tiers(self.policy, job.tag)
         self._membership = static_membership(self.workers, job.tag)
         for (channel, worker), model in self.link_models.items():
             self.channels.backend(channel).set_link(channel, worker, model)
@@ -289,50 +333,8 @@ class JobRuntime:
     # ------------------------------------------------------------------ #
     # program construction (incl. policy lowering of the root aggregator)
     # ------------------------------------------------------------------ #
-    def _tier_mode(self, w: WorkerConfig, cls: type) -> str:
-        """Per-tier policy resolution: an explicit ``tiers`` entry wins; the
-        root aggregator defaults to the policy's ``mode`` (PR-1 root-only
-        behavior); every other role defaults to sync."""
-        explicit = self.policy.tier_mode(w.role)
-        if explicit is not None:
-            return explicit
-        if issubclass(cls, GlobalAggregatorBase):
-            return self.policy.mode
-        return "sync"
-
     def _resolve_class(self, w: WorkerConfig) -> type:
-        if w.role in self.program_overrides:
-            cls = self.program_overrides[w.role]
-        else:
-            cls = resolve_program(w.program)
-        mode = self._tier_mode(w, cls)
-        if mode == "sync":
-            return cls
-        is_root = issubclass(cls, GlobalAggregatorBase)
-        if not is_root and not issubclass(cls, Aggregator):
-            # only reachable via an explicit tiers entry naming a non-
-            # aggregator role — a typo'd role name or a trainer tier
-            raise ValueError(
-                f"RuntimePolicy.tiers lowers role {w.role!r} to {mode!r}, "
-                f"but its program {cls.__name__} is neither a GlobalAggregator "
-                "nor an Aggregator subclass"
-            )
-        # lowering replaces the whole tasklet chain, so it is only sound
-        # for the standard aggregator workflows. A subclass with its own
-        # compose() (e.g. the CO-FL coordinator handshake) would be
-        # silently broken — fail fast instead.
-        base_compose = (
-            GlobalAggregatorBase.compose if is_root else Aggregator.compose
-        )
-        if cls.compose is not base_compose:
-            raise ValueError(
-                f"cannot lower {cls.__name__} to {mode!r} mode: it overrides "
-                "compose(); policy modes support the standard aggregator "
-                "round workflows only"
-            )
-        from repro.core.roles_async import make_policy_program
-
-        return make_policy_program(cls, mode)
+        return resolve_policy_class(w, self.policy, self.program_overrides)
 
     def _build_program(self, w: WorkerConfig) -> Role:
         cls = self._resolve_class(w)
@@ -404,137 +406,37 @@ class JobRuntime:
         )
 
     def _run_events(self, timeout: float) -> JobResult:
-        """Event-driven execution: arrivals, dropouts and re-joins release in
-        virtual-time order; policy-lowered root aggregators handle partial
-        participation and staleness."""
-        by_id = {w.worker_id: w for w in self.workers}
+        """Event-driven execution: a thread-backed binding of the
+        deployment-agnostic ``EventEngine`` (``repro.core.events``). The
+        engine owns arrival/dropout/re-join scheduling, event recording and
+        the orphan cascade; this binding maps each worker onto a daemon
+        thread running its tasklet chain against the per-channel emulation
+        backends."""
         programs: Dict[str, Role] = {}
         errors: Dict[str, BaseException] = {}
-        dropped: Dict[str, float] = {}
-        loop = VirtualEventLoop()
-        lock = threading.Lock()
 
         for w in self.workers:
             programs[w.worker_id] = self._build_program(w)
 
-        # a typo'd worker id in any schedule silently distorts the
-        # experiment's timing — reject all of them up front
-        for field in ("arrivals", "dropouts", "rejoins"):
-            for wid in getattr(self.policy, field):
-                if wid not in by_id:
-                    raise KeyError(f"{field} entry for unknown worker {wid!r}")
-
-        # dropout schedules are enforced by the channel layer on the
-        # virtual clock — a worker dies the moment any channel operation
-        # would carry its clock past the scheduled time
-        for wid, at in self.policy.dropouts.items():
-            for backend in self._backends_of(by_id[wid]):
-                backend.set_drop(wid, at)
-
+        engine = EventEngine(
+            self.policy,
+            self.workers,
+            spec_of=self.channels.spec,
+            transport=ChannelManagerTransport(self.channels, self.workers),
+        )
+        engine.arm_dropouts()
         # workers arriving at t=0 join before anyone runs (no join races
         # among the initial cohort); late arrivals join dynamically — except
         # in sync mode, whose barriered servers cannot handle membership
         # growth: there an arrival only offsets the worker's virtual clock
-        dynamic_join = self.policy.is_lowering
-        initial = [
-            w for w in self.workers
-            if not dynamic_join
-            or float(self.policy.arrivals.get(w.worker_id, 0.0)) <= 0.0
-        ]
-        for w in initial:
+        for w in engine.initial_cohort():
             programs[w.worker_id].pre_run()
 
-        def _rejoin(wid: str, at: float) -> Optional[Role]:
-            w = by_id[wid]
-            for backend in self._backends_of(w):
-                backend.clear_drop(wid)
-                backend.set_clock(wid, at)
-            prog = self._build_program(w)
-            with lock:
-                programs[wid] = prog
-                loop.record(at, "rejoin", wid)
-            prog.pre_run()
-            return prog
-
-        def _cascade_orphans(wid: str, at: float) -> None:
-            """A dead worker with no re-join scheduled may leave 'children'
-            behind: workers whose only distribute-side peer it was. Poison
-            them so their pending/next receive surfaces as a dropout instead
-            of silently hanging until the recv timeout."""
-            w = by_id[wid]
-            for ch_name, group in w.groups.items():
-                spec = self.channels.spec(ch_name)
-                a, b = spec.pair
-                if a == b or w.role not in (a, b):
-                    continue
-                # only cascade downstream: the dead worker must have been a
-                # distributor (parent) on this channel
-                if "distribute" not in spec.func_tags.for_role(w.role):
-                    continue
-                child_role = spec.other_end(w.role)
-                backend = self.channels.backend(ch_name)
-                members = backend.peers(ch_name, group, wid)
-                if any(m.rsplit("-", 1)[0] == w.role for m in members):
-                    continue  # a replica parent remains in the group
-                for child in members:
-                    if child.rsplit("-", 1)[0] != child_role:
-                        continue
-                    for cb in self._backends_of(by_id[child]):
-                        cb.poison(child, at)
-                    with lock:
-                        loop.record(at, "orphaned", child)
-
-        def _runner(wid: str, prog: Role) -> None:
-            try:
-                prog.run()
-            except WorkerDropped as e:
-                with lock:
-                    dropped[wid] = e.at
-                    loop.record(e.at, "dropout", wid)
-                rejoin_at = self.policy.rejoins.get(wid)
-                if rejoin_at is None:
-                    # poison orphans BEFORE the dead worker leaves its
-                    # channels: a child probing ends() in between must see
-                    # either its parent or the poison, never a limbo state
-                    _cascade_orphans(wid, e.at)
-                try:
-                    prog.on_dropped(e.at)
-                except BaseException as hook_err:  # noqa: BLE001
-                    errors[wid] = hook_err
-                    return
-                if rejoin_at is None:
-                    return
-                try:
-                    _runner(wid, _rejoin(wid, rejoin_at))
-                except BaseException as e2:  # noqa: BLE001
-                    errors[wid] = e2
-            except BaseException as e:  # noqa: BLE001 - surfaced to caller
-                errors[wid] = e
-
-        for w in self.workers:
-            at = float(self.policy.arrivals.get(w.worker_id, 0.0))
-            loop.schedule(at, "start", w.worker_id)
-
-        threads: List[threading.Thread] = []
-        for ev in loop.drain():
-            w = by_id[ev.worker]
-            prog = programs[ev.worker]
-            if ev.time > 0.0:
-                # late arrival: clocks start at the arrival time; the worker
-                # joins its channels now (dynamic membership)
-                for backend in self._backends_of(w):
-                    backend.set_clock(ev.worker, ev.time)
-                if dynamic_join:
-                    prog.pre_run()
-            t = threading.Thread(
-                target=_runner, args=(ev.worker, prog), daemon=True
-            )
-            threads.append(t)
-            t.start()
-
-        for t in threads:
-            t.join(timeout=timeout)
-        alive = [t for t in threads if t.is_alive()]
+        handles = {
+            w.worker_id: _ThreadWorkerHandle(self, w, engine, programs, errors)
+            for w in self.workers
+        }
+        alive = engine.run(handles, timeout)
         if alive:
             errors["__timeout__"] = TimeoutError(
                 f"{len(alive)} workers still running after {timeout}s"
@@ -547,9 +449,85 @@ class JobRuntime:
             programs=programs,
             channel_bytes=channel_bytes,
             errors=errors,
-            dropped=dropped,
-            events=sorted(loop.log),
+            dropped=engine.dropped,
+            events=engine.events,
         )
+
+
+class _ThreadWorkerHandle:
+    """``WorkerHandle`` binding one engine worker to a daemon thread.
+
+    The thread runs the worker's tasklet chain; a ``WorkerDropped`` unwind is
+    reported to the engine, whose re-join directive is executed on the *same*
+    thread (rebuild program, re-enter channels, run the new chain) so the
+    binding keeps exactly one thread per worker."""
+
+    def __init__(
+        self,
+        runtime: "JobRuntime",
+        worker: WorkerConfig,
+        engine: EventEngine,
+        programs: Dict[str, Role],
+        errors: Dict[str, BaseException],
+    ) -> None:
+        self._runtime = runtime
+        self._worker = worker
+        self._engine = engine
+        self._programs = programs
+        self._errors = errors
+        self._thread: Optional[threading.Thread] = None
+
+    def start(self, at: float) -> None:
+        wid = self._worker.worker_id
+        if at > 0.0 and self._engine.dynamic_join:
+            # late arrival joins its channels now (dynamic membership);
+            # the engine already moved its clocks to the arrival time
+            self._programs[wid].pre_run()
+        self._thread = threading.Thread(
+            target=self._runner, name=f"worker-{wid}", daemon=True
+        )
+        self._thread.start()
+
+    def _runner(self) -> None:
+        wid = self._worker.worker_id
+        prog = self._programs[wid]
+        try:
+            prog.run()
+        except WorkerDropped as e:
+            rejoin_at = self._engine.worker_dropped(wid, e.at)
+            try:
+                prog.on_dropped(e.at)
+            except BaseException as hook_err:  # noqa: BLE001
+                self._errors[wid] = hook_err
+                return
+            if rejoin_at is None:
+                return
+            try:
+                self._engine.rejoin(wid, rejoin_at)
+            except BaseException as e2:  # noqa: BLE001
+                self._errors[wid] = e2
+        except BaseException as e:  # noqa: BLE001 - surfaced to caller
+            self._errors[wid] = e
+
+    def restart(self, at: float) -> None:
+        """Engine re-join directive: rebuild the program (transport state is
+        already reset), re-enter the channels and run the new chain on the
+        calling (original worker) thread — including any nested dropout."""
+        wid = self._worker.worker_id
+        prog = self._runtime._build_program(self._worker)
+        self._programs[wid] = prog
+        prog.pre_run()
+        self._runner()
+
+    def kill(self, at: float) -> None:
+        """Nothing to reclaim: the ``WorkerDropped`` unwind already ended the
+        chain, and a thread cannot be force-killed."""
+
+    def wait(self, timeout: float) -> bool:
+        if self._thread is None:
+            return True
+        self._thread.join(timeout=timeout)
+        return not self._thread.is_alive()
 
 
 def run_job(

@@ -54,6 +54,11 @@ class Channel:
               flexibility claim (§6.2).
     wire_dtype: payload dtype on the wire ("bf16", "f32", "int8") — the TPU
               analogue of choosing a cheaper transport for a given channel.
+    codec:    opt-in payload codec for socket-backed transports (e.g.
+              "int8"): ``repro.fl.compression`` plugged into the
+              ``repro.transport.wire`` encode path, shrinking real wire
+              bytes the way ``wire_dtype`` shrinks emulated ones. Empty
+              (default) sends raw payloads; emulation backends ignore it.
     """
 
     name: str
@@ -62,6 +67,7 @@ class Channel:
     func_tags: FuncTags = dataclasses.field(default_factory=FuncTags)
     backend: str = "inproc"
     wire_dtype: str = "f32"
+    codec: str = ""
 
     def groups(self) -> Tuple[str, ...]:
         return self.group_by if self.group_by else (DEFAULT_GROUP,)
@@ -225,6 +231,7 @@ class TAG:
                     "funcTags": {k: list(v) for k, v in c.func_tags.by_role.items()},
                     "backend": c.backend,
                     "wireDtype": c.wire_dtype,
+                    "codec": c.codec,
                 }
                 for c in self.channels
             ],
@@ -256,6 +263,7 @@ class TAG:
                 ),
                 backend=c.get("backend", "inproc"),
                 wire_dtype=c.get("wireDtype", "f32"),
+                codec=c.get("codec", ""),
             )
             for c in d["channels"]
         )

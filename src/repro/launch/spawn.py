@@ -14,29 +14,38 @@ A seeded sync job therefore produces byte-identical global weights on both
 deployments (the transport-layer acceptance criterion); what changes is the
 deployment, never the application logic.
 
-Scope: the spawner lowers the classic barriered **sync** execution. Policy
-modes (deadline/async) and dropout/re-join schedules are the in-process
-event runtime's territory (``JobRuntime``) until the hub grows a process
-supervisor; requesting them here raises ``NotImplementedError`` up front
-rather than hanging a process tree.
+Event-driven jobs — deadline/async ``RuntimePolicy`` modes, dropout and
+re-join schedules — run here too: the driver binds the deployment-agnostic
+``EventEngine`` (``repro.core.events``) to a hub-side **process supervisor**.
+Dropout is enforced hub-side (``set_drop`` on the shared backend) so a
+worker's ``WorkerDropped`` surfaces inside its own process exactly like the
+threaded runtime; the supervisor maps the engine's directives onto the
+process tree — orphan cascade via hub-side ``poison``, re-join via a respawn
+(a pre-warmed standby process, so respawn latency is not bounded by
+interpreter start-up). Policy servers (deadline/FedBuff) run unchanged
+because role bodies reach the transport only through ``ChannelEnd``.
 """
 from __future__ import annotations
 
 import dataclasses
 import multiprocessing
 import queue as queue_mod
+import threading
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
-from repro.core.channels import ChannelManager, LinkModel
+from repro.core.channels import ChannelManager, LinkModel, WorkerDropped
+from repro.core.events import EventEngine
 from repro.core.expansion import JobSpec, WorkerConfig, expand
 from repro.core.registry import ResourceRegistry
 from repro.core.roles import GlobalAggregatorBase, RoleContext
 from repro.core.runtime import (
     JobResult,
     RuntimePolicy,
+    resolve_policy_class,
     resolve_program,
     static_membership,
+    validate_policy_tiers,
 )
 from repro.transport.multiproc import TransportHub, hub_backend_factory
 
@@ -47,16 +56,57 @@ __all__ = ["MultiprocLauncher", "RemoteProgram", "run_job_multiproc"]
 class RemoteProgram:
     """Driver-side stub for a program that ran in a worker process.
 
-    Carries the result surface (`weights`, `metrics`) back across the
-    process boundary; ``is_root`` records the worker-side
-    ``isinstance(prog, GlobalAggregatorBase)`` verdict so
-    ``JobResult.global_weights`` resolves the root without the class."""
+    Carries the result surface back across the process boundary: ``weights``
+    and ``metrics`` always; the policy-server observables (participation /
+    staleness / relay logs, server version, version vector) when the worker
+    ran a policy-lowered aggregator — the same attributes the in-process
+    runtime exposes, so cross-deployment equivalence tests read one surface.
+    ``is_root`` records the worker-side ``isinstance(prog,
+    GlobalAggregatorBase)`` verdict so ``JobResult.global_weights`` resolves
+    the root without the class."""
 
     worker_id: str
     role: str
     weights: Any = None
     metrics: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
     is_root: bool = False
+    participation_log: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+    staleness_log: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+    relay_log: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+    version: Optional[int] = None
+    version_vector: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+
+def _program_summary(prog: Any) -> Dict[str, Any]:
+    """The result surface marshalled from a worker process to the driver."""
+    summary: Dict[str, Any] = {
+        "weights": getattr(prog, "weights", None),
+        "metrics": list(getattr(prog, "metrics", [])),
+        "is_root": isinstance(prog, GlobalAggregatorBase),
+    }
+    for log in ("participation_log", "staleness_log", "relay_log"):
+        if hasattr(prog, log):
+            summary[log] = list(getattr(prog, log))
+    if hasattr(prog, "_version"):
+        summary["version"] = int(prog._version)
+    if hasattr(prog, "_version_vector"):
+        summary["version_vector"] = dict(prog._version_vector)
+    return summary
+
+
+def _remote_program(wid: str, role: str, summary: Dict[str, Any]) -> RemoteProgram:
+    return RemoteProgram(
+        worker_id=wid,
+        role=role,
+        weights=summary.get("weights"),
+        metrics=list(summary.get("metrics", [])),
+        is_root=bool(summary.get("is_root", False)),
+        participation_log=list(summary.get("participation_log", [])),
+        staleness_log=list(summary.get("staleness_log", [])),
+        relay_log=list(summary.get("relay_log", [])),
+        version=summary.get("version"),
+        version_vector=dict(summary.get("version_vector", {})),
+    )
 
 
 def _worker_entry(
@@ -69,14 +119,38 @@ def _worker_entry(
     barrier: Any,
     result_q: Any,
     barrier_timeout: float,
+    policy: Optional[RuntimePolicy] = None,
+    rejoin_event: Any = None,
+    drop_ack: Any = None,
 ) -> None:
-    """Runs inside the spawned worker process."""
+    """Runs inside the spawned worker process.
+
+    ``barrier`` is None for dynamically-joining workers (late arrivals and
+    re-join respawns of an event-driven job); ``rejoin_event`` marks a
+    pre-warmed re-join standby: the process pays its interpreter/import cost
+    up front, then parks until the supervisor signals the re-join (or never
+    does — the driver reclaims unused standbys at teardown).
+
+    Dropout is a two-phase report: a ``dropping`` notice goes up *before*
+    ``on_dropped`` leaves the channels, and the worker waits on ``drop_ack``
+    until the driver has recorded the drop and poisoned any orphans — so a
+    child probing its peers sees either its parent or the poison, never a
+    limbo state (the same ordering the threaded runtime enforces)."""
     worker_id = worker.worker_id
+    pol = policy or RuntimePolicy()
     try:
+        if rejoin_event is not None and not rejoin_event.wait(timeout=barrier_timeout):
+            return  # standby never signaled: the worker never re-joined
         channels = ChannelManager(
             job.tag.channels, backend_factory=hub_backend_factory(address)
         )
-        cls = program_cls if program_cls is not None else resolve_program(worker.program)
+        if pol.is_lowering:
+            overrides = {worker.role: program_cls} if program_cls is not None else {}
+            cls = resolve_policy_class(worker, pol, overrides)
+            hyperparams = dict(hyperparams)
+            hyperparams.setdefault("runtime_policy", pol)
+        else:
+            cls = program_cls if program_cls is not None else resolve_program(worker.program)
         ctx = RoleContext(
             worker, job.tag, channels,
             hyperparams=hyperparams, static_members=static_members,
@@ -85,22 +159,41 @@ def _worker_entry(
         prog.pre_run()
         # same barrier the threaded runtime enforces between pre_run and run:
         # no worker may see a half-joined group
-        barrier.wait(timeout=barrier_timeout)
-        prog.run()
-        summary = {
-            "weights": getattr(prog, "weights", None),
-            "metrics": list(getattr(prog, "metrics", [])),
-            "is_root": isinstance(prog, GlobalAggregatorBase),
-        }
-        result_q.put((worker_id, "ok", summary))
+        if barrier is not None:
+            barrier.wait(timeout=barrier_timeout)
+        try:
+            prog.run()
+        except WorkerDropped as e:
+            # mid-round dropout, enforced hub-side on the virtual clock.
+            # Phase 1: announce the drop and wait for the driver to record
+            # it and cascade orphans (poison) BEFORE this worker leaves its
+            # channels; the ack wait is bounded so a dead driver cannot
+            # wedge the worker.
+            result_q.put((worker_id, "dropping", float(e.at)))
+            if drop_ack is not None:
+                drop_ack.wait(timeout=5.0)
+            try:
+                prog.on_dropped(e.at)
+            except BaseException as hook_err:  # noqa: BLE001
+                result_q.put((
+                    worker_id, "err",
+                    (type(hook_err).__name__, f"on_dropped hook failed: {hook_err}"),
+                ))
+                return
+            # phase 2: final state; the supervisor now finishes the worker
+            # or signals the re-join standby
+            result_q.put((worker_id, "dropped", (float(e.at), _program_summary(prog))))
+            return
+        result_q.put((worker_id, "ok", _program_summary(prog)))
     except BaseException as exc:  # noqa: BLE001 - marshalled to the driver
         # break the start barrier so healthy peers fail fast (as
         # BrokenBarrierError) instead of waiting out the whole job timeout
         # for a party that will never arrive; harmless once everyone passed
-        try:
-            barrier.abort()
-        except Exception:
-            pass
+        if barrier is not None:
+            try:
+                barrier.abort()
+            except Exception:
+                pass
         try:
             result_q.put((worker_id, "err", (type(exc).__name__, str(exc))))
         except Exception:
@@ -108,7 +201,21 @@ def _worker_entry(
 
 
 class MultiprocLauncher:
-    """Expand + deploy + run a JobSpec as one OS process per worker."""
+    """Expand + deploy + run a JobSpec as one OS process per worker.
+
+    Any ``RuntimePolicy`` runs here — the classic barriered sync execution
+    and the event-driven modes (deadline / async-FedBuff, dropout and
+    re-join schedules). The policy is a deployment-independent input: the
+    same job produces matching participation sets and lifecycle events on
+    the threaded in-process runtime and on this process tree.
+
+    ``wall_clock`` controls the hub's clock mapping. Default: wall-clock
+    time is folded into the virtual clocks for plain sync jobs (real elapsed
+    time stays observable), while event-driven jobs run pure virtual clocks
+    — the same clock semantics as the in-process event runtime, which is
+    what makes dropout/deadline schedules mean the same thing on both
+    deployments.
+    """
 
     def __init__(
         self,
@@ -119,27 +226,36 @@ class MultiprocLauncher:
         program_overrides: Optional[Dict[str, type]] = None,
         policy: Optional[RuntimePolicy] = None,
         start_method: str = "spawn",
+        wall_clock: Optional[bool] = None,
     ) -> None:
-        if policy is not None and (policy.is_event_driven or policy.mode != "sync"):
-            raise NotImplementedError(
-                "the multiproc spawner runs the barriered sync execution; "
-                "deadline/async policies and dropout schedules run on the "
-                "in-process event runtime (repro.core.runtime.JobRuntime)"
-            )
         self.job = job
         self.workers = expand(job, registry)
         self.link_models = dict(link_models or {})
         self.per_worker_hyperparams = dict(per_worker_hyperparams or {})
         self.program_overrides = dict(program_overrides or {})
+        self.policy = policy or RuntimePolicy()
+        validate_policy_tiers(self.policy, job.tag)
+        self.wall_clock = (
+            wall_clock if wall_clock is not None else not self.policy.is_event_driven
+        )
         # "spawn" keeps children clear of the driver's jax/thread state; the
         # override exists for hosts where spawn is unavailable
         self._ctx = multiprocessing.get_context(start_method)
         self._membership = static_membership(self.workers, job.tag)
 
     # ------------------------------------------------------------------ #
+    def _make_hub(self) -> TransportHub:
+        hub = TransportHub(wall_clock=self.wall_clock)
+        for c in self.job.tag.channels:
+            hub.backend.set_wire_dtype(c.name, c.wire_dtype)
+        for (channel, worker), model in self.link_models.items():
+            hub.backend.set_link(channel, worker, model)
+        return hub
+
     def _worker_args(
         self, w: WorkerConfig, address: Tuple[str, int], barrier: Any,
-        result_q: Any, barrier_timeout: float,
+        result_q: Any, barrier_timeout: float, rejoin_event: Any = None,
+        drop_ack: Any = None,
     ) -> Tuple[Any, ...]:
         hp = dict(self.job.hyperparams)
         hp.update(self.per_worker_hyperparams.get(w.worker_id, {}))
@@ -149,15 +265,49 @@ class MultiprocLauncher:
         return (
             address, self.job, w, hp, static,
             self.program_overrides.get(w.role), barrier, result_q, barrier_timeout,
+            self.policy, rejoin_event, drop_ack,
         )
 
-    def run(self, timeout: float = 120.0) -> JobResult:
-        hub = TransportHub()
-        for c in self.job.tag.channels:
-            hub.backend.set_wire_dtype(c.name, c.wire_dtype)
-        for (channel, worker), model in self.link_models.items():
-            hub.backend.set_link(channel, worker, model)
+    def _spawn(
+        self, w: WorkerConfig, address: Tuple[str, int], barrier: Any,
+        result_q: Any, barrier_timeout: float, rejoin_event: Any = None,
+        drop_ack: Any = None,
+    ) -> Any:
+        p = self._ctx.Process(
+            target=_worker_entry,
+            args=self._worker_args(
+                w, address, barrier, result_q, barrier_timeout, rejoin_event,
+                drop_ack,
+            ),
+            name=f"flame-{w.worker_id}",
+            daemon=True,
+        )
+        p.start()
+        return p
 
+    @staticmethod
+    def _reap(procs: List[Any]) -> None:
+        """Hard stop: a hung child must never wedge the driver (or CI)."""
+        for p in procs:
+            p.join(timeout=5.0)
+            if p.is_alive():
+                p.terminate()
+                p.join(timeout=5.0)
+            if p.is_alive():  # pragma: no cover - last resort
+                p.kill()
+                p.join(timeout=5.0)
+
+    # ------------------------------------------------------------------ #
+    def run(self, timeout: float = 120.0) -> JobResult:
+        if self.policy.is_event_driven:
+            return self._run_events(timeout)
+        return self._run_sync(timeout)
+
+    # ------------------------------------------------------------------ #
+    # classic barriered sync deployment
+    # ------------------------------------------------------------------ #
+    def _run_sync(self, timeout: float) -> JobResult:
+        hub = self._make_hub()
         result_q = self._ctx.Queue()
         barrier = self._ctx.Barrier(len(self.workers))
         procs: Dict[str, Any] = {}
@@ -166,14 +316,9 @@ class MultiprocLauncher:
         deadline = time.monotonic() + timeout
         try:
             for w in self.workers:
-                p = self._ctx.Process(
-                    target=_worker_entry,
-                    args=self._worker_args(w, hub.address, barrier, result_q, timeout),
-                    name=f"flame-{w.worker_id}",
-                    daemon=True,
+                procs[w.worker_id] = self._spawn(
+                    w, hub.address, barrier, result_q, timeout
                 )
-                p.start()
-                procs[w.worker_id] = p
 
             # drain results before joining: a child blocks on its queue
             # feeder thread until the driver consumes its (possibly large)
@@ -184,13 +329,7 @@ class MultiprocLauncher:
             def _absorb(wid: str, status: str, payload: Any) -> None:
                 pending.discard(wid)
                 if status == "ok":
-                    programs[wid] = RemoteProgram(
-                        worker_id=wid,
-                        role=by_id[wid].role,
-                        weights=payload["weights"],
-                        metrics=payload["metrics"],
-                        is_root=bool(payload["is_root"]),
-                    )
+                    programs[wid] = _remote_program(wid, by_id[wid].role, payload)
                 else:
                     etype, emsg = payload
                     errors[wid] = RuntimeError(f"[{etype}] {emsg}")
@@ -202,9 +341,15 @@ class MultiprocLauncher:
                 try:
                     item = result_q.get(timeout=min(remaining, 0.5))
                 except queue_mod.Empty:
-                    if all(not procs[wid].is_alive() for wid in pending):
-                        break  # every straggler died without reporting
-                    continue
+                    if all(procs[wid].is_alive() for wid in pending):
+                        continue
+                    # a pending worker died: give its (possibly still
+                    # buffered) result one more poll, then fast-fail the
+                    # whole tree instead of waiting out the job timeout
+                    try:
+                        item = result_q.get(timeout=0.5)
+                    except queue_mod.Empty:
+                        break
                 _absorb(*item)
 
             # final sweep: a worker may have exited between the Empty poll
@@ -218,38 +363,99 @@ class MultiprocLauncher:
                 _absorb(*item)
 
             if pending:
-                alive = [wid for wid in pending if procs[wid].is_alive()]
-                if alive:
+                crashed = sorted(
+                    wid for wid in pending if not procs[wid].is_alive()
+                )
+                alive = sorted(wid for wid in pending if procs[wid].is_alive())
+                if alive and not crashed:
                     errors["__timeout__"] = TimeoutError(
                         f"{len(alive)} worker processes still running after "
-                        f"{timeout}s: {sorted(alive)}"
+                        f"{timeout}s: {alive}"
                     )
-                for wid in pending:
-                    if wid in errors:
-                        continue
-                    if procs[wid].is_alive():
+                for wid in crashed:
+                    errors.setdefault(wid, RuntimeError(
+                        f"worker process {wid!r} exited without a result "
+                        f"(exitcode={procs[wid].exitcode})"
+                    ))
+                for wid in alive:
+                    if crashed:
+                        # fast-fail: a peer crashed without reporting, so the
+                        # survivors can never complete — tear the tree down
+                        errors.setdefault(wid, RuntimeError(
+                            f"worker process {wid!r} torn down after peer "
+                            f"crash: {crashed}"
+                        ))
+                    else:
+                        errors.setdefault(wid, TimeoutError(
+                            f"worker process {wid!r} hung past the {timeout}s "
+                            "deadline (killed by the driver)"
+                        ))
+        finally:
+            self._reap(list(procs.values()))
+            result_q.close()
+            hub.close()
+
+        return self._finalize(hub, programs, errors)
+
+    # ------------------------------------------------------------------ #
+    # event-driven deployment: hub-side process supervisor
+    # ------------------------------------------------------------------ #
+    def _run_events(self, timeout: float) -> JobResult:
+        hub = self._make_hub()
+        engine = EventEngine(
+            self.policy, self.workers,
+            spec_of=self.job.tag.channel, transport=hub.backend,
+        )
+        supervisor = _ProcessSupervisor(self, hub, engine, timeout)
+        try:
+            engine.arm_dropouts()
+            supervisor.prespawn_standbys()
+            handles = {
+                w.worker_id: _ProcessWorkerHandle(supervisor, w)
+                for w in self.workers
+            }
+            engine.bind(handles)
+            supervisor.start_pump()
+            alive = engine.run(timeout=timeout)
+            supervisor.stop_pump()
+            errors = supervisor.errors
+            if alive:
+                # pending (not programs) is the terminal-state ledger: a
+                # re-joined worker's pre-dropout summary already sits in
+                # programs, and a hung respawn must still surface as a
+                # timeout, not as silent stale state
+                still = sorted(
+                    wid for wid in alive
+                    if wid in supervisor.pending and wid not in errors
+                )
+                if still:
+                    errors["__timeout__"] = TimeoutError(
+                        f"{len(still)} worker processes still running after "
+                        f"{timeout}s: {still}"
+                    )
+                    for wid in still:
                         errors[wid] = TimeoutError(
                             f"worker process {wid!r} hung past the {timeout}s "
                             "deadline (killed by the driver)"
                         )
-                    else:
-                        errors[wid] = RuntimeError(
-                            f"worker process {wid!r} exited without a result "
-                            f"(exitcode={procs[wid].exitcode})"
-                        )
         finally:
-            # hard stop: a hung child must never wedge the driver (or CI)
-            for p in procs.values():
-                p.join(timeout=5.0)
-                if p.is_alive():
-                    p.terminate()
-                    p.join(timeout=5.0)
-                if p.is_alive():  # pragma: no cover - last resort
-                    p.kill()
-                    p.join(timeout=5.0)
-            result_q.close()
+            supervisor.close()
             hub.close()
 
+        return self._finalize(
+            hub, supervisor.programs, supervisor.errors,
+            dropped=engine.dropped, events=engine.events,
+        )
+
+    # ------------------------------------------------------------------ #
+    def _finalize(
+        self,
+        hub: TransportHub,
+        programs: Dict[str, Any],
+        errors: Dict[str, BaseException],
+        dropped: Optional[Dict[str, float]] = None,
+        events: Optional[List[Tuple[float, str, str]]] = None,
+    ) -> JobResult:
         channel_bytes = {
             c.name: hub.backend.stats.get(f"bytes:{c.name}", 0.0)
             for c in self.job.tag.channels
@@ -263,7 +469,252 @@ class MultiprocLauncher:
             programs=programs,
             channel_bytes=channel_bytes,
             errors=errors,
+            dropped=dict(dropped or {}),
+            events=list(events or []),
         )
+
+
+class _ProcessSupervisor:
+    """Driver-side supervision state for an event-driven process tree.
+
+    Owns the result-queue pump (a daemon thread feeding worker outcomes to
+    the ``EventEngine``), the per-worker process table, the pre-warmed
+    re-join standbys, and the fast-fail teardown for workers that die
+    without reporting."""
+
+    def __init__(
+        self,
+        launcher: MultiprocLauncher,
+        hub: TransportHub,
+        engine: EventEngine,
+        timeout: float,
+    ) -> None:
+        self.launcher = launcher
+        self.hub = hub
+        self.engine = engine
+        self.timeout = timeout
+        self.deadline = time.monotonic() + timeout
+        self.result_q = launcher._ctx.Queue()
+        self.by_id = {w.worker_id: w for w in launcher.workers}
+        initial = {w.worker_id for w in engine.initial_cohort()}
+        self.initial = initial
+        self.barrier = launcher._ctx.Barrier(len(initial)) if initial else None
+        self.procs: Dict[str, Any] = {}        # wid -> live/most-recent process
+        # wid -> (proc, rejoin_event, drop_ack) of the pre-warmed standby
+        self.standbys: Dict[str, Tuple[Any, Any, Any]] = {}
+        self.drop_acks: Dict[str, Any] = {}    # wid -> active process's ack
+        # wid -> engine re-join directive recorded at the "dropping" phase
+        self._rejoin_at: Dict[str, Optional[float]] = {}
+        self.programs: Dict[str, Any] = {}
+        self.errors: Dict[str, BaseException] = {}
+        self.pending: set = set(self.by_id)
+        self.done: Dict[str, threading.Event] = {
+            wid: threading.Event() for wid in self.by_id
+        }
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._pump_thread: Optional[threading.Thread] = None
+
+    # ------------------------------ spawn ------------------------------ #
+    def prespawn_standbys(self) -> None:
+        """Pre-warm one standby process per scheduled re-join: it pays the
+        interpreter/import cost now (concurrently with the job) and parks on
+        an event, so a re-join lands milliseconds after the engine's
+        directive instead of a full process start-up later."""
+        for wid in self.launcher.policy.rejoins:
+            event = self.launcher._ctx.Event()
+            ack = self.launcher._ctx.Event()
+            proc = self.launcher._spawn(
+                self.by_id[wid], self.hub.address, None, self.result_q,
+                self.timeout, rejoin_event=event, drop_ack=ack,
+            )
+            self.standbys[wid] = (proc, event, ack)
+
+    def spawn(self, wid: str) -> None:
+        barrier = self.barrier if wid in self.initial else None
+        ack = self.launcher._ctx.Event()
+        self.drop_acks[wid] = ack
+        self.procs[wid] = self.launcher._spawn(
+            self.by_id[wid], self.hub.address, barrier, self.result_q,
+            self.timeout, drop_ack=ack,
+        )
+
+    def signal_rejoin(self, wid: str) -> None:
+        got = self.standbys.pop(wid, None)
+        if got is None:  # pragma: no cover - engine schedules one re-join max
+            raise RuntimeError(f"no re-join standby for worker {wid!r}")
+        proc, event, ack = got
+        if not proc.is_alive():
+            self._finish(wid, error=RuntimeError(
+                f"re-join standby for {wid!r} died before the re-join "
+                f"(exitcode={proc.exitcode})"
+            ))
+            return
+        self.procs[wid] = proc
+        self.drop_acks[wid] = ack  # the respawn can be poisoned later too
+        event.set()
+
+    def kill(self, wid: str) -> None:
+        """Engine kill directive for a dropped worker that will not re-join.
+        Nothing to do eagerly: the directive arrives at the ``dropping``
+        phase, while the process is still alive waiting for the drop ack and
+        about to marshal its final state; it exits on its own after phase 2,
+        and teardown (``close``) reaps any process that does not."""
+
+    # ------------------------------ pump ------------------------------- #
+    def start_pump(self) -> None:
+        self._pump_thread = threading.Thread(
+            target=self._pump, name="spawn-supervisor-pump", daemon=True
+        )
+        self._pump_thread.start()
+
+    def stop_pump(self) -> None:
+        self._stop.set()
+        if self._pump_thread is not None:
+            self._pump_thread.join(timeout=5.0)
+
+    def _finish(self, wid: str, error: Optional[BaseException] = None) -> None:
+        with self._lock:
+            self.pending.discard(wid)
+            if error is not None:
+                self.errors.setdefault(wid, error)
+        self.done[wid].set()
+
+    def _absorb(self, wid: str, status: str, payload: Any) -> None:
+        role = self.by_id[wid].role
+        if status == "ok":
+            with self._lock:
+                self.programs[wid] = _remote_program(wid, role, payload)
+            self._finish(wid)
+            return
+        if status == "err":
+            etype, emsg = payload
+            self._finish(wid, error=RuntimeError(f"[{etype}] {emsg}"))
+            return
+        if status == "dropping":
+            # phase 1: the worker announced its dropout and is parked on the
+            # ack — record it and cascade orphans (hub-side poison) NOW,
+            # before the worker leaves its channels, so no child ever sees
+            # a limbo state (the ordering the engine documents)
+            self._rejoin_at[wid] = self.engine.worker_dropped(wid, float(payload))
+            ack = self.drop_acks.get(wid)
+            if ack is not None:
+                ack.set()
+            return
+        if status == "dropped":
+            at, summary = payload
+            # keep the dropped worker's last state visible (the threaded
+            # runtime keeps the dropped program object); a successful re-join
+            # run overwrites it with the respawned worker's final state
+            with self._lock:
+                self.programs[wid] = _remote_program(wid, role, summary)
+            # the directive was computed at the "dropping" phase; `rejoin`
+            # resets the hub drop/clock state and restarts through the
+            # handle (pre-warmed standby)
+            rejoin_at = self._rejoin_at.pop(wid, None)
+            if rejoin_at is None:
+                self._finish(wid)
+            else:
+                try:
+                    self.engine.rejoin(wid, rejoin_at)
+                except BaseException as exc:  # noqa: BLE001
+                    self._finish(wid, error=exc)
+            return
+        self._finish(wid, error=RuntimeError(f"unknown worker status {status!r}"))
+
+    def _pump(self) -> None:
+        while self.pending and not self._stop.is_set():
+            remaining = self.deadline - time.monotonic()
+            if remaining <= 0:
+                break
+            try:
+                item = self.result_q.get(timeout=min(remaining, 0.25))
+            except queue_mod.Empty:
+                if self._check_crashed():
+                    break
+                continue
+            self._absorb(*item)
+        # final sweep for results still buffered in the queue's pipe
+        while self.pending:
+            try:
+                item = self.result_q.get(timeout=0.5)
+            except queue_mod.Empty:
+                break
+            self._absorb(*item)
+
+    def _check_crashed(self) -> bool:
+        """Fast-fail hardening: a worker process that died *without*
+        reporting can never complete, and in a barriered cohort its peers
+        would wait out the whole job timeout for it. Detect it, record the
+        crash, and tear the remaining tree down. Returns True when the pump
+        should stop."""
+        dead = [
+            wid for wid in list(self.pending)
+            if (proc := self.procs.get(wid)) is not None and not proc.is_alive()
+        ]
+        if not dead:
+            return False
+        # one more poll: the result may still be in the pipe
+        try:
+            self._absorb(*self.result_q.get(timeout=0.5))
+            return False
+        except queue_mod.Empty:
+            pass
+        crashed = sorted(wid for wid in dead if wid in self.pending)
+        if not crashed:
+            return False
+        for wid in crashed:
+            self._finish(wid, error=RuntimeError(
+                f"worker process {wid!r} exited without a result "
+                f"(exitcode={self.procs[wid].exitcode})"
+            ))
+        for wid in sorted(self.pending):
+            proc = self.procs.get(wid)
+            if proc is not None and proc.is_alive():
+                proc.terminate()
+            self._finish(wid, error=RuntimeError(
+                f"worker process {wid!r} torn down after peer crash: {crashed}"
+            ))
+        return True
+
+    # ----------------------------- teardown ---------------------------- #
+    def close(self) -> None:
+        self._stop.set()
+        if self._pump_thread is not None:
+            self._pump_thread.join(timeout=5.0)
+        procs = list(self.procs.values())
+        for proc, _event in self.standbys.values():
+            # an unused standby is parked on its re-join event and must NOT
+            # be woken (it would join a finished job) — terminate it outright
+            if proc.is_alive():
+                proc.terminate()
+            procs.append(proc)
+        self.standbys.clear()
+        MultiprocLauncher._reap(procs)
+        self.result_q.close()
+
+
+class _ProcessWorkerHandle:
+    """``WorkerHandle`` binding one engine worker to OS processes."""
+
+    def __init__(self, supervisor: _ProcessSupervisor, worker: WorkerConfig) -> None:
+        self._sup = supervisor
+        self._wid = worker.worker_id
+
+    def start(self, at: float) -> None:
+        self._sup.spawn(self._wid)
+
+    def restart(self, at: float) -> None:
+        self._sup.signal_rejoin(self._wid)
+
+    def kill(self, at: float) -> None:
+        self._sup.kill(self._wid)
+
+    def wait(self, timeout: float) -> bool:
+        # once the supervisor's pump deadline has passed, nothing will ever
+        # set this worker's done event — don't stack per-worker timeouts
+        remaining = max(0.0, self._sup.deadline - time.monotonic()) + 1.0
+        return self._sup.done[self._wid].wait(min(timeout, remaining))
 
 
 def run_job_multiproc(

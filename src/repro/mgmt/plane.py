@@ -22,8 +22,29 @@ from repro.core.channels import ChannelManager, LinkModel, TransportBackend
 from repro.core.expansion import JobSpec, WorkerConfig, expand
 from repro.core.registry import ComputeSpec, RegistryError, ResourceRegistry
 from repro.core.roles import Role, RoleContext
-from repro.core.runtime import resolve_program, static_membership
+from repro.core.runtime import (
+    JobResult,
+    RuntimePolicy,
+    resolve_program,
+    run_job,
+    static_membership,
+)
 from repro.core.tag import DatasetSpec
+
+# deployment name -> whole-job runner. Jobs submitted to the control plane
+# pick a *deployment*, not a code path: "inproc" policy jobs run on the
+# thread-backed event runtime, "multiproc" jobs on the process-tree spawner
+# — both bindings of the same EventEngine, driven through one API surface.
+def _run_multiproc(*args: Any, **kwargs: Any) -> JobResult:
+    from repro.launch.spawn import run_job_multiproc  # local: avoid cycle
+
+    return run_job_multiproc(*args, **kwargs)
+
+
+JOB_RUNNERS: Dict[str, Callable[..., JobResult]] = {
+    "inproc": run_job,
+    "multiproc": _run_multiproc,
+}
 
 
 class JobState(enum.Enum):
@@ -187,6 +208,24 @@ class JobRecord:
     # caller-provided backend (e.g. a MultiprocBackend client pointed at a
     # TransportHub) instead of the per-spec registry lookup
     backend_factory: Optional[Callable[[Any], TransportBackend]] = None
+    # deployment selection: "inproc" (default) runs agent threads in this
+    # process; "multiproc" hands the whole job to the process-tree spawner.
+    # A job with an event-driven RuntimePolicy routes through the matching
+    # EventEngine binding on either deployment.
+    deployment: str = "inproc"
+    policy: Optional[RuntimePolicy] = None
+    run_timeout: float = 120.0
+    result: Optional[JobResult] = None
+    runner_thread: Optional[threading.Thread] = None
+    runner_error: Optional[BaseException] = None
+
+    @property
+    def routed(self) -> bool:
+        """True when this job runs through a whole-job runner (deployment
+        choice or event-driven policy) instead of per-worker agents."""
+        return self.deployment != "inproc" or (
+            self.policy is not None and self.policy.is_event_driven
+        )
 
 
 class Controller:
@@ -207,14 +246,23 @@ class Controller:
 
     # ------------------------- job lifecycle -------------------------- #
     def submit(self, record: JobRecord) -> None:
+        if record.deployment not in JOB_RUNNERS:
+            raise ValueError(
+                f"unknown deployment {record.deployment!r}; "
+                f"one of {sorted(JOB_RUNNERS)}"
+            )
         self.db[record.spec.job_id] = record
         record.workers = expand(record.spec, self.registry)
         record.membership = static_membership(record.workers, record.spec.tag)
-        record.channels = ChannelManager(
-            record.spec.tag.channels, backend_factory=record.backend_factory
-        )
-        for (channel, worker), model in record.link_models.items():
-            record.channels.backend(channel).set_link(channel, worker, model)
+        if not record.routed:
+            # agent deployment owns the channel fabric in this process; a
+            # routed job's runner builds its own (threaded event runtime or
+            # the spawner's TransportHub)
+            record.channels = ChannelManager(
+                record.spec.tag.channels, backend_factory=record.backend_factory
+            )
+            for (channel, worker), model in record.link_models.items():
+                record.channels.backend(channel).set_link(channel, worker, model)
         record.state = JobState.EXPANDED
         self.notifier.publish(
             Event("deploy", record.spec.job_id, {"workers": record.workers})
@@ -223,6 +271,9 @@ class Controller:
     def deploy(self, job_id: str) -> None:
         record = self.db[job_id]
         record.state = JobState.DEPLOYING
+        if record.routed:
+            self._deploy_routed(record)
+            return
         for w in record.workers:
             deployer = self._deployer_for(w.compute_id)
             agent = deployer.create_instance(w, record)
@@ -232,6 +283,54 @@ class Controller:
         for agent in record.agents.values():
             agent.run()
         record.state = JobState.RUNNING
+
+    def _deploy_routed(self, record: JobRecord) -> None:
+        """Whole-job deployment: the selected runner (threaded event runtime
+        or process-tree spawner) executes the job on a background thread and
+        reports one JobResult back into the record."""
+        runner = JOB_RUNNERS[record.deployment]
+
+        def _run() -> None:
+            try:
+                result = runner(
+                    record.spec,
+                    self.registry,
+                    policy=record.policy,
+                    link_models=record.link_models or None,
+                    per_worker_hyperparams=record.per_worker_hyperparams or None,
+                    program_overrides=record.program_overrides or None,
+                    timeout=record.run_timeout,
+                )
+                if record.state is not JobState.TERMINATED:
+                    record.result = result
+            except BaseException as exc:  # noqa: BLE001 - surfaced via wait()
+                record.runner_error = exc
+            finally:
+                if record.state is not JobState.TERMINATED:
+                    for w in record.workers:
+                        self.notifier.publish(Event(
+                            "worker-status", record.spec.job_id,
+                            {
+                                "worker_id": w.worker_id,
+                                "status": self._routed_status(record, w.worker_id),
+                            },
+                        ))
+
+        record.runner_thread = threading.Thread(
+            target=_run, name=f"job-runner-{record.spec.job_id}", daemon=True
+        )
+        record.runner_thread.start()
+        record.state = JobState.RUNNING
+
+    @staticmethod
+    def _routed_status(record: JobRecord, worker_id: str) -> str:
+        if record.result is None:
+            return "failed"
+        if worker_id in record.result.errors:
+            return "failed"
+        if worker_id in record.result.dropped:
+            return "dropped"
+        return "completed"
 
     def _deployer_for(self, compute_id: str) -> Deployer:
         if compute_id in self.deployers:
@@ -243,6 +342,8 @@ class Controller:
 
     def wait(self, job_id: str, timeout: float = 120.0) -> JobState:
         record = self.db[job_id]
+        if record.routed:
+            return self._wait_routed(record, timeout)
         deadline = time.monotonic() + timeout
         for agent in record.agents.values():
             remaining = max(0.0, deadline - time.monotonic())
@@ -260,7 +361,32 @@ class Controller:
                 record.channels.close()
         return record.state
 
+    def _wait_routed(self, record: JobRecord, timeout: float) -> JobState:
+        if record.state in (
+            JobState.COMPLETED, JobState.FAILED, JobState.TERMINATED
+        ):
+            return record.state  # already settled: don't re-publish revoke
+        thread = record.runner_thread
+        if thread is None:
+            return record.state  # submitted but never deployed
+        thread.join(timeout=timeout)
+        if thread.is_alive():
+            return record.state  # still RUNNING
+        if record.runner_error is not None or record.result is None:
+            record.state = JobState.FAILED
+        elif record.result.errors:
+            record.state = JobState.FAILED
+        else:
+            record.state = JobState.COMPLETED
+        self.notifier.publish(Event("revoke", record.spec.job_id, {}))
+        return record.state
+
     def terminate(self, job_id: str) -> None:
+        """Stop a job. Agent-deployed jobs terminate cooperatively (work-done
+        flag per worker). A routed job has no mid-run cancel yet: its runner
+        owns the worker tree and reaps it at ``run_timeout`` latest — the
+        record is marked TERMINATED immediately and a late result is
+        discarded rather than written into a terminated job."""
         record = self.db[job_id]
         for agent in record.agents.values():
             agent.terminate()
@@ -300,13 +426,23 @@ class APIServer:
         program_overrides: Optional[Dict[str, type]] = None,
         link_models: Optional[Dict[Tuple[str, str], LinkModel]] = None,
         backend_factory: Optional[Callable[[Any], TransportBackend]] = None,
+        deployment: str = "inproc",
+        policy: Optional[RuntimePolicy] = None,
+        run_timeout: float = 120.0,
     ) -> str:
+        """Submit a job. ``deployment`` picks where it runs ("inproc"
+        threads or a "multiproc" process tree) and ``policy`` how its rounds
+        lower (sync/deadline/async + dropout/re-join schedules) — both are
+        deployment details of the same TAG, never application logic."""
         record = JobRecord(
             spec=spec,
             per_worker_hyperparams=dict(per_worker_hyperparams or {}),
             program_overrides=dict(program_overrides or {}),
             link_models=dict(link_models or {}),
             backend_factory=backend_factory,
+            deployment=deployment,
+            policy=policy,
+            run_timeout=run_timeout,
         )
         self.controller.submit(record)
         return spec.job_id

@@ -282,6 +282,33 @@ def check_clock_ops(factory: Factory) -> None:
     assert be.drop_time("a-0") is None
 
 
+def check_supervisor_rejoin_reset(factory: Factory) -> None:
+    """The process-supervisor op sequence used by the event engine: a
+    tripped ``set_drop`` freezes the worker; ``clear_drop`` + ``set_clock``
+    re-admit it at the re-join time — drop schedule gone, poison cleared,
+    clock moved forward, messaging live again."""
+    be = factory()
+    ea, eb = _pair(be)
+    be.set_drop("b-0", at=1.0)
+    assert be.drop_time("b-0") == 1.0
+    try:
+        be.advance("b-0", 2.0)
+    except WorkerDropped as exc:
+        assert exc.worker == "b-0" and exc.at == 1.0
+    else:
+        raise AssertionError("advance ignored the dropout schedule")
+    # an orphan cascade may have poisoned the worker while it was down
+    be.poison("b-0", at=1.0)
+    # re-join: reset drop/poison state, move the clock to the re-join time
+    be.clear_drop("b-0")
+    assert be.drop_time("b-0") is None
+    be.check_poison("b-0")  # clear_drop clears poison too: must not raise
+    be.set_clock("b-0", 3.0)
+    assert be.now("b-0") == 3.0
+    ea.send("b-0", "welcome-back")
+    assert eb.recv("a-0") == "welcome-back"
+
+
 def check_stats_accounting(factory: Factory) -> None:
     """Byte/message accounting honors the channel wire dtype."""
     be = factory()
@@ -306,6 +333,7 @@ CONFORMANCE_CHECKS: Dict[str, Callable[[Factory], None]] = {
     "poison_wakes_recv_any_multi": check_poison_wakes_recv_any_multi,
     "dropout_mid_recv_fifo": check_dropout_mid_recv_fifo,
     "dropout_on_send": check_dropout_on_send,
+    "supervisor_rejoin_reset": check_supervisor_rejoin_reset,
     "clock_ops": check_clock_ops,
     "stats_accounting": check_stats_accounting,
 }

@@ -31,6 +31,7 @@ from __future__ import annotations
 import queue
 import socket
 import threading
+import time
 from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.core.channels import (
@@ -40,7 +41,13 @@ from repro.core.channels import (
     WorkerDropped,
     register_backend,
 )
-from repro.transport.wire import WireError, recv_obj, send_obj
+from repro.transport.wire import (
+    WireError,
+    decode_payload,
+    encode_payload,
+    recv_obj,
+    send_obj,
+)
 
 __all__ = ["TransportHub", "MultiprocBackend"]
 
@@ -104,10 +111,20 @@ class TransportHub:
 
     def close(self) -> None:
         self._closed.set()
+        # shutdown BEFORE close: a blocked accept() holds a kernel reference
+        # to the listening socket, so close() alone leaves the port accepting
+        # one more connection and frees the fd under the blocked thread
+        # (fd-reuse races against unrelated sockets). shutdown() wakes the
+        # accept thread deterministically first.
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
         try:
             self._sock.close()
         except OSError:
             pass
+        self._accept_thread.join(timeout=2.0)
 
     def __enter__(self) -> "TransportHub":
         return self
@@ -205,10 +222,17 @@ class MultiprocBackend:
     it via its ``backend_factory`` hook).
     """
 
+    # one reconnect-with-backoff on a transient connection fault before the
+    # error surfaces (the first slice of the multi-host reconnect story)
+    RETRY_BACKOFF = 0.05
+
     def __init__(self, address: Tuple[str, int], name: str = "multiproc") -> None:
         self.name = name
         self.address = (str(address[0]), int(address[1]))
         self._local = threading.local()
+        # channel -> opt-in payload codec (client-local: the hub stores the
+        # coded payload opaquely; peers decode via the envelope marker)
+        self._codecs: Dict[str, str] = {}
         # every socket ever opened, across threads — close() must reach the
         # connections of worker threads that already finished, not just the
         # closing thread's own
@@ -230,6 +254,20 @@ class MultiprocBackend:
         return sock
 
     def _call(self, op: str, *args: Any) -> Any:
+        """One RPC to the hub, with a single reconnect-with-backoff retry on
+        a transient connection fault (``ConnectionResetError`` /
+        ``BrokenPipeError``) before the error surfaces. Note the retry is
+        at-most-once-ambiguous for non-idempotent ops: a fault racing the
+        hub's dispatch may have applied the op already — acceptable for this
+        first slice of the multi-host reconnect story, where the fault model
+        is a broker restart between operations."""
+        try:
+            return self._call_once(op, *args)
+        except (ConnectionResetError, BrokenPipeError):
+            time.sleep(self.RETRY_BACKOFF)
+            return self._call_once(op, *args)
+
+    def _call_once(self, op: str, *args: Any) -> Any:
         sock = self._conn()
         try:
             send_obj(sock, (op, list(args)))
@@ -271,12 +309,13 @@ class MultiprocBackend:
 
     # ---------------------------- messaging --------------------------- #
     def send(self, channel: str, group: str, src: str, dst: str, payload: Any) -> None:
+        payload = encode_payload(payload, self._codecs.get(channel, ""))
         self._call("send", channel, group, src, dst, payload)
 
     def recv(
         self, channel: str, group: str, me: str, end: str, timeout: Optional[float]
     ) -> Any:
-        return self._call("recv", channel, group, me, end, timeout)
+        return decode_payload(self._call("recv", channel, group, me, end, timeout))
 
     def recv_any(
         self,
@@ -290,7 +329,7 @@ class MultiprocBackend:
         end, payload, arrival = self._call(
             "recv_any", channel, group, me, list(ends), timeout, bool(advance)
         )
-        return str(end), payload, float(arrival)
+        return str(end), decode_payload(payload), float(arrival)
 
     def recv_fifo(
         self,
@@ -306,12 +345,12 @@ class MultiprocBackend:
             for end, payload in self._call(
                 "recv_fifo", channel, group, me, list(ends), timeout
             ):
-                yield str(end), payload
+                yield str(end), decode_payload(payload)
 
         return _gen()
 
     def peek(self, channel: str, group: str, me: str, end: str) -> Optional[Any]:
-        return self._call("peek", channel, group, me, end)
+        return decode_payload(self._call("peek", channel, group, me, end))
 
     def earliest(
         self, channel: str, group: str, me: str, ends: Sequence[str]
@@ -344,6 +383,19 @@ class MultiprocBackend:
 
     def set_wire_dtype(self, channel: str, dtype: str) -> None:
         self._call("set_wire_dtype", channel, dtype)
+
+    def set_codec(self, channel: str, codec: str) -> None:
+        """Opt this channel into a wire payload codec (``repro.transport
+        .wire.WIRE_CODECS``): the sending client compresses float-array
+        leaves before they cross the socket; receivers decode via the
+        self-describing envelope. Client-local — the hub stores coded
+        payloads opaquely, and its emulated byte accounting still follows
+        the channel's ``wire_dtype`` (set ``wire_dtype="int8"`` alongside
+        ``codec="int8"`` for matching accounting)."""
+        if codec:
+            self._codecs[channel] = str(codec)
+        else:
+            self._codecs.pop(channel, None)
 
     def link(self, channel: str, worker: str) -> LinkModel:
         bandwidth, latency = self._call("link", channel, worker)

@@ -262,3 +262,93 @@ def encode_message(src: str, payload: Any, nbytes: int, arrival: float) -> bytes
 def decode_message(buf: bytes) -> Tuple[str, Any, int, float]:
     src, payload, nbytes, arrival = decode(buf)
     return src, payload, nbytes, arrival
+
+
+# ---------------------------------------------------------------------- #
+# per-channel payload codecs: repro.fl.compression plugged into the wire
+# ---------------------------------------------------------------------- #
+# A channel spec may opt into a codec (``Channel(..., codec="int8")``): the
+# *sending* client transforms float-array leaves before the payload crosses
+# the socket, and any receiving client reverses it (the transform is
+# self-describing via the envelope marker below, so receivers need no local
+# configuration). This shrinks real wire bytes the way ``wire_dtype``
+# shrinks the *emulated* accounting — lossy, so it is strictly opt-in and
+# emulation backends ignore it (their payloads never leave the process).
+
+_CODEC_ENVELOPE = "__wire_codec__"
+_Q8, _S8 = "__q8__", "__s8__"
+_FLOAT_KINDS = ("f",)
+
+
+def _int8_encode(payload: Any) -> Any:
+    """Symmetric per-tensor int8 quantization of every float-array leaf
+    (``repro.fl.compression.quantize_int8``); non-float leaves pass through."""
+    from repro.fl.compression import quantize_int8
+
+    def walk(node: Any) -> Any:
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(v) for v in node]
+        if isinstance(node, tuple):
+            return tuple(walk(v) for v in node)
+        if (
+            hasattr(node, "shape")
+            and getattr(getattr(node, "dtype", None), "kind", "") in _FLOAT_KINDS
+        ):
+            q, scale = quantize_int8(np.asarray(node))
+            return {_Q8: np.asarray(q), _S8: float(np.asarray(scale))}
+        return node
+
+    return walk(payload)
+
+
+def _int8_decode(payload: Any) -> Any:
+    def walk(node: Any) -> Any:
+        if isinstance(node, dict):
+            if set(node) == {_Q8, _S8}:
+                return np.asarray(node[_Q8], np.float32) * np.float32(node[_S8])
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(v) for v in node]
+        if isinstance(node, tuple):
+            return tuple(walk(v) for v in node)
+        return node
+
+    return walk(payload)
+
+
+WIRE_CODECS = {
+    "int8": (_int8_encode, _int8_decode),
+}
+
+
+def _codec(name: str):
+    if name not in WIRE_CODECS:
+        raise WireError(
+            f"unknown wire codec {name!r}; registered: {sorted(WIRE_CODECS)}"
+        )
+    return WIRE_CODECS[name]
+
+
+def encode_payload(payload: Any, codec: str) -> Any:
+    """Apply ``codec`` to a channel payload; empty codec is the identity."""
+    if not codec:
+        return payload
+    enc, _ = _codec(codec)
+    return {_CODEC_ENVELOPE: codec, "payload": enc(payload)}
+
+
+def decode_payload(payload: Any) -> Any:
+    """Reverse :func:`encode_payload`; plain payloads pass through."""
+    if isinstance(payload, dict) and _CODEC_ENVELOPE in payload:
+        _, dec = _codec(payload[_CODEC_ENVELOPE])
+        return dec(payload["payload"])
+    return payload
+
+
+def codec_ratio(payload: Any, codec: str) -> float:
+    """Achieved wire-bytes ratio (coded / raw) of ``codec`` on ``payload``."""
+    raw = len(encode(payload))
+    coded = len(encode(encode_payload(payload, codec)))
+    return coded / raw if raw else 1.0

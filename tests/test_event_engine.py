@@ -1,0 +1,199 @@
+"""EventEngine contract tests against fake handles/transport.
+
+The engine is the deployment-agnostic core shared by the threaded runtime
+and the multiproc process supervisor; these tests pin its observable
+contract — schedule validation, virtual-order start release, dropout
+bookkeeping, orphan cascade and re-join directives — independent of any
+real deployment (those are covered by the equivalence suites)."""
+import pytest
+
+from repro.core.events import EventEngine
+from repro.core.expansion import WorkerConfig
+from repro.core.runtime import RuntimePolicy
+from repro.core.tag import Channel, FuncTags
+
+
+def _worker(wid, role, groups):
+    return WorkerConfig(
+        worker_id=wid, role=role, program="", compute_id="c0", groups=groups
+    )
+
+
+PARAM = Channel(
+    name="param-channel",
+    pair=("trainer", "aggregator"),
+    func_tags=FuncTags({
+        "trainer": ("fetch", "upload"),
+        "aggregator": ("distribute", "aggregate"),
+    }),
+)
+
+
+class FakeTransport:
+    def __init__(self, members=None):
+        self.calls = []
+        self.members = dict(members or {})
+
+    def set_drop(self, worker, at):
+        self.calls.append(("set_drop", worker, at))
+
+    def clear_drop(self, worker):
+        self.calls.append(("clear_drop", worker))
+
+    def set_clock(self, worker, at):
+        self.calls.append(("set_clock", worker, at))
+
+    def poison(self, worker, at):
+        self.calls.append(("poison", worker, at))
+
+    def peers(self, channel, group, me):
+        return [m for m in self.members.get((channel, group), []) if m != me]
+
+
+class FakeHandle:
+    def __init__(self):
+        self.calls = []
+
+    def start(self, at):
+        self.calls.append(("start", at))
+
+    def restart(self, at):
+        self.calls.append(("restart", at))
+
+    def kill(self, at):
+        self.calls.append(("kill", at))
+
+    def wait(self, timeout):
+        self.calls.append(("wait", timeout))
+        return True
+
+
+def _engine(policy, workers, transport=None):
+    specs = {"param-channel": PARAM}
+    return EventEngine(
+        policy, workers, spec_of=specs.__getitem__,
+        transport=transport or FakeTransport(),
+    )
+
+
+WORKERS = [
+    _worker("aggregator-0", "aggregator", {"param-channel": "default"}),
+    _worker("trainer-0", "trainer", {"param-channel": "default"}),
+    _worker("trainer-1", "trainer", {"param-channel": "default"}),
+]
+
+
+class TestValidationAndCohort:
+    def test_unknown_schedule_worker_rejected(self):
+        with pytest.raises(KeyError):
+            _engine(RuntimePolicy(arrivals={"ghost-0": 1.0}), WORKERS)
+        with pytest.raises(KeyError):
+            _engine(RuntimePolicy(dropouts={"ghost-0": 1.0}), WORKERS)
+
+    def test_initial_cohort_static_vs_dynamic(self):
+        # sync mode: everyone is initial, arrivals only offset clocks
+        eng = _engine(RuntimePolicy(arrivals={"trainer-1": 2.0}), WORKERS)
+        assert not eng.dynamic_join
+        assert [w.worker_id for w in eng.initial_cohort()] == [
+            "aggregator-0", "trainer-0", "trainer-1",
+        ]
+        # a lowered mode joins late arrivals dynamically
+        eng = _engine(
+            RuntimePolicy(mode="async", arrivals={"trainer-1": 2.0}), WORKERS
+        )
+        assert eng.dynamic_join
+        assert [w.worker_id for w in eng.initial_cohort()] == [
+            "aggregator-0", "trainer-0",
+        ]
+
+    def test_arm_dropouts_hits_transport(self):
+        tr = FakeTransport()
+        eng = _engine(RuntimePolicy(dropouts={"trainer-0": 1.5}), WORKERS, tr)
+        eng.arm_dropouts()
+        assert ("set_drop", "trainer-0", 1.5) in tr.calls
+
+
+class TestRunLoop:
+    def test_starts_release_in_virtual_order_with_clock_offsets(self):
+        tr = FakeTransport()
+        eng = _engine(
+            RuntimePolicy(mode="async", arrivals={"trainer-0": 3.0}), WORKERS, tr
+        )
+        handles = {w.worker_id: FakeHandle() for w in WORKERS}
+        assert eng.run(handles, timeout=5.0) == []
+        # the late arrival starts last, after its clocks moved to t=3
+        starts = [(t, k, w) for t, k, w in eng.events if k == "start"]
+        assert starts == [
+            (0.0, "start", "aggregator-0"),
+            (0.0, "start", "trainer-1"),
+            (3.0, "start", "trainer-0"),
+        ]
+        assert ("set_clock", "trainer-0", 3.0) in tr.calls
+        assert handles["trainer-0"].calls[0] == ("start", 3.0)
+        assert all(h.calls[-1][0] == "wait" for h in handles.values())
+
+
+class TestDropoutSupervision:
+    def test_drop_without_rejoin_cascades_and_kills(self):
+        tr = FakeTransport(
+            members={("param-channel", "default"): [
+                "aggregator-0", "trainer-0", "trainer-1",
+            ]}
+        )
+        eng = _engine(RuntimePolicy(dropouts={"aggregator-0": 0.5}), WORKERS, tr)
+        handles = {w.worker_id: FakeHandle() for w in WORKERS}
+        eng.bind(handles)
+        assert eng.worker_dropped("aggregator-0", 0.5) is None
+        assert eng.dropped == {"aggregator-0": 0.5}
+        # the distributor's children were poisoned and recorded as orphans
+        assert ("poison", "trainer-0", 0.5) in tr.calls
+        assert ("poison", "trainer-1", 0.5) in tr.calls
+        orphaned = {w for _, k, w in eng.events if k == "orphaned"}
+        assert orphaned == {"trainer-0", "trainer-1"}
+        assert handles["aggregator-0"].calls == [("kill", 0.5)]
+
+    def test_trainer_drop_does_not_cascade_upstream(self):
+        tr = FakeTransport(
+            members={("param-channel", "default"): [
+                "aggregator-0", "trainer-0", "trainer-1",
+            ]}
+        )
+        eng = _engine(RuntimePolicy(dropouts={"trainer-0": 0.5}), WORKERS, tr)
+        eng.bind({w.worker_id: FakeHandle() for w in WORKERS})
+        assert eng.worker_dropped("trainer-0", 0.5) is None
+        assert not [c for c in tr.calls if c[0] == "poison"]
+
+    def test_drop_with_rejoin_restarts_after_transport_reset(self):
+        tr = FakeTransport()
+        eng = _engine(
+            RuntimePolicy(
+                dropouts={"trainer-0": 0.5}, rejoins={"trainer-0": 1.5}
+            ),
+            WORKERS, tr,
+        )
+        handles = {w.worker_id: FakeHandle() for w in WORKERS}
+        eng.bind(handles)
+        rejoin_at = eng.worker_dropped("trainer-0", 0.5)
+        assert rejoin_at == 1.5
+        assert not [c for c in tr.calls if c[0] in ("poison", "kill")]
+        eng.rejoin("trainer-0", rejoin_at)
+        assert ("clear_drop", "trainer-0") in tr.calls
+        assert ("set_clock", "trainer-0", 1.5) in tr.calls
+        assert handles["trainer-0"].calls == [("restart", 1.5)]
+        assert (0.5, "dropout", "trainer-0") in eng.events
+        assert (1.5, "rejoin", "trainer-0") in eng.events
+
+    def test_replica_parent_suppresses_cascade(self):
+        workers = WORKERS + [
+            _worker("aggregator-1", "aggregator", {"param-channel": "default"})
+        ]
+        tr = FakeTransport(
+            members={("param-channel", "default"): [
+                "aggregator-0", "aggregator-1", "trainer-0", "trainer-1",
+            ]}
+        )
+        eng = _engine(RuntimePolicy(dropouts={"aggregator-0": 0.5}), workers, tr)
+        eng.bind({w.worker_id: FakeHandle() for w in workers})
+        eng.worker_dropped("aggregator-0", 0.5)
+        # aggregator-1 still parents the group: nobody is orphaned
+        assert not [c for c in tr.calls if c[0] == "poison"]

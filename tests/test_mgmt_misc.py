@@ -88,6 +88,64 @@ class TestManagementPlane:
             # traffic crossed the hub, not in-process queues
             assert hub.backend.stats.get("bytes:param-channel", 0.0) > 0
 
+    def test_policy_job_routed_through_event_runtime(self):
+        """Jobs pick a deployment, not a code path: an event-driven policy
+        job submitted through the control plane routes onto the thread-backed
+        EventEngine binding, and its JobResult (dropout ledger included)
+        lands on the record."""
+        from repro.core.expansion import JobSpec
+        from repro.core.registry import ComputeSpec
+        from repro.core.runtime import RuntimePolicy
+        from repro.core.tag import DatasetSpec
+        from repro.core.topologies import classical_fl
+        from repro.mgmt.plane import APIServer, InprocDeployer, JobState
+
+        api = APIServer()
+        api.register_compute(InprocDeployer(ComputeSpec("c0", realm="default")))
+        datasets = tuple(DatasetSpec(name=f"d{i}", realm="default") for i in range(3))
+        for d in datasets:
+            api.register_dataset(d)
+        w0 = {"w": np.ones(4, np.float32)}
+        job_id = api.create_job(
+            JobSpec(
+                tag=classical_fl(),
+                datasets=datasets,
+                hyperparams={"rounds": 2, "init_weights": w0},
+            ),
+            policy=RuntimePolicy(
+                mode="deadline", deadline=5.0, grace=2.0,
+                dropouts={"trainer-1": 0.5},
+            ),
+            per_worker_hyperparams={"trainer-1": {"compute_time": 1.0}},
+            run_timeout=60.0,
+        )
+        rec = api.job(job_id)
+        assert rec.routed and rec.channels is None
+        api.start_job(job_id)
+        state = api.wait_job(job_id, timeout=60)
+        assert state == JobState.COMPLETED
+        assert rec.result is not None and not rec.result.errors
+        assert rec.result.dropped == {"trainer-1": 0.5}
+        assert rec.worker_status["trainer-1"] == "dropped"
+        assert rec.worker_status["global-aggregator-0"] == "completed"
+
+    def test_unknown_deployment_rejected(self):
+        from repro.core.expansion import JobSpec
+        from repro.core.tag import DatasetSpec
+        from repro.core.topologies import classical_fl
+        from repro.mgmt.plane import APIServer
+
+        api = APIServer()
+        with pytest.raises(ValueError):
+            api.create_job(
+                JobSpec(
+                    tag=classical_fl(),
+                    datasets=(DatasetSpec(name="d0", realm="default"),),
+                    hyperparams={},
+                ),
+                deployment="k8s",
+            )
+
 
 class TestCheckpoint:
     def test_roundtrip(self, tmp_path):

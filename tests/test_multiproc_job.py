@@ -4,6 +4,8 @@ Marked ``multiproc``: CI runs these in a dedicated job with a hard timeout so
 a hung child process can never wedge the main suite. All program classes are
 module-level — spawned workers re-import them by qualified name.
 """
+import multiprocessing
+import os
 import time
 
 import numpy as np
@@ -108,6 +110,11 @@ class BadPreRunTrainer(Trainer):
         raise RuntimeError("boom: pre_run")
 
 
+class HardCrashTrainer(Trainer):
+    def pre_run(self):
+        os._exit(3)  # dies before the barrier, reporting nothing
+
+
 class TestFailureHandling:
     def test_worker_errors_marshalled_to_driver(self):
         res = run_job_multiproc(
@@ -147,13 +154,35 @@ class TestFailureHandling:
         # the driver reclaimed the process tree well before the sleep ended
         assert time.monotonic() - t0 < 60.0
 
-    def test_policy_modes_rejected_up_front(self):
-        with pytest.raises(NotImplementedError):
-            MultiprocLauncher(
-                _classical_job(), policy=RuntimePolicy(mode="async")
-            )
-        with pytest.raises(NotImplementedError):
+    def test_unknown_tier_role_rejected_up_front(self):
+        """Policy modes now *run* over multiproc (see test_multiproc_policy);
+        what is still rejected up front is a tiers entry naming a role the
+        TAG does not have — same guard as the threaded runtime."""
+        with pytest.raises(KeyError):
             MultiprocLauncher(
                 _classical_job(),
-                policy=RuntimePolicy(mode="sync", dropouts={"trainer-0": 1.0}),
+                policy=RuntimePolicy(mode="async", tiers={"nope": "async"}),
             )
+
+    def test_hard_crash_without_report_tears_tree_down(self):
+        """Fast-fail hardening: a worker process dying pre-barrier without
+        marshalling anything (os._exit skips the error reporting) must tear
+        the whole process tree down promptly — no zombie children, no
+        leaked hub — instead of wedging healthy peers on the start barrier
+        for the full job timeout."""
+        t0 = time.monotonic()
+        res = run_job_multiproc(
+            _classical_job(rounds=1, n_datasets=2),
+            program_overrides={"trainer": HardCrashTrainer},
+            timeout=60,
+        )
+        elapsed = time.monotonic() - t0
+        assert elapsed < 30.0, f"fast-fail took {elapsed:.1f}s"
+        assert "exited without a result" in str(res.errors["trainer-0"])
+        # the healthy peers were reclaimed, not left to time out
+        assert "global-aggregator-0" in res.errors
+        # no zombie children: the driver reaped the whole tree
+        deadline = time.monotonic() + 10.0
+        while multiprocessing.active_children() and time.monotonic() < deadline:
+            time.sleep(0.1)
+        assert multiprocessing.active_children() == []

@@ -1,0 +1,240 @@
+"""Deadline/async RuntimePolicy jobs over the real process tree.
+
+The cross-deployment acceptance of the event engine: the same seeded policy
+job — including dropout and re-join schedules — produces the same
+participation sets, version vectors and lifecycle events on the threaded
+in-process runtime and on ``repro.launch.spawn`` (one OS process per worker
+behind a ``TransportHub``).
+
+Marked ``multiproc``: CI runs these in a dedicated job with a hard timeout.
+Schedules are chosen so that ordering is forced by *virtual* times (distinct
+compute times, dropouts that precede any upload) — wall-clock scheduling
+noise cannot change the observables being compared.
+"""
+import numpy as np
+import pytest
+
+from repro.core.expansion import JobSpec
+from repro.core.runtime import RuntimePolicy, run_job
+from repro.core.tag import DatasetSpec
+from repro.core.topologies import classical_fl, hierarchical_fl
+from repro.launch.spawn import run_job_multiproc
+from repro.transport.conformance import SeededSGDTrainer  # noqa: F401 - spawn target
+
+pytestmark = pytest.mark.multiproc
+
+_RNG = np.random.default_rng(7)
+W0 = {
+    "w": (0.01 * _RNG.normal(size=(32, 10))).astype(np.float32),
+    "b": np.zeros((10,), np.float32),
+}
+
+
+def _classical_job(rounds=2, n_datasets=3):
+    tag = classical_fl(
+        trainer_program="repro.transport.conformance.SeededSGDTrainer"
+    )
+    return JobSpec(
+        tag=tag,
+        datasets=tuple(DatasetSpec(name=f"d{i}") for i in range(n_datasets)),
+        hyperparams={"rounds": rounds, "init_weights": W0},
+    )
+
+
+def _participation(res):
+    glob = res.program("global-aggregator-0")
+    return [
+        {
+            "round": e["round"],
+            "included": list(e["included"]),
+            "excluded": list(e["excluded"]),
+            "missing": list(e["missing"]),
+        }
+        for e in glob.participation_log
+    ]
+
+
+class TestDeadlineOverMultiproc:
+    def test_deadline_participation_sets_match_inproc(self):
+        """A deadline-mode job with a straggler and a mid-round dropout:
+        per-round included/excluded/missing sets, the dropout ledger and the
+        lifecycle events are identical across deployments."""
+        pol = RuntimePolicy(
+            mode="deadline", deadline=2.0, grace=5.0,
+            dropouts={"trainer-1": 0.7},
+        )
+        per_worker = {
+            "trainer-0": {"compute_time": 0.5},
+            "trainer-1": {"compute_time": 0.5},
+            "trainer-2": {"compute_time": 5.0},  # always past the deadline
+        }
+        kw = dict(policy=pol, per_worker_hyperparams=per_worker)
+        res_in = run_job(_classical_job(), timeout=60, **kw)
+        assert not res_in.errors, res_in.errors
+        res_mp = run_job_multiproc(_classical_job(), timeout=120, **kw)
+        assert not res_mp.errors, res_mp.errors
+
+        assert _participation(res_in) == _participation(res_mp)
+        # round 0: the straggler is excluded; round 1: the dropped worker
+        # is missing as well (sanity that the schedule actually did bite)
+        part = _participation(res_mp)
+        assert part[0]["included"] == ["trainer-0", "trainer-1"]
+        assert part[0]["excluded"] == ["trainer-2"]
+        assert part[1]["missing"] == ["trainer-1"]
+        assert res_in.dropped == res_mp.dropped == {"trainer-1": 0.7}
+        assert res_in.events == res_mp.events
+
+
+class TestAsyncFedBuffOverMultiproc:
+    def test_async_version_vector_matches_inproc(self):
+        """An async-FedBuff job where one trainer drops before its first
+        upload: absorbed-update sequence (src, version, staleness), the
+        server's final version, the dropout ledger, the wire accounting and
+        the resulting global weights are identical across deployments."""
+        pol = RuntimePolicy(
+            mode="async", buffer_size=1, grace=3.0,
+            dropouts={"trainer-1": 0.5},
+        )
+        per_worker = {
+            "trainer-0": {"compute_time": 1.0},
+            "trainer-1": {"compute_time": 50.0},  # dies mid-first-upload
+        }
+        kw = dict(policy=pol, per_worker_hyperparams=per_worker)
+        res_in = run_job(_classical_job(rounds=3, n_datasets=2), timeout=60, **kw)
+        assert not res_in.errors, res_in.errors
+        res_mp = run_job_multiproc(
+            _classical_job(rounds=3, n_datasets=2), timeout=120, **kw
+        )
+        assert not res_mp.errors, res_mp.errors
+
+        glob_in = res_in.program("global-aggregator-0")
+        glob_mp = res_mp.program("global-aggregator-0")
+
+        def _absorbed(glob):
+            return [
+                (e["src"], e["version"], e["staleness"])
+                for e in glob.staleness_log
+            ]
+
+        assert _absorbed(glob_in) == _absorbed(glob_mp)
+        assert _absorbed(glob_mp) == [("trainer-0", v, 0) for v in range(3)]
+        assert glob_in._version == glob_mp.version == 3
+        # the last version handed to the surviving trainer is 2: the server
+        # reaches its target (v3) absorbing that upload and stops handing out
+        assert glob_in._version_vector["trainer-0"] == 2
+        assert glob_mp.version_vector["trainer-0"] == 2
+        assert res_in.dropped == res_mp.dropped == {"trainer-1": 0.5}
+        assert res_in.events == res_mp.events
+        assert res_in.channel_bytes == res_mp.channel_bytes
+        w_in = np.asarray(res_in.global_weights()["w"])
+        w_mp = np.asarray(res_mp.global_weights()["w"])
+        assert w_in.tobytes() == w_mp.tobytes()
+        # training actually happened
+        assert not np.array_equal(w_mp, W0["w"])
+
+
+class TestDropoutRejoinOverMultiproc:
+    def test_rejoin_respawns_worker_and_matches_inproc(self):
+        """Dropout + re-join over real processes: the worker is hard-killed
+        (its process exits on the hub-enforced dropout) and re-joined via a
+        respawn; it misses the round it died in and participates in the
+        next, exactly like the threaded runtime."""
+        pol = RuntimePolicy(
+            mode="deadline", deadline=10.0, grace=4.0,
+            dropouts={"trainer-2": 0.5}, rejoins={"trainer-2": 1.5},
+        )
+        per_worker = {f"trainer-{i}": {"compute_time": 1.0} for i in range(3)}
+        kw = dict(policy=pol, per_worker_hyperparams=per_worker)
+        res_in = run_job(_classical_job(rounds=2), timeout=60, **kw)
+        assert not res_in.errors, res_in.errors
+        res_mp = run_job_multiproc(_classical_job(rounds=2), timeout=120, **kw)
+        assert not res_mp.errors, res_mp.errors
+
+        assert _participation(res_in) == _participation(res_mp)
+        part = _participation(res_mp)
+        # the dropped worker misses round 0 and re-joins for round 1
+        assert part[0]["missing"] == ["trainer-2"]
+        assert "trainer-2" in part[1]["included"]
+        assert res_in.dropped == res_mp.dropped == {"trainer-2": 0.5}
+        assert (1.5, "rejoin", "trainer-2") in res_mp.events
+        assert res_in.events == res_mp.events
+
+
+class TestMgmtPlaneDeployment:
+    def test_job_picks_multiproc_deployment(self):
+        """The control plane routes a job onto the process-tree deployment
+        by name — same submit/start/wait surface as the threaded one."""
+        from repro.core.registry import ComputeSpec
+        from repro.mgmt.plane import APIServer, InprocDeployer, JobState
+
+        api = APIServer()
+        api.register_compute(InprocDeployer(ComputeSpec("c0", realm="default")))
+        datasets = tuple(
+            DatasetSpec(name=f"d{i}", realm="default") for i in range(2)
+        )
+        for d in datasets:
+            api.register_dataset(d)
+        job_id = api.create_job(
+            JobSpec(
+                tag=classical_fl(
+                    trainer_program="repro.transport.conformance.SeededSGDTrainer"
+                ),
+                datasets=datasets,
+                hyperparams={"rounds": 2, "init_weights": W0},
+            ),
+            deployment="multiproc",
+            policy=RuntimePolicy(mode="async", buffer_size=1, grace=3.0),
+            run_timeout=120.0,
+        )
+        api.start_job(job_id)
+        state = api.wait_job(job_id, timeout=120)
+        assert state == JobState.COMPLETED
+        rec = api.job(job_id)
+        assert rec.result is not None and not rec.result.errors
+        glob = rec.result.program("global-aggregator-0")
+        assert glob.version == 2  # async server reached its update target
+        assert not np.array_equal(
+            np.asarray(rec.result.global_weights()["w"]), W0["w"]
+        )
+
+
+class TestOrphanCascadeOverMultiproc:
+    def test_intermediate_dropout_surfaces_same_orphans_as_inproc(self):
+        """Dropout-without-rejoin of an H-FL intermediate aggregator over
+        real processes: its children are poisoned hub-side and surface in
+        ``JobResult.dropped``/``orphaned`` events exactly like the threaded
+        runtime — never silently hung."""
+        tag = hierarchical_fl(
+            groups=("west", "east"),
+            dataset_groups={"west": ("d0", "d1"), "east": ("d2", "d3")},
+            trainer_program="repro.transport.conformance.SeededSGDTrainer",
+        )
+        job = JobSpec(
+            tag=tag,
+            datasets=tuple(DatasetSpec(name=f"d{i}") for i in range(4)),
+            hyperparams={"rounds": 3, "init_weights": W0},
+        )
+        pol = RuntimePolicy(
+            mode="async", tiers={"aggregator": "async"},
+            grace=3.0, buffer_size=2,
+            dropouts={"aggregator-0": 0.5},
+        )
+        per_worker = {f"trainer-{i}": {"compute_time": 1.0} for i in range(4)}
+        kw = dict(policy=pol, per_worker_hyperparams=per_worker)
+        res_in = run_job(job, timeout=60, **kw)
+        assert not res_in.errors, res_in.errors
+        res_mp = run_job_multiproc(job, timeout=120, **kw)
+        assert not res_mp.errors, res_mp.errors
+
+        assert res_in.dropped == res_mp.dropped
+        assert res_mp.dropped.get("aggregator-0") == 0.5
+        orphans_in = {w for _, kind, w in res_in.events if kind == "orphaned"}
+        orphans_mp = {w for _, kind, w in res_mp.events if kind == "orphaned"}
+        assert orphans_in == orphans_mp and len(orphans_mp) == 2
+        # every orphan is also in the dropped ledger, at the cascade time
+        for w in orphans_mp:
+            assert res_mp.dropped[w] == 0.5
+        # the surviving subtree still progressed the global model
+        assert not np.array_equal(
+            np.asarray(res_mp.global_weights()["w"]), W0["w"]
+        )

@@ -115,6 +115,106 @@ class TestWireFormat:
         np.testing.assert_array_equal(payload["w"], np.ones(2, np.float32))
 
 
+class TestWireCodec:
+    def test_int8_codec_roundtrip_and_ratio(self):
+        from repro.transport.wire import (
+            codec_ratio,
+            decode_payload,
+            encode_payload,
+        )
+
+        rng = np.random.default_rng(0)
+        payload = {
+            "weights": {"w": rng.normal(size=(64, 32)).astype(np.float32)},
+            "num_samples": 5,
+            "version": 2,
+        }
+        coded = encode_payload(payload, "int8")
+        back = decode_payload(coded)
+        assert back["num_samples"] == 5 and back["version"] == 2
+        w = np.asarray(back["weights"]["w"])
+        assert w.dtype == np.float32
+        # lossy but tight: symmetric int8 per-tensor quantization error
+        absmax = np.abs(payload["weights"]["w"]).max()
+        np.testing.assert_allclose(
+            w, payload["weights"]["w"], atol=absmax / 127.0 + 1e-7
+        )
+        # the wire actually shrank (~4x fewer bytes for the float leaves)
+        assert codec_ratio(payload, "int8") < 0.35
+        # plain payloads pass decode_payload untouched
+        assert decode_payload(payload) is payload
+
+    def test_unknown_codec_rejected(self):
+        from repro.transport.wire import WireError, encode_payload
+
+        with pytest.raises(WireError):
+            encode_payload({"w": np.ones(3, np.float32)}, "zip9")
+
+    def test_codec_channel_over_multiproc_loopback(self):
+        """Channel(codec="int8") compresses payloads across the real socket
+        boundary; the receiving end sees dequantized float32 leaves."""
+        from repro.core.channels import ChannelManager
+        from repro.core.tag import Channel as ChannelSpec
+
+        mgr = ChannelManager(
+            [ChannelSpec(
+                name="ch", pair=("a", "b"), backend="multiproc", codec="int8"
+            )]
+        )
+        try:
+            ea = mgr.end("ch", "default", "a-0")
+            eb = mgr.end("ch", "default", "b-0")
+            w = np.linspace(-1.0, 1.0, 128, dtype=np.float32)
+            ea.send("b-0", {"weights": {"w": w}, "num_samples": 3})
+            got = eb.recv("a-0")
+            assert got["num_samples"] == 3
+            got_w = np.asarray(got["weights"]["w"])
+            assert got_w.dtype == np.float32
+            np.testing.assert_allclose(got_w, w, atol=1.0 / 127.0 + 1e-7)
+        finally:
+            mgr.close()
+
+
+class TestTransientFaultRetry:
+    def test_call_reconnects_once_on_broken_pipe(self):
+        """A broken client socket (reset/closed peer) is retried exactly once
+        with a fresh connection before surfacing."""
+        import socket as socket_mod
+
+        with TransportHub(wall_clock=False) as hub:
+            client = MultiprocBackend(hub.address)
+            try:
+                client.join("ch", "g", "a-0")
+                assert client.peers("ch", "g", "b-0") == ["a-0"]
+                # sabotage this thread's connection: swap in a socketpair
+                # whose far end is closed — the next send raises
+                # BrokenPipeError / ConnectionResetError
+                near, far = socket_mod.socketpair()
+                far.close()
+                client._local.sock = near
+                # the retry reconnects to the hub and the op succeeds, with
+                # the hub state intact (same join is still visible)
+                assert client.peers("ch", "g", "b-0") == ["a-0"]
+            finally:
+                client.close()
+
+    def test_second_fault_surfaces(self):
+        import socket as socket_mod
+
+        with TransportHub(wall_clock=False) as hub:
+            client = MultiprocBackend(hub.address)
+            try:
+                client.join("ch", "g", "a-0")
+                hub.close()  # the reconnect target is gone
+                near, far = socket_mod.socketpair()
+                far.close()
+                client._local.sock = near
+                with pytest.raises(OSError):
+                    client.peers("ch", "g", "b-0")
+            finally:
+                client.close()
+
+
 class TestLoopbackChannelSelection:
     def test_channel_spec_can_select_multiproc_backend(self):
         """Per-channel backend choice (§6.2) reaches across a real socket."""
