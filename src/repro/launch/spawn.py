@@ -683,7 +683,7 @@ class _ProcessSupervisor:
         if self._pump_thread is not None:
             self._pump_thread.join(timeout=5.0)
         procs = list(self.procs.values())
-        for proc, _event in self.standbys.values():
+        for proc, _event, _ack in self.standbys.values():
             # an unused standby is parked on its re-join event and must NOT
             # be woken (it would join a finished job) — terminate it outright
             if proc.is_alive():

@@ -52,6 +52,24 @@ from repro.transport.wire import (
 __all__ = ["TransportHub", "MultiprocBackend"]
 
 
+# Ops safe to replay after an ambiguous connection fault: read-only queries,
+# plus absolute-state writes (set-to-a-value, membership add/remove) whose
+# double-apply is a no-op on the hub. Deliberately excluded are the ops whose
+# replay compounds state — ``send`` would duplicate a message, ``advance``
+# would double-step a clock, and the ``recv*`` family consumes from a
+# mailbox — any of which silently corrupts seeded-equivalence results.
+_IDEMPOTENT_OPS = frozenset({
+    # read-only
+    "ping", "stats", "peers", "peek", "earliest", "link", "now",
+    "drop_time", "check_poison",
+    # membership (hub add/remove are presence-checked)
+    "join", "leave",
+    # absolute-state writes
+    "set_drop", "clear_drop", "poison", "set_link", "set_wire_dtype",
+    "set_clock",
+})
+
+
 # ------------------------------------------------------------------ #
 # error marshalling: exceptions cross the wire as (kind, args) tuples
 # ------------------------------------------------------------------ #
@@ -256,14 +274,16 @@ class MultiprocBackend:
     def _call(self, op: str, *args: Any) -> Any:
         """One RPC to the hub, with a single reconnect-with-backoff retry on
         a transient connection fault (``ConnectionResetError`` /
-        ``BrokenPipeError``) before the error surfaces. Note the retry is
-        at-most-once-ambiguous for non-idempotent ops: a fault racing the
-        hub's dispatch may have applied the op already — acceptable for this
-        first slice of the multi-host reconnect story, where the fault model
-        is a broker restart between operations."""
+        ``BrokenPipeError``) before the error surfaces. The retry is limited
+        to ``_IDEMPOTENT_OPS``: a fault racing the hub's dispatch may have
+        applied the op already, and replaying e.g. ``send`` or ``advance``
+        would double-apply it (duplicate message, double clock step) —
+        those ops surface the fault to the caller instead."""
         try:
             return self._call_once(op, *args)
         except (ConnectionResetError, BrokenPipeError):
+            if op not in _IDEMPOTENT_OPS:
+                raise
             time.sleep(self.RETRY_BACKOFF)
             return self._call_once(op, *args)
 

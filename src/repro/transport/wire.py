@@ -277,6 +277,10 @@ def decode_message(buf: bytes) -> Tuple[str, Any, int, float]:
 
 _CODEC_ENVELOPE = "__wire_codec__"
 _Q8, _S8 = "__q8__", "__s8__"
+_Q8_ESC = "__q8_escape__"
+# key sets _int8_decode treats specially — user dicts with exactly these
+# shapes must be escaped on encode or they would be silently mis-decoded
+_Q8_SENTINELS = ({_Q8, _S8}, {_Q8_ESC})
 _FLOAT_KINDS = ("f",)
 
 
@@ -287,7 +291,12 @@ def _int8_encode(payload: Any) -> Any:
 
     def walk(node: Any) -> Any:
         if isinstance(node, dict):
-            return {k: walk(v) for k, v in node.items()}
+            coded = {k: walk(v) for k, v in node.items()}
+            if set(node) in _Q8_SENTINELS:
+                # a user dict mimicking the quantization sentinel (or this
+                # escape) would be mis-decoded — wrap so decode restores it
+                return {_Q8_ESC: coded}
+            return coded
         if isinstance(node, list):
             return [walk(v) for v in node]
         if isinstance(node, tuple):
@@ -306,6 +315,9 @@ def _int8_encode(payload: Any) -> Any:
 def _int8_decode(payload: Any) -> Any:
     def walk(node: Any) -> Any:
         if isinstance(node, dict):
+            if set(node) == {_Q8_ESC}:
+                # escaped user dict: restore its shape, walk only its values
+                return {k: walk(v) for k, v in node[_Q8_ESC].items()}
             if set(node) == {_Q8, _S8}:
                 return np.asarray(node[_Q8], np.float32) * np.float32(node[_S8])
             return {k: walk(v) for k, v in node.items()}
@@ -331,18 +343,40 @@ def _codec(name: str):
     return WIRE_CODECS[name]
 
 
+_ENVELOPE_KEYS = frozenset({_CODEC_ENVELOPE, "payload"})
+
+
 def encode_payload(payload: Any, codec: str) -> Any:
-    """Apply ``codec`` to a channel payload; empty codec is the identity."""
+    """Apply ``codec`` to a channel payload; empty codec is the identity.
+
+    A plain payload dict that happens to contain the envelope marker key is
+    escaped into an identity envelope (``codec=""``), so ``decode_payload``
+    can never misread user data as a codec envelope — every payload
+    round-trips losslessly whether or not a codec is configured."""
     if not codec:
+        if isinstance(payload, dict) and _CODEC_ENVELOPE in payload:
+            return {_CODEC_ENVELOPE: "", "payload": payload}
         return payload
     enc, _ = _codec(codec)
     return {_CODEC_ENVELOPE: codec, "payload": enc(payload)}
 
 
 def decode_payload(payload: Any) -> Any:
-    """Reverse :func:`encode_payload`; plain payloads pass through."""
-    if isinstance(payload, dict) and _CODEC_ENVELOPE in payload:
-        _, dec = _codec(payload[_CODEC_ENVELOPE])
+    """Reverse :func:`encode_payload`; plain payloads pass through.
+
+    Only a dict with *exactly* the envelope shape (the two envelope keys and
+    a string codec name) is treated as an envelope; anything else — including
+    user dicts merely containing the marker key, which ``encode_payload``
+    escapes on the way in — passes through untouched."""
+    if (
+        isinstance(payload, dict)
+        and set(payload) == _ENVELOPE_KEYS
+        and isinstance(payload[_CODEC_ENVELOPE], str)
+    ):
+        codec = payload[_CODEC_ENVELOPE]
+        if not codec:  # identity envelope: an escaped colliding payload
+            return payload["payload"]
+        _, dec = _codec(codec)
         return dec(payload["payload"])
     return payload
 

@@ -5,12 +5,18 @@
 * Installs a deterministic fallback for ``hypothesis`` when the real package
   is unavailable (the property tests then run a fixed example sweep rather
   than failing at collection).
+* Provides the ``assert_children_reaped`` fixture the multiproc suites use
+  to assert a spawned process tree was fully reclaimed.
 """
 from __future__ import annotations
 
+import multiprocessing
 import os
 import sys
+import time
 import types
+
+import pytest
 
 _SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
 if os.path.isdir(_SRC) and _SRC not in sys.path:
@@ -31,3 +37,17 @@ except ImportError:
     shim.__stub__ = True
     sys.modules["hypothesis"] = shim
     sys.modules["hypothesis.strategies"] = _stub.strategies  # type: ignore[assignment]
+
+
+@pytest.fixture
+def assert_children_reaped():
+    """Assert no child process outlives the test: poll ``active_children``
+    (which also joins finished children) up to ``timeout`` real seconds."""
+
+    def _check(timeout: float = 10.0) -> None:
+        deadline = time.monotonic() + timeout
+        while multiprocessing.active_children() and time.monotonic() < deadline:
+            time.sleep(0.1)
+        assert multiprocessing.active_children() == []
+
+    return _check

@@ -4,7 +4,6 @@ Marked ``multiproc``: CI runs these in a dedicated job with a hard timeout so
 a hung child process can never wedge the main suite. All program classes are
 module-level — spawned workers re-import them by qualified name.
 """
-import multiprocessing
 import os
 import time
 
@@ -164,7 +163,9 @@ class TestFailureHandling:
                 policy=RuntimePolicy(mode="async", tiers={"nope": "async"}),
             )
 
-    def test_hard_crash_without_report_tears_tree_down(self):
+    def test_hard_crash_without_report_tears_tree_down(
+        self, assert_children_reaped
+    ):
         """Fast-fail hardening: a worker process dying pre-barrier without
         marshalling anything (os._exit skips the error reporting) must tear
         the whole process tree down promptly — no zombie children, no
@@ -182,7 +183,4 @@ class TestFailureHandling:
         # the healthy peers were reclaimed, not left to time out
         assert "global-aggregator-0" in res.errors
         # no zombie children: the driver reaped the whole tree
-        deadline = time.monotonic() + 10.0
-        while multiprocessing.active_children() and time.monotonic() < deadline:
-            time.sleep(0.1)
-        assert multiprocessing.active_children() == []
+        assert_children_reaped()

@@ -160,6 +160,31 @@ class TestDropoutRejoinOverMultiproc:
         assert res_in.events == res_mp.events
 
 
+class TestUnusedRejoinStandby:
+    def test_unfired_dropout_reclaims_standby_at_teardown(
+        self, assert_children_reaped
+    ):
+        """A re-join standby whose dropout never fires (scheduled far past
+        job completion) is pre-warmed but never signalled. Teardown must
+        terminate and reap it — clean JobResult, full participation, and no
+        surviving children — instead of choking on the standby table."""
+        pol = RuntimePolicy(
+            mode="deadline", deadline=10.0, grace=4.0,
+            dropouts={"trainer-1": 900.0}, rejoins={"trainer-1": 901.0},
+        )
+        per_worker = {f"trainer-{i}": {"compute_time": 1.0} for i in range(3)}
+        res_mp = run_job_multiproc(
+            _classical_job(rounds=1), timeout=120,
+            policy=pol, per_worker_hyperparams=per_worker,
+        )
+        assert not res_mp.errors, res_mp.errors
+        assert res_mp.dropped == {}
+        part = _participation(res_mp)
+        assert part[0]["included"] == ["trainer-0", "trainer-1", "trainer-2"]
+        # the pre-warmed standby was terminated and reaped, not leaked
+        assert_children_reaped()
+
+
 class TestMgmtPlaneDeployment:
     def test_job_picks_multiproc_deployment(self):
         """The control plane routes a job onto the process-tree deployment

@@ -150,6 +150,52 @@ class TestWireCodec:
         with pytest.raises(WireError):
             encode_payload({"w": np.ones(3, np.float32)}, "zip9")
 
+    def test_quant_sentinel_collision_survives_int8_codec(self):
+        """User dicts mimicking the int8 codec's internal {__q8__,__s8__}
+        sentinel (or its escape marker) round-trip through a coded channel
+        unchanged instead of being silently dequantized."""
+        from repro.transport.wire import decode_payload, encode_payload
+
+        q = np.arange(4, dtype=np.int8)
+        mimic = {"__q8__": q, "__s8__": 0.5}
+        back = decode_payload(encode_payload({"blob": mimic, "n": 1}, "int8"))
+        assert back["n"] == 1 and set(back["blob"]) == {"__q8__", "__s8__"}
+        np.testing.assert_array_equal(back["blob"]["__q8__"], q)
+        assert back["blob"]["__s8__"] == 0.5
+        esc = {"__q8_escape__": {"x": 1}}
+        assert decode_payload(encode_payload(esc, "int8")) == esc
+
+    def test_marker_key_payload_roundtrips_uncoded(self):
+        """A user payload dict that happens to contain the envelope marker
+        key is escaped on encode and restored verbatim on decode — never
+        misread as a codec envelope, even on channels with no codec."""
+        from repro.transport.wire import decode_payload, encode_payload
+
+        tricky = {"__wire_codec__": "int8", "payload": {"x": 1}}
+        assert decode_payload(encode_payload(tricky, "")) == tricky
+        bogus = {"__wire_codec__": "zip9", "payload": None}
+        assert decode_payload(encode_payload(bogus, "")) == bogus
+        partial = {"__wire_codec__": "int8", "extra": 2}
+        assert decode_payload(encode_payload(partial, "")) == partial
+
+    def test_marker_key_payload_crosses_socket_unharmed(self):
+        """Same collision over a real codec-less multiproc channel: the
+        receiver gets the user dict back byte-for-byte, not a mis-decode."""
+        from repro.core.channels import ChannelManager
+        from repro.core.tag import Channel as ChannelSpec
+
+        mgr = ChannelManager(
+            [ChannelSpec(name="ch", pair=("a", "b"), backend="multiproc")]
+        )
+        try:
+            ea = mgr.end("ch", "default", "a-0")
+            eb = mgr.end("ch", "default", "b-0")
+            tricky = {"__wire_codec__": "int8", "payload": {"x": 1}}
+            ea.send("b-0", tricky)
+            assert eb.recv("a-0") == tricky
+        finally:
+            mgr.close()
+
     def test_codec_channel_over_multiproc_loopback(self):
         """Channel(codec="int8") compresses payloads across the real socket
         boundary; the receiving end sees dequantized float32 leaves."""
@@ -195,6 +241,29 @@ class TestTransientFaultRetry:
                 # the retry reconnects to the hub and the op succeeds, with
                 # the hub state intact (same join is still visible)
                 assert client.peers("ch", "g", "b-0") == ["a-0"]
+            finally:
+                client.close()
+
+    def test_non_idempotent_op_not_retried(self):
+        """Replaying ``send``/``advance`` after an ambiguous fault could
+        double-apply them hub-side (duplicate message, double clock step) —
+        the fault must surface to the caller even though the hub is still
+        up, while the connection recovers for subsequent idempotent ops."""
+        import socket as socket_mod
+
+        with TransportHub(wall_clock=False) as hub:
+            client = MultiprocBackend(hub.address)
+            try:
+                client.join("ch", "g", "a-0")
+                client.join("ch", "g", "b-0")
+                near, far = socket_mod.socketpair()
+                far.close()
+                client._local.sock = near
+                with pytest.raises((ConnectionResetError, BrokenPipeError)):
+                    client.send("ch", "g", "a-0", "b-0", {"x": 1})
+                # no duplicate landed hub-side, and the client reconnected
+                assert client.peers("ch", "g", "a-0") == ["b-0"]
+                assert hub.backend.peek("ch", "g", "b-0", "a-0") is None
             finally:
                 client.close()
 
