@@ -67,29 +67,32 @@ def run(smoke: bool = False) -> List[Dict[str, object]]:
                 f"{label:>10} {backend:>10} {secs * 1e3:>10.3f}ms "
                 f"{nbytes / secs / 1e6:>12.1f}MB/s"
             )
-    # opt-in per-channel wire codec on the socket transport: round-trip cost
-    # of quantize+dequantize vs the achieved wire-bytes ratio
-    from repro.transport.wire import codec_ratio
+    # opt-in per-channel wire codecs on the socket transport: round-trip
+    # cost of encode+decode vs the achieved wire-bytes ratio, per codec
+    from repro.transport.wire import codec_ratio, registered_codecs
 
-    print(f"{'payload':>10} {'codec':>10} {'roundtrip':>12} {'wire ratio':>12}")
+    print(f"{'payload':>10} {'codec':>12} {'roundtrip':>12} {'wire ratio':>12}")
     for label, n in sizes.items():
         payload = {
             "w": np.random.default_rng(0).normal(size=n).astype(np.float32)
         }
-        ratio = codec_ratio(payload, "int8")
-        secs = _roundtrip_secs("multiproc", n, iters, codec="int8")
-        rows.append(
-            result_meta(
-                backend="multiproc",
-                payload=label,
-                payload_bytes=n * 4,
-                codec="int8",
-                roundtrip_ms=secs * 1e3,
-                wire_ratio=ratio,
+        for codec in registered_codecs():
+            ratio = codec_ratio(payload, codec)
+            secs = _roundtrip_secs("multiproc", n, iters, codec=codec)
+            rows.append(
+                result_meta(
+                    backend="multiproc",
+                    payload=label,
+                    payload_bytes=n * 4,
+                    codec=codec,
+                    roundtrip_ms=secs * 1e3,
+                    wire_ratio=ratio,
+                )
             )
-        )
-        print(f"{label:>10} {'int8':>10} {secs * 1e3:>10.3f}ms {ratio:>12.3f}")
-        assert ratio < 0.5, "int8 codec failed to shrink the wire"
+            print(
+                f"{label:>10} {codec:>12} {secs * 1e3:>10.3f}ms {ratio:>12.3f}"
+            )
+            assert ratio < 0.5, f"{codec} codec failed to shrink the wire"
 
     # sanity: the loopback moved real bytes for every size
     assert all(r["roundtrip_ms"] > 0 for r in rows)

@@ -59,6 +59,13 @@ def main(argv=None):
         results["transport"] = bench_transport.run(smoke=True)
 
         print("=" * 72)
+        print("Smoke — wire codecs: encode/decode throughput + ratio")
+        print("=" * 72)
+        from benchmarks import bench_codec
+
+        results["codec"] = bench_codec.run(smoke=True)
+
+        print("=" * 72)
         print("Smoke — process-tree launcher: job wall-clock vs worker count")
         print("=" * 72)
         from benchmarks import bench_spawn
@@ -120,6 +127,13 @@ def main(argv=None):
     from benchmarks import bench_transport
 
     results["transport"] = bench_transport.run()
+
+    print("=" * 72)
+    print("Wire codecs — encode/decode throughput + achieved ratio")
+    print("=" * 72)
+    from benchmarks import bench_codec
+
+    results["codec"] = bench_codec.run()
 
     print("=" * 72)
     print("Spawn — process-tree job wall-clock vs worker count")

@@ -54,7 +54,13 @@ _WIRE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "int8": 1}
 
 
 def payload_bytes(payload: Any, wire_dtype: str = "f32") -> int:
-    """Bytes of a pytree payload on the wire under ``wire_dtype``."""
+    """Bytes of a pytree payload on the wire under ``wire_dtype``.
+
+    ``wire_dtype`` caps the per-element width: a leaf already narrower than
+    the wire dtype (int8 quantized blocks, int32 top-k indices) is counted
+    at its own element size — a coded payload's accounting reflects the
+    bytes it actually moves instead of inflating every element to the
+    channel's float width."""
     import jax
 
     per = _WIRE_BYTES.get(wire_dtype, 4)
@@ -62,7 +68,8 @@ def payload_bytes(payload: Any, wire_dtype: str = "f32") -> int:
     total = 0
     for leaf in leaves:
         size = np.size(leaf) if hasattr(leaf, "shape") or np.ndim(leaf) else 1
-        total += int(size) * per
+        itemsize = getattr(getattr(leaf, "dtype", None), "itemsize", per)
+        total += int(size) * min(per, int(itemsize))
     return total
 
 
@@ -324,6 +331,10 @@ class InprocBackend:
         self._boxes: Dict[Tuple[str, str, str, str], "queue.Queue[Message]"] = {}
         self._links: Dict[Tuple[str, str], LinkModel] = {}
         self._wire_dtype: Dict[str, str] = {}
+        # channel -> codec object used for *accounting only*: emulated
+        # payloads never leave the process, but a coded channel's transfer
+        # time and byte stats must reflect post-codec wire bytes
+        self._codec_acct: Dict[str, Any] = {}
         # broker contention is per *topic* — one receiver's subscription on a
         # (channel, group): transfers to the same receiver serialize on the
         # broker uplink, distinct topics proceed in parallel (§6.2)
@@ -344,6 +355,21 @@ class InprocBackend:
 
     def set_wire_dtype(self, channel: str, dtype: str) -> None:
         self._wire_dtype[channel] = dtype
+
+    def set_codec(self, channel: str, codec: str) -> None:
+        """Account ``channel``'s emulated wire bytes post-codec.
+
+        Emulation payloads never actually cross a socket, so the codec is
+        never *run* here — but a coded channel's emulated ``transfer_time``
+        and ``stats["bytes:..."]`` must not overstate wire bytes by the
+        compression ratio. The raw size is kept in ``raw_bytes:<channel>``
+        so the achieved ratio is observable per channel."""
+        from repro.transport.wire import make_codec
+
+        if codec:
+            self._codec_acct[channel] = make_codec(codec)
+        else:
+            self._codec_acct.pop(channel, None)
 
     def link(self, channel: str, worker: str) -> LinkModel:
         return self._links.get((channel, worker), LinkModel())
@@ -420,7 +446,14 @@ class InprocBackend:
 
     def send(self, channel: str, group: str, src: str, dst: str, payload: Any) -> None:
         wire = self._wire_dtype.get(channel, "f32")
-        nbytes = payload_bytes(payload, wire)
+        codec = self._codec_acct.get(channel)
+        raw_bytes = payload_bytes(payload, wire)
+        if codec is None:
+            nbytes = raw_bytes
+        else:
+            # post-codec accounting: the emulated transfer moves what the
+            # codec would put on a real wire, not the raw float payload
+            nbytes = codec.wire_bytes(payload, wire)
         sender_link = self.link(channel, src)
         dur = sender_link.transfer_time(nbytes)
         topic = (channel, group, dst)
@@ -447,6 +480,8 @@ class InprocBackend:
             self._clock[src] = arrival
             self.stats[f"bytes:{channel}"] += nbytes
             self.stats[f"msgs:{channel}"] += 1
+            if codec is not None:
+                self.stats[f"raw_bytes:{channel}"] += raw_bytes
             self._box(channel, group, dst, src).put(
                 Message(src, payload, nbytes, arrival)
             )
@@ -718,10 +753,10 @@ class ChannelManager:
                     )
                 backend = _BACKEND_FACTORIES[c.backend]()
             backend.set_wire_dtype(c.name, c.wire_dtype)
-            # opt-in wire codec: only socket-backed transports implement it
-            # (emulation payloads never leave the process — their accounting
-            # knob is wire_dtype); the op is deliberately outside the
-            # TransportBackend protocol
+            # opt-in wire codec: socket-backed transports actually run it on
+            # the send path; emulation backends use it for post-codec byte
+            # accounting only (their payloads never leave the process). The
+            # op is deliberately outside the TransportBackend protocol.
             codec = getattr(c, "codec", "")
             set_codec = getattr(backend, "set_codec", None)
             if codec and set_codec is not None:
@@ -752,6 +787,28 @@ class ChannelManager:
 
     def total_bytes(self, channel: str) -> float:
         return self._backends[channel].stats.get(f"bytes:{channel}", 0.0)
+
+    def channel_stats(self, channel: str) -> Dict[str, float]:
+        """Per-channel wire accounting: moved bytes/messages plus — on coded
+        channels — the raw (pre-codec) bytes and the achieved compression
+        ratio. Emu backends report emulated post-codec bytes; the multiproc
+        client reports the measured sizes of the real coded frames."""
+        stats = self._backends[channel].stats
+        out: Dict[str, float] = {
+            "bytes": float(stats.get(f"bytes:{channel}", 0.0)),
+            "msgs": float(stats.get(f"msgs:{channel}", 0.0)),
+        }
+        raw = stats.get(f"raw_bytes:{channel}")
+        if raw:
+            coded = stats.get(f"coded_bytes:{channel}", out["bytes"])
+            out["raw_bytes"] = float(raw)
+            out["codec_ratio"] = float(coded) / float(raw)
+        return out
+
+    def codec_ratio(self, channel: str) -> Optional[float]:
+        """Achieved wire-compression ratio on ``channel`` (coded / raw
+        bytes), or ``None`` when no coded traffic has been observed."""
+        return self.channel_stats(channel).get("codec_ratio")
 
     def close(self) -> None:
         """Release transports that hold OS resources (idempotent).

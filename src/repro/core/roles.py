@@ -112,24 +112,79 @@ def await_peer(ctx: "RoleContext", end: "ChannelEnd", timeout: float = 5.0) -> s
         time.sleep(0.01)
 
 
+# payloads at least this many elements take the fused Pallas reduction in
+# weighted_mean; below it the per-client numpy loop wins on dispatch
+# overhead. Both paths produce bit-identical results (the kernel's exact
+# mode reproduces sequential IEEE accumulation), so the threshold is purely
+# a performance knob — it can never change a job's numerics.
+FUSED_AGG_MIN_ELEMS = 16_384
+
+
+def _fused_weighted_mean(
+    updates: Sequence[Tuple[Any, float]], total: float
+) -> Optional[Any]:
+    """One stacked ``repro.kernels.agg.aggregate_tree`` call over all client
+    trees (exact mode: bit-identical to the sequential fold). Returns None
+    when the updates aren't uniform float32 trees (structure, shapes and
+    dtypes all match) — the caller falls back to the sequential path."""
+    import jax
+
+    from repro.kernels.agg.ops import aggregate_tree, stack_client_trees
+
+    client_trees = stack_client_trees([w for w, _ in updates])
+    if client_trees is None:
+        return None
+    w = np.asarray([float(n) for _, n in updates], np.float32)
+    agg = aggregate_tree(client_trees, w, denom=total, exact=True)
+    return jax.tree_util.tree_map(np.asarray, agg)
+
+
 def weighted_mean(
-    updates: Sequence[Tuple[Any, float]]
+    updates: Sequence[Tuple[Any, float]],
+    *,
+    fused: Optional[bool] = None,
 ) -> Tuple[Optional[Any], float]:
     """Sample-weighted mean of client model pytrees.
 
     Returns ``(mean_tree, total_samples)``; ``(None, 0.0)`` when no update
     carries positive weight. Shared by every aggregator-style role so the
     accumulate/normalize logic exists exactly once.
+
+    Large float32 payloads are reduced by one stacked Pallas kernel call
+    (``repro.kernels.agg``) instead of a per-client Python ``tree_map``
+    loop; the kernel's exact mode folds in the callers' client order, so
+    fused and sequential results are bit-identical and ``fused`` (None =
+    auto: fused on accelerators for large payloads, sequential on CPU
+    where the numpy loop is already the fast path) is purely a performance
+    switch — it can never change a job's numerics.
     """
     import jax
 
     total = 0.0
+    for _, n in updates:
+        total += n
+    if not updates or total <= 0:
+        return None, 0.0
+
+    if fused is None:
+        from repro.kernels.agg.ops import fused_dispatch_default
+
+        if fused_dispatch_default() and len(updates) > 1:
+            first = jax.tree_util.tree_leaves(updates[0][0])
+            elems = sum(int(np.size(leaf)) for leaf in first)
+            fused = elems >= FUSED_AGG_MIN_ELEMS
+        else:
+            fused = False
+    if fused:
+        mean = _fused_weighted_mean(updates, total)
+        if mean is not None:
+            return mean, total
+
     acc = None
     for weights, n in updates:
-        total += n
         scaled = jax.tree_util.tree_map(lambda x: np.asarray(x) * n, weights)
         acc = scaled if acc is None else jax.tree_util.tree_map(np.add, acc, scaled)
-    if acc is None or total <= 0:
+    if acc is None:
         return None, 0.0
     return jax.tree_util.tree_map(lambda x: x / total, acc), total
 
@@ -299,7 +354,9 @@ class _AggregatorBase(Role):
             (msg["weights"], float(msg.get("num_samples", 1)))
             for _, msg in arrived
         ]
-        mean, total = weighted_mean(updates)
+        mean, total = weighted_mean(
+            updates, fused=self.config.get("fused_aggregation")
+        )
         if mean is not None:
             self.agg_weights = mean
             self.agg_samples = int(total)

@@ -223,8 +223,15 @@ class _DeadlineBase(_PolicyBase):
         on_time, late, remaining, round_end = self._collect_deadline(
             self._expected, self._version, self._round_start
         )
+        # fold in sorted-src order, not arrival order: virtual-arrival ties
+        # are broken by wall-clock thread timing, so an arrival-order fold
+        # would make seeded deadline rounds drift by an ulp run-to-run
         agg, total = weighted_mean(
-            [(m["weights"], float(m.get("num_samples", 1))) for _, m, _ in on_time]
+            [
+                (m["weights"], float(m.get("num_samples", 1)))
+                for _, m, _ in sorted(on_time, key=lambda a: a[0])
+            ],
+            fused=self.config.get("fused_aggregation"),
         )
         if agg is not None:
             self.agg_weights = agg
@@ -307,6 +314,12 @@ class _BufferedAsyncBase(_PolicyBase):
         # client -> last version handed to it (the downward version vector);
         # bounds snapshot eviction so a slow client's base stays available
         self._version_vector: Dict[str, int] = {}
+        # (delta, staleness) pairs awaiting the next buffer flush: deltas are
+        # absorbed into strategy state in one stacked accumulate_batch call
+        # at flush time (the fused aggregation hot path) instead of one
+        # tree_map pass per arrival — bit-identical, flush-time semantics
+        # unchanged (staleness/base resolution still happens at arrival)
+        self._pending_updates: List[Tuple[Any, int]] = []
         self.staleness_log: List[Dict[str, Any]] = []
 
     def _init_strategy(self) -> None:
@@ -356,19 +369,26 @@ class _BufferedAsyncBase(_PolicyBase):
         for t in [t for t in self._version_vector if t not in members]:
             del self._version_vector[t]
 
+    def _flush_threshold(self) -> int:
+        """Updates per buffer flush (FedBuff's buffer size; 1 for FedAsync)."""
+        return max(1, int(getattr(self._strategy, "buffer_size", 1)))
+
     def _absorb(self, src: str, msg: Any, arrival: float) -> bool:
-        """Staleness-weight one update into the buffer; on a buffer flush,
-        apply it, bump the local version and snapshot. Returns True when a
-        new version was produced."""
+        """Buffer one update; on a full buffer, absorb the whole batch in a
+        single stacked ``accumulate_batch`` (the fused Pallas aggregation
+        path), apply it, bump the local version and snapshot. Returns True
+        when a new version was produced.
+
+        The delta and its staleness are resolved at *arrival* (against the
+        snapshot the sender trained from), exactly as the incremental path
+        did — only the weighted accumulation is deferred to flush time."""
         # an unstamped update (sync-tier sender) counts as fresh, not maximal
         trained_from = int(msg.get("version", self._version))
         base, staleness, clamped = self._snapshots.base_for(
             trained_from, self._version
         )
         delta = _tree_sub(msg["weights"], base)
-        self._strategy_state = self._strategy.accumulate(
-            self._strategy_state, delta, np.int32(staleness)
-        )
+        self._pending_updates.append((delta, int(staleness)))
         entry = {
             "src": src, "staleness": staleness, "version": self._version,
             "arrival": arrival,
@@ -376,6 +396,15 @@ class _BufferedAsyncBase(_PolicyBase):
         if clamped:
             entry["clamped"] = True
         self.staleness_log.append(entry)
+        if len(self._pending_updates) < self._flush_threshold():
+            return False
+        pending, self._pending_updates = self._pending_updates, []
+        self._strategy_state = self._strategy.accumulate_batch(
+            self._strategy_state,
+            [d for d, _ in pending],
+            [s for _, s in pending],
+            fused=self.config.get("fused_aggregation"),
+        )
         if not bool(self._strategy.ready(self._strategy_state)):
             return False
         new_w, self._strategy_state = self._strategy.apply(

@@ -110,7 +110,9 @@ class CoordAggregator(Aggregator):
             (msg["weights"], float(msg.get("num_samples", 1)))
             for _, msg in end.recv_fifo(self.assigned_trainers)
         ]
-        mean, total = weighted_mean(updates)
+        mean, total = weighted_mean(
+            updates, fused=self.config.get("fused_aggregation")
+        )
         if mean is not None:
             self.weights = mean
             self.agg_samples = int(total)
@@ -172,7 +174,9 @@ class CoordGlobalAggregator(GlobalAggregator):
             (msg["weights"], float(msg.get("num_samples", 1)))
             for _, msg in end.recv_fifo(self.active_aggs)
         ]
-        mean, _total = weighted_mean(updates)
+        mean, _total = weighted_mean(
+            updates, fused=self.config.get("fused_aggregation")
+        )
         if mean is not None:
             self.weights = mean
         self.metrics.append(

@@ -54,11 +54,12 @@ class Channel:
               flexibility claim (§6.2).
     wire_dtype: payload dtype on the wire ("bf16", "f32", "int8") — the TPU
               analogue of choosing a cheaper transport for a given channel.
-    codec:    opt-in payload codec for socket-backed transports (e.g.
-              "int8"): ``repro.fl.compression`` plugged into the
-              ``repro.transport.wire`` encode path, shrinking real wire
-              bytes the way ``wire_dtype`` shrinks emulated ones. Empty
-              (default) sends raw payloads; emulation backends ignore it.
+    codec:    opt-in payload codec by registered name ("int8",
+              "int8_blocks", "topk<frac>" — see ``repro.transport.wire``):
+              socket-backed transports run it on the send path, shrinking
+              real wire bytes; emulation backends use it for post-codec
+              byte *accounting* only (their payloads never leave the
+              process). Empty (default) sends raw payloads.
     """
 
     name: str

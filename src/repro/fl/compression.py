@@ -4,6 +4,12 @@ Flame's per-channel ``backend`` attribute picks a transport; on a TPU mesh the
 transport is fixed (ICI/DCN) and the tunable is the *wire representation*.
 These transforms are pure jnp (jit/pjit-safe) so they compose with the
 collective schedule; the Pallas fast path lives in ``repro.kernels.quant``.
+
+The socket-path consumers live in ``repro.transport.wire``: the ``int8``
+codec builds on ``quantize_int8``, the ``topk<frac>`` codec on
+``topk_sparsify``/``topk_densify`` (with per-link error-feedback residuals
+kept by the codec object), and ``int8_blocks`` on the fused
+``repro.kernels.quant`` block path.
 """
 from __future__ import annotations
 

@@ -16,10 +16,11 @@ FedBuff     Nguyen et al. 2022           buffered async aggregation (K of N)
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Tree = Any
 
@@ -183,8 +184,83 @@ class FedDyn(ServerStrategy):
         return 0.5 * self.alpha * sum(jax.tree_util.tree_leaves(sq))
 
 
+def _fused_batch_sum(deltas: Sequence[Tree], weights: List[float]):
+    """``sum_i w_i * delta_i`` over uniform float32 delta trees via one
+    stacked exact-mode ``repro.kernels.agg`` call (scale pass compiled
+    separately from the add-only fold, so the result is bit-identical to the
+    sequential ``a + w*d`` chain). Returns None when the trees aren't
+    structurally eligible (mismatched treedefs, non-f32 leaves, ragged
+    shapes) — callers fall back to the incremental path, which produces the
+    same bits."""
+    from repro.kernels.agg.ops import aggregate_tree, stack_client_trees
+
+    tree = stack_client_trees(list(deltas))
+    if tree is None:
+        return None
+    w = np.asarray(weights, np.float32)
+    summed = aggregate_tree(tree, w, denom=1.0, exact=True)
+    return jax.tree_util.tree_map(np.asarray, summed)
+
+
+class _BufferedBatchMixin:
+    """Fused buffer-flush for the buffered async strategies.
+
+    ``accumulate_batch(state, deltas, staleness)`` absorbs a whole buffer of
+    updates (arrival order) at once: per-update staleness weights are
+    computed with the *same* scalar ops as the incremental ``accumulate``,
+    then the weighted sum runs as one stacked kernel call instead of one
+    Python ``tree_map`` pass per update. Bit-identical to calling
+    ``accumulate`` in a loop — the fused path is a performance switch, not
+    a numerics change.
+    """
+
+    def _update_weight(self, staleness: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def accumulate_batch(
+        self,
+        state: Tree,
+        deltas: Sequence[Tree],
+        staleness: Sequence[int],
+        fused: Any = None,
+    ) -> Tree:
+        if not deltas:
+            return state
+        if fused is None:
+            from repro.core.roles import FUSED_AGG_MIN_ELEMS
+            from repro.kernels.agg.ops import fused_dispatch_default
+
+            elems = sum(
+                int(np.size(leaf))
+                for leaf in jax.tree_util.tree_leaves(deltas[0])
+            )
+            fused = fused_dispatch_default() and elems >= FUSED_AGG_MIN_ELEMS
+        summed = None
+        if fused and int(np.asarray(state["count"])) == 0:
+            ws = [
+                float(np.asarray(self._update_weight(np.int32(s))))
+                for s in staleness
+            ]
+            summed = _fused_batch_sum(deltas, ws)
+        if summed is not None:
+            # add into the (zeros) acc rather than replacing it: the
+            # incremental chain starts with ``0 + w_0*d_0``, which
+            # normalizes -0.0 to +0.0 — this add reproduces that exactly,
+            # keeping batch and incremental bit-identical on signed zeros
+            acc = jax.tree_util.tree_map(
+                lambda a, s: a + s, state["acc"], summed
+            )
+            return {
+                "acc": acc,
+                "count": state["count"] + np.int32(len(deltas)),
+            }
+        for d, s in zip(deltas, staleness):
+            state = self.accumulate(state, d, np.int32(s))
+        return state
+
+
 @dataclasses.dataclass
-class FedBuff(ServerStrategy):
+class FedBuff(_BufferedBatchMixin, ServerStrategy):
     """Buffered asynchronous aggregation: the server applies an update once
     ``buffer_size`` client deltas have arrived (Nguyen et al. 2022). The
     buffering itself happens in the aggregator role / async harness; this
@@ -200,6 +276,9 @@ class FedBuff(ServerStrategy):
 
     def staleness_weight(self, staleness: jax.Array) -> jax.Array:
         return 1.0 / jnp.power(1.0 + staleness.astype(jnp.float32), self.staleness_exp)
+
+    def _update_weight(self, staleness: jax.Array) -> jax.Array:
+        return self.staleness_weight(staleness)
 
     def accumulate(self, state: Tree, delta: Tree, staleness: jax.Array) -> Tree:
         w = self.staleness_weight(staleness)
@@ -219,7 +298,7 @@ class FedBuff(ServerStrategy):
 
 
 @dataclasses.dataclass
-class FedAsync(ServerStrategy):
+class FedAsync(_BufferedBatchMixin, ServerStrategy):
     """FedAsync (Xie et al. 2019): apply every update the moment it arrives,
     mixing it in with a staleness-decayed rate — the ``buffer_size=1`` end of
     the async family. Exposes the same ``accumulate/ready/apply`` surface as
@@ -234,6 +313,9 @@ class FedAsync(ServerStrategy):
 
     def staleness_weight(self, staleness: jax.Array) -> jax.Array:
         return 1.0 / jnp.power(1.0 + staleness.astype(jnp.float32), self.staleness_exp)
+
+    def _update_weight(self, staleness: jax.Array) -> jax.Array:
+        return self.alpha * self.staleness_weight(staleness)
 
     def accumulate(self, state: Tree, delta: Tree, staleness: jax.Array) -> Tree:
         w = self.alpha * self.staleness_weight(staleness)

@@ -1,13 +1,26 @@
-"""Pallas kernel: weighted multi-client model-delta reduction.
+"""Pallas kernels: weighted multi-client model-delta reduction.
 
 The aggregator role's hot loop (FedAvg-style weighted mean over C client
-deltas) is HBM-bandwidth-bound: C·N reads for N writes, zero reuse. The
-kernel tiles the flattened parameter axis into VMEM-sized blocks and keeps
-the weight vector resident, so each delta element is read exactly once —
-the roofline for this op. Weights are normalized on the fly
-(sum w == 0 guarded).
+deltas) is HBM-bandwidth-bound: C·N reads for N writes, zero reuse. Both
+kernels tile the flattened parameter axis into VMEM-sized blocks so each
+delta element is read exactly once — the roofline for this op. Two flavors:
 
-Layout: deltas (C, N) f32/bf16, weights (C,) f32 -> out (N,) f32.
+* ``weighted_aggregate`` — single fused pass: the weight vector stays
+  resident and each block computes ``(w @ d) / denom``. Fastest, but the
+  compiler is free to contract the multiply-add chain into FMAs, so the
+  result can differ from a sequential IEEE mul-then-add accumulation by an
+  ulp or two.
+* ``fold_scaled`` — the order-exact flavor used by the aggregator roles:
+  consumes *pre-scaled* rows (the ``w_c * d_c`` products are materialized by
+  a separately-compiled elementwise pass, see ``ops.aggregate_flat``) and
+  folds them in client order with plain adds. With no multiply adjacent to
+  the adds inside the kernel there is nothing to FMA-contract, so the
+  accumulation is bit-identical to the sequential per-client ``tree_map``
+  loop it replaces — which is what keeps seeded jobs byte-comparable across
+  the fused and fallback paths.
+
+Layout: deltas (C, N) f32/bf16, weights (C,) f32, denom (1,) f32
+-> out (N,) f32.
 """
 from __future__ import annotations
 
@@ -18,32 +31,80 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _agg_kernel(w_ref, d_ref, o_ref, *, n_clients: int):
+def _agg_kernel(w_ref, den_ref, d_ref, o_ref, *, n_clients: int):
     w = w_ref[...].astype(jnp.float32)  # (C,)
-    denom = jnp.maximum(jnp.sum(w), 1e-30)
+    denom = den_ref[0]
     d = d_ref[...].astype(jnp.float32)  # (C, Bn)
     o_ref[...] = (w @ d) / denom  # (Bn,)
+
+
+def _fold_kernel(den_ref, d_ref, o_ref, *, n_clients: int):
+    denom = den_ref[0]
+    d = d_ref[...].astype(jnp.float32)  # (C, Bn) — pre-scaled rows
+
+    def body(c, acc):
+        return acc + d[c, :]
+
+    # init from the first row, not zeros: 0.0 + (-0.0) is +0.0, so a
+    # zeros-seeded fold would flip the sign of all-negative-zero elements
+    # and break bit-identity with the sequential accumulation
+    acc = jax.lax.fori_loop(1, n_clients, body, d[0, :])
+    o_ref[...] = acc / denom
+
+
+def _call(kernel, den, deltas, weights, *, block_n: int, interpret: bool):
+    C, N = deltas.shape
+    in_specs = [pl.BlockSpec((1,), lambda i: (0,))]
+    args = [den]
+    if weights is not None:
+        in_specs.insert(0, pl.BlockSpec((C,), lambda i: (0,)))
+        args.insert(0, weights)
+    in_specs.append(pl.BlockSpec((C, block_n), lambda i: (0, i)))
+    args.append(deltas)
+    return pl.pallas_call(
+        functools.partial(kernel, n_clients=C),
+        grid=(N // block_n,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((N,), jnp.float32),
+        interpret=interpret,
+    )(*args)
 
 
 def weighted_aggregate(
     deltas: jax.Array,  # (C, N)
     weights: jax.Array,  # (C,)
+    denom: jax.Array = None,  # (1,) f32; default: sum(weights)
     *,
     block_n: int = 65_536,
     interpret: bool = False,
 ) -> jax.Array:
+    """Fused single-pass ``(w @ d) / denom`` (FMA-contractable fast path)."""
     C, N = deltas.shape
     block_n = min(block_n, N)
     assert N % block_n == 0, (N, block_n)
-    kernel = functools.partial(_agg_kernel, n_clients=C)
-    return pl.pallas_call(
-        kernel,
-        grid=(N // block_n,),
-        in_specs=[
-            pl.BlockSpec((C,), lambda i: (0,)),
-            pl.BlockSpec((C, block_n), lambda i: (0, i)),
-        ],
-        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((N,), jnp.float32),
-        interpret=interpret,
-    )(weights, deltas)
+    if denom is None:
+        denom = jnp.maximum(
+            jnp.sum(weights.astype(jnp.float32)), 1e-30
+        ).reshape(1)
+    return _call(
+        _agg_kernel, denom, deltas, weights,
+        block_n=block_n, interpret=interpret,
+    )
+
+
+def fold_scaled(
+    scaled: jax.Array,  # (C, N) — already multiplied by per-client weights
+    denom: jax.Array,  # (1,) f32
+    *,
+    block_n: int = 65_536,
+    interpret: bool = False,
+) -> jax.Array:
+    """Order-exact fold: ``(((s_0 + s_1) + ...) + s_{C-1}) / denom``."""
+    C, N = scaled.shape
+    block_n = min(block_n, N)
+    assert N % block_n == 0, (N, block_n)
+    return _call(
+        _fold_kernel, denom, scaled, None,
+        block_n=block_n, interpret=interpret,
+    )

@@ -1,4 +1,12 @@
-"""Public wrapper: int8 channel-payload compression for arbitrary pytrees."""
+"""Public wrapper: int8 channel-payload compression for arbitrary pytrees.
+
+Dispatch: on an accelerator the Pallas kernel runs natively; on CPU the
+wrappers route to the vectorized jnp reference (``ref.py``) — identical
+quantized values, scales within one ulp (asserted by
+``tests/test_kernels.py``) — which is far faster than interpret-mode
+Pallas, whose per-grid-step overhead dominates at hundreds of blocks. Pass
+``interpret=True`` explicitly to exercise the kernel itself on CPU.
+"""
 from __future__ import annotations
 
 import functools
@@ -7,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.quant.kernel import dequantize_blocks, quantize_blocks
+from repro.kernels.quant.ref import reference_dequantize, reference_quantize
 
 BLOCK = 4096
 
@@ -18,11 +27,13 @@ def _on_cpu() -> bool:
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def quantize_flat(x: jax.Array, *, interpret=None):
     """x: flat (N,) -> (q (NB, BLOCK) int8, scale (NB,1), n: original size)."""
-    if interpret is None:
-        interpret = _on_cpu()
     n = x.shape[0]
     pad = (-n) % BLOCK
     xp = jnp.pad(x.astype(jnp.float32), (0, pad)).reshape(-1, BLOCK)
+    if interpret is None:
+        if _on_cpu():
+            return reference_quantize(xp)
+        interpret = False
     q, s = quantize_blocks(xp, interpret=interpret)
     return q, s
 
@@ -30,7 +41,9 @@ def quantize_flat(x: jax.Array, *, interpret=None):
 @functools.partial(jax.jit, static_argnames=("n", "interpret"))
 def dequantize_flat(q: jax.Array, scale: jax.Array, n: int, *, interpret=None):
     if interpret is None:
-        interpret = _on_cpu()
+        if _on_cpu():
+            return reference_dequantize(q, scale).reshape(-1)[:n]
+        interpret = False
     x = dequantize_blocks(q, scale, interpret=interpret).reshape(-1)
     return x[:n]
 

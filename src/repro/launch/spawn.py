@@ -138,6 +138,7 @@ def _worker_entry(
     limbo state (the same ordering the threaded runtime enforces)."""
     worker_id = worker.worker_id
     pol = policy or RuntimePolicy()
+    passed_barrier = False
     try:
         if rejoin_event is not None and not rejoin_event.wait(timeout=barrier_timeout):
             return  # standby never signaled: the worker never re-joined
@@ -161,6 +162,7 @@ def _worker_entry(
         # no worker may see a half-joined group
         if barrier is not None:
             barrier.wait(timeout=barrier_timeout)
+        passed_barrier = True
         try:
             prog.run()
         except WorkerDropped as e:
@@ -186,10 +188,14 @@ def _worker_entry(
             return
         result_q.put((worker_id, "ok", _program_summary(prog)))
     except BaseException as exc:  # noqa: BLE001 - marshalled to the driver
-        # break the start barrier so healthy peers fail fast (as
-        # BrokenBarrierError) instead of waiting out the whole job timeout
-        # for a party that will never arrive; harmless once everyone passed
-        if barrier is not None:
+        # Pre-barrier failure: break the start barrier so healthy peers fail
+        # fast (as BrokenBarrierError) instead of waiting out the whole job
+        # timeout for a party that will never arrive. Post-barrier failures
+        # must NOT abort: every party has already arrived, and an abort can
+        # race peers still *draining* the released barrier — they would wake
+        # to a broken barrier and report BrokenBarrierError in place of
+        # their real error.
+        if barrier is not None and not passed_barrier:
             try:
                 barrier.abort()
             except Exception:

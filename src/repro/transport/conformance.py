@@ -320,6 +320,155 @@ def check_stats_accounting(factory: Factory) -> None:
     assert stats.get(f"msgs:{CH}") == 1.0
 
 
+# ------------------------------------------------------------------ #
+# wire-codec conformance: every registered codec must round-trip these
+# ------------------------------------------------------------------ #
+def _codec_fixtures() -> List[object]:
+    """Nested pytrees a codec must survive: model-update shapes, metadata
+    scalars, empty/odd-sized arrays, deep nesting, and dicts colliding with
+    the codec-envelope marker."""
+    rng = np.random.default_rng(0)
+    return [
+        {
+            "weights": {
+                "w": rng.normal(size=(64, 32)).astype(np.float32),
+                "b": rng.normal(size=(7,)).astype(np.float32),
+            },
+            "num_samples": 5,
+            "version": 2,
+            "done": False,
+            "tags": ["x", "y"],
+        },
+        {
+            "nested": [
+                {"a": rng.normal(size=(5,)).astype(np.float32)},
+                ({"b": rng.normal(size=(3, 3)).astype(np.float32)}, 1),
+            ],
+            "ints": np.arange(6, dtype=np.int64),
+            "none": None,
+        },
+        {"empty": np.zeros((0,), np.float32), "scalar": np.float32(0.5)},
+        {"odd": rng.normal(size=(4097,)).astype(np.float32) * 1e-3},
+        # envelope-marker collision: must never be misread as an envelope
+        {"__wire_codec__": "int8", "payload": {"x": 1}},
+    ]
+
+
+# per-codec internal sentinel shapes: user dicts with exactly these key sets
+# must round-trip byte-exactly through *that* codec (escape machinery).
+# Keys match codecs by name prefix.
+CODEC_SENTINEL_FIXTURES: Dict[str, List[object]] = {
+    "int8_blocks": [
+        {"__qb__": 3},
+        {"__qb_block_escape__": {"y": 2}},
+    ],
+    "int8": [
+        {"__q8__": np.arange(4, dtype=np.int8), "__s8__": 0.5},
+        {"__q8_escape__": {"x": 1}},
+    ],
+    "topk": [
+        {
+            "__tkv__": np.ones(2, np.float32),
+            "__tki__": np.zeros(2, np.int32),
+            "__tks__": (2,),
+            "__tkd__": "<f4",
+        },
+        {"__tk_escape__": {"z": 1}},
+    ],
+}
+
+
+def _float_absmax(tree: object) -> float:
+    """Largest float-leaf magnitude in a pytree (0.0 when no floats)."""
+    import jax
+
+    out = 0.0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if getattr(getattr(leaf, "dtype", None), "kind", "") == "f" and np.size(leaf):
+            out = max(out, float(np.abs(np.asarray(leaf)).max()))
+    return out
+
+
+def _assert_codec_tree(
+    orig: object, back: object, codec: str, global_absmax: float = 0.0
+) -> None:
+    """Structure/dtype/shape preserved; non-float content exact; float
+    leaves within the codec's loss envelope."""
+    if isinstance(orig, dict):
+        assert isinstance(back, dict) and set(back) == set(orig), (codec, orig, back)
+        for k in orig:
+            _assert_codec_tree(orig[k], back[k], codec, global_absmax)
+        return
+    if isinstance(orig, (list, tuple)):
+        assert type(back) is type(orig) and len(back) == len(orig)
+        for a, b in zip(orig, back):
+            _assert_codec_tree(a, b, codec, global_absmax)
+        return
+    if hasattr(orig, "shape") and getattr(getattr(orig, "dtype", None), "kind", "") == "f":
+        got = np.asarray(back)
+        assert got.shape == np.asarray(orig).shape, (codec, got.shape)
+        assert got.dtype == np.asarray(orig).dtype or codec == "int8", (
+            codec, got.dtype,
+        )
+        x = np.asarray(orig)
+        absmax = float(np.abs(x).max()) if x.size else 0.0
+        if codec == "int8":
+            # per-tensor symmetric quantization: one step of the leaf's scale
+            np.testing.assert_allclose(got, x, atol=absmax / 127.0 + 1e-7)
+        elif codec.startswith("int8_blocks"):
+            # blocks span leaf boundaries in the fused flat buffer, so the
+            # bound is one step of the worst block scale — at most the
+            # payload-global absmax
+            np.testing.assert_allclose(
+                got, x, atol=global_absmax / 127.0 + 1e-7
+            )
+        elif codec.startswith("topk"):
+            # sparsified: a subset of the dense magnitudes, rest zero
+            assert float(np.abs(got).max(initial=0.0)) <= absmax + 1e-6
+        else:
+            assert got.tobytes() == x.tobytes()
+        return
+    if hasattr(orig, "shape") or isinstance(orig, np.generic):
+        assert np.asarray(back).tobytes() == np.asarray(orig).tobytes()
+        assert np.asarray(back).dtype == np.asarray(orig).dtype
+        return
+    assert back == orig and type(back) is type(orig), (codec, orig, back)
+
+
+def check_codec_roundtrip(codec_name: str) -> None:
+    """One registered codec over every fixture: encode_payload -> wire
+    encode/decode -> decode_payload must preserve structure and bound the
+    loss; the codec's own sentinel collisions must round-trip exactly."""
+    from repro.transport.wire import (
+        decode,
+        decode_payload,
+        encode,
+        encode_payload,
+        make_codec,
+    )
+
+    codec = make_codec(codec_name)
+    link = ("conf-ch", "default", "a-0", "b-0")
+    for fixture in _codec_fixtures():
+        coded = encode_payload(fixture, codec, link=link)
+        back = decode_payload(decode(encode(coded)))  # across a real buffer
+        _assert_codec_tree(fixture, back, codec_name, _float_absmax(fixture))
+    for prefix, fixtures in CODEC_SENTINEL_FIXTURES.items():
+        if not codec_name.startswith(prefix):
+            continue
+        for sentinel in fixtures:
+            # the escape guarantees *structure*: the colliding dict is never
+            # misdecoded into a quantized/sparse leaf. Float-array members
+            # are still subject to the codec's (lossy) leaf transform, like
+            # any other leaf — checked via the loss envelope.
+            payload = {"blob": sentinel, "n": 1}
+            back = decode_payload(decode(encode(encode_payload(payload, codec, link=link))))
+            assert back["n"] == 1
+            _assert_codec_tree(
+                sentinel, back["blob"], codec_name, _float_absmax(sentinel)
+            )
+
+
 CONFORMANCE_CHECKS: Dict[str, Callable[[Factory], None]] = {
     "protocol_surface": check_protocol_surface,
     "send_recv_roundtrip": check_send_recv_roundtrip,

@@ -42,9 +42,12 @@ from repro.core.channels import (
     register_backend,
 )
 from repro.transport.wire import (
+    WireCodec,
     WireError,
     decode_payload,
     encode_payload,
+    encoded_size,
+    make_codec,
     recv_obj,
     send_obj,
 )
@@ -248,9 +251,16 @@ class MultiprocBackend:
         self.name = name
         self.address = (str(address[0]), int(address[1]))
         self._local = threading.local()
-        # channel -> opt-in payload codec (client-local: the hub stores the
-        # coded payload opaquely; peers decode via the envelope marker)
-        self._codecs: Dict[str, str] = {}
+        # channel -> opt-in payload codec object (client-local: the hub
+        # stores the coded payload opaquely; peers decode via the envelope
+        # marker). Stateful codecs keep per-link error-feedback state inside
+        # the instance, keyed by (channel, group, src, dst).
+        self._codecs: Dict[str, WireCodec] = {}
+        # client-side achieved-compression accounting per coded channel
+        # (the hub only ever sees coded payloads, so the raw size — and the
+        # achieved ratio — can only be measured here)
+        self._codec_stats: Dict[str, float] = {}
+        self._codec_stats_lock = threading.Lock()
         # every socket ever opened, across threads — close() must reach the
         # connections of worker threads that already finished, not just the
         # closing thread's own
@@ -329,7 +339,25 @@ class MultiprocBackend:
 
     # ---------------------------- messaging --------------------------- #
     def send(self, channel: str, group: str, src: str, dst: str, payload: Any) -> None:
-        payload = encode_payload(payload, self._codecs.get(channel, ""))
+        codec = self._codecs.get(channel)
+        if codec is not None:
+            coded = encode_payload(
+                payload, codec, link=(channel, group, src, dst)
+            )
+            # O(structure) counting walks — the achieved ratio lands in
+            # stats without re-serializing either payload
+            with self._codec_stats_lock:
+                self._codec_stats[f"raw_bytes:{channel}"] = (
+                    self._codec_stats.get(f"raw_bytes:{channel}", 0.0)
+                    + encoded_size(payload)
+                )
+                self._codec_stats[f"coded_bytes:{channel}"] = (
+                    self._codec_stats.get(f"coded_bytes:{channel}", 0.0)
+                    + encoded_size(coded)
+                )
+            payload = coded
+        else:
+            payload = encode_payload(payload, "")
         self._call("send", channel, group, src, dst, payload)
 
     def recv(
@@ -406,14 +434,15 @@ class MultiprocBackend:
 
     def set_codec(self, channel: str, codec: str) -> None:
         """Opt this channel into a wire payload codec (``repro.transport
-        .wire.WIRE_CODECS``): the sending client compresses float-array
-        leaves before they cross the socket; receivers decode via the
-        self-describing envelope. Client-local — the hub stores coded
-        payloads opaquely, and its emulated byte accounting still follows
-        the channel's ``wire_dtype`` (set ``wire_dtype="int8"`` alongside
-        ``codec="int8"`` for matching accounting)."""
+        .wire.WIRE_CODECS`` / parametric names like ``"topk0.05"``): the
+        sending client compresses float-array leaves before they cross the
+        socket; receivers decode via the self-describing envelope. The codec
+        is instantiated here, so a stateful codec's per-link state (top-k
+        error feedback) lives client-side with the sender. The hub stores
+        coded payloads opaquely; its byte accounting sees the coded arrays'
+        true element sizes. Resolution fails fast on unknown names."""
         if codec:
-            self._codecs[channel] = str(codec)
+            self._codecs[channel] = make_codec(codec)
         else:
             self._codecs.pop(channel, None)
 
@@ -434,7 +463,10 @@ class MultiprocBackend:
     # ------------------------------ stats ------------------------------ #
     @property
     def stats(self) -> Dict[str, float]:
-        return {str(k): float(v) for k, v in self._call("stats").items()}
+        out = {str(k): float(v) for k, v in self._call("stats").items()}
+        with self._codec_stats_lock:
+            out.update(self._codec_stats)
+        return out
 
 
 def hub_backend_factory(address: Tuple[str, int]) -> Callable[[Any], MultiprocBackend]:

@@ -37,7 +37,7 @@ from __future__ import annotations
 
 import socket
 import struct
-from typing import Any, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -48,9 +48,48 @@ _F64 = struct.Struct(">d")
 
 _I64_MIN, _I64_MAX = -(2**63), 2**63 - 1
 
+# array/bytes bodies at least this large are framed as zero-copy memoryview
+# segments instead of being copied into the frame buffer (send path)
+_VIEW_MIN_BYTES = 4096
+# max buffers per sendmsg call (Linux UIO_MAXIOV is 1024)
+_IOV_MAX = 512
+
 
 class WireError(ValueError):
     """Raised when an object cannot be encoded or a buffer is malformed."""
+
+
+class _SegWriter:
+    """A ``bytearray``-compatible sink that collects *gathered* segments.
+
+    Small tokens accumulate into a growing bytearray; large array/bytes
+    bodies are appended as zero-copy ``memoryview`` segments via
+    :meth:`add_view` (the view keeps the source buffer alive). Joining the
+    segments yields byte-identical output to encoding into one bytearray —
+    the send path just never materializes the join.
+    """
+
+    __slots__ = ("_segs", "_buf")
+
+    def __init__(self) -> None:
+        self._segs: List[Any] = []
+        self._buf = bytearray()
+
+    def __iadd__(self, other: Any) -> "_SegWriter":
+        self._buf += other
+        return self
+
+    def add_view(self, view: memoryview) -> None:
+        if self._buf:
+            self._segs.append(self._buf)
+            self._buf = bytearray()
+        self._segs.append(view)
+
+    def segments(self) -> List[Any]:
+        if self._buf:
+            self._segs.append(self._buf)
+            self._buf = bytearray()
+        return self._segs
 
 
 def _encode_into(obj: Any, out: bytearray) -> None:
@@ -86,7 +125,10 @@ def _encode_into(obj: Any, out: bytearray) -> None:
     elif isinstance(obj, (bytes, bytearray)):
         out += b"B"
         out += _U64.pack(len(obj))
-        out += bytes(obj)
+        if isinstance(out, _SegWriter) and len(obj) >= _VIEW_MIN_BYTES:
+            out.add_view(memoryview(obj))
+        else:
+            out += bytes(obj)
     elif isinstance(obj, list):
         out += b"L"
         out += _U32.pack(len(obj))
@@ -123,9 +165,14 @@ def _encode_array(arr: np.ndarray, out: bytearray) -> None:
     out += _U32.pack(arr.ndim)
     for dim in arr.shape:
         out += _U64.pack(dim)
-    raw = np.ascontiguousarray(arr).tobytes()
-    out += _U64.pack(len(raw))
-    out += raw
+    arr = np.ascontiguousarray(arr)
+    out += _U64.pack(arr.nbytes)
+    if isinstance(out, _SegWriter) and arr.nbytes >= _VIEW_MIN_BYTES:
+        # zero-copy: frame the array's own buffer instead of tobytes()'ing a
+        # multi-MB weight tensor on every send (the view pins the array)
+        out.add_view(memoryview(arr).cast("B"))
+    else:
+        out += arr.tobytes()
 
 
 def encode(obj: Any) -> bytes:
@@ -135,14 +182,59 @@ def encode(obj: Any) -> bytes:
     return bytes(out)
 
 
+def encode_segments(obj: Any) -> List[Any]:
+    """Serialize to a list of gathered buffer segments (zero-copy for large
+    array bodies); ``b"".join(...)`` of the segments equals ``encode(obj)``."""
+    out = _SegWriter()
+    _encode_into(obj, out)
+    return out.segments()
+
+
+def encoded_size(obj: Any) -> int:
+    """Exact ``len(encode(obj))`` computed by a byte-counting walk — no
+    materialized buffer, so measuring a multi-MB payload costs O(structure)."""
+    if obj is None or obj is True or obj is False:
+        return 1
+    if isinstance(obj, np.generic):
+        return 1 + _array_encoded_size(np.asarray(obj))
+    if isinstance(obj, int):
+        return 9 if _I64_MIN <= obj <= _I64_MAX else 5 + len(str(obj))
+    if isinstance(obj, float):
+        return 9
+    if isinstance(obj, str):
+        return 5 + len(obj.encode("utf-8"))
+    if isinstance(obj, (bytes, bytearray)):
+        return 9 + len(obj)
+    if isinstance(obj, (list, tuple)):
+        return 5 + sum(encoded_size(v) for v in obj)
+    if isinstance(obj, dict):
+        return 5 + sum(encoded_size(k) + encoded_size(v) for k, v in obj.items())
+    if hasattr(obj, "__array__") or hasattr(obj, "shape"):
+        return 1 + _array_encoded_size(np.asarray(obj))
+    raise WireError(
+        f"cannot encode {type(obj).__name__!r} on the wire (supported: "
+        "None/bool/int/float/str/bytes/list/tuple/dict/ndarray)"
+    )
+
+
+def _array_encoded_size(arr: np.ndarray) -> int:
+    if arr.dtype == object:
+        raise WireError("cannot encode object-dtype arrays on the wire")
+    return 4 + len(arr.dtype.str) + 4 + 8 * arr.ndim + 8 + arr.nbytes
+
+
 class _Reader:
+    """Zero-copy cursor over a received frame: ``take`` returns memoryview
+    slices of the underlying buffer, so array bodies are never re-copied
+    while being located (the one detach copy happens in ``_decode_array``)."""
+
     __slots__ = ("buf", "pos")
 
-    def __init__(self, buf: bytes) -> None:
+    def __init__(self, buf: memoryview) -> None:
         self.buf = buf
         self.pos = 0
 
-    def take(self, n: int) -> bytes:
+    def take(self, n: int) -> memoryview:
         end = self.pos + n
         if end > len(self.buf):
             raise WireError("truncated wire buffer")
@@ -158,11 +250,12 @@ class _Reader:
 
 
 def _decode_array(r: _Reader) -> np.ndarray:
-    dt = np.dtype(r.take(r.u32()).decode("ascii"))
+    dt = np.dtype(str(r.take(r.u32()), "ascii"))
     ndim = r.u32()
     shape = tuple(r.u64() for _ in range(ndim))
     raw = r.take(r.u64())
-    # .copy() detaches from the frame buffer and makes the array writable
+    # decode as a view of the frame buffer; the single .copy() detaches from
+    # it and makes the array writable
     return np.frombuffer(raw, dtype=dt).reshape(shape).copy()
 
 
@@ -177,13 +270,13 @@ def _decode_from(r: _Reader) -> Any:
     if tag == b"I":
         return _I64.unpack(r.take(8))[0]
     if tag == b"W":
-        return int(r.take(r.u32()).decode("ascii"))
+        return int(str(r.take(r.u32()), "ascii"))
     if tag == b"D":
         return _F64.unpack(r.take(8))[0]
     if tag == b"S":
-        return r.take(r.u32()).decode("utf-8")
+        return str(r.take(r.u32()), "utf-8")
     if tag == b"B":
-        return r.take(r.u64())
+        return bytes(r.take(r.u64()))
     if tag == b"L":
         return [_decode_from(r) for _ in range(r.u32())]
     if tag == b"U":
@@ -202,18 +295,45 @@ def _decode_from(r: _Reader) -> Any:
     raise WireError(f"unknown wire tag {tag!r}")
 
 
-def decode(buf: bytes) -> Any:
-    """Inverse of :func:`encode`."""
-    r = _Reader(buf)
+def decode(buf: Any) -> Any:
+    """Inverse of :func:`encode`. Accepts any bytes-like buffer (bytes,
+    bytearray, memoryview) and reads it without intermediate copies."""
+    view = memoryview(buf)
+    r = _Reader(view)
     obj = _decode_from(r)
-    if r.pos != len(buf):
-        raise WireError(f"{len(buf) - r.pos} trailing bytes after decode")
+    if r.pos != len(view):
+        raise WireError(f"{len(view) - r.pos} trailing bytes after decode")
     return obj
 
 
 # ---------------------------------------------------------------------- #
 # socket framing: 8-byte big-endian length prefix per frame
 # ---------------------------------------------------------------------- #
+def _send_segments(sock: socket.socket, segments: List[Any]) -> None:
+    """Gathered send of a list of buffer segments without joining them.
+
+    Uses ``sendmsg`` (scatter/gather) where available so one syscall moves
+    many segments; falls back to per-segment ``sendall``. Handles partial
+    sends by advancing memoryviews — no buffer is ever concatenated."""
+    if not hasattr(sock, "sendmsg"):  # pragma: no cover - non-POSIX fallback
+        for seg in segments:
+            sock.sendall(seg)
+        return
+    views = [
+        m for m in (memoryview(s).cast("B") for s in segments) if len(m)
+    ]
+    while views:
+        sent = sock.sendmsg(views[:_IOV_MAX])
+        while sent:
+            head = views[0]
+            if sent >= len(head):
+                sent -= len(head)
+                views.pop(0)
+            else:
+                views[0] = head[sent:]
+                sent = 0
+
+
 def send_frame(sock: socket.socket, payload: bytes) -> None:
     header = _U64.pack(len(payload))
     if len(payload) < 65536:
@@ -225,29 +345,37 @@ def send_frame(sock: socket.socket, payload: bytes) -> None:
         sock.sendall(payload)
 
 
-def _recv_exact(sock: socket.socket, n: int) -> bytes:
-    chunks = []
-    while n:
-        chunk = sock.recv(min(n, 1 << 20))
-        if not chunk:
+def _recv_exact_into(sock: socket.socket, view: memoryview) -> None:
+    """Fill ``view`` from the socket — ``recv_into`` a preallocated buffer,
+    so receiving an N-byte frame performs zero chunk-list joins."""
+    while len(view):
+        n = sock.recv_into(view, min(len(view), 1 << 20))
+        if not n:
             raise ConnectionError("transport peer closed the connection")
-        chunks.append(chunk)
-        n -= len(chunk)
-    return b"".join(chunks)
+        view = view[n:]
 
 
-def recv_frame(sock: socket.socket) -> bytes:
+def _recv_exact(sock: socket.socket, n: int) -> bytearray:
+    buf = bytearray(n)
+    _recv_exact_into(sock, memoryview(buf))
+    return buf
+
+
+def recv_frame(sock: socket.socket) -> bytearray:
     (length,) = _U64.unpack(_recv_exact(sock, 8))
     return _recv_exact(sock, length)
 
 
 def send_obj(sock: socket.socket, obj: Any) -> None:
-    """Encode ``obj`` straight into one framed buffer and send it — no
-    intermediate ``bytes()`` copy of a multi-MB payload on the hot path."""
-    out = bytearray(8)
-    _encode_into(obj, out)
-    struct.pack_into(">Q", out, 0, len(out) - 8)
-    sock.sendall(out)
+    """Encode ``obj`` into gathered segments and send them framed — large
+    array bodies cross as zero-copy memoryviews of their source buffers
+    (encoding fully precedes the first write, so an unencodable object
+    raises ``WireError`` with the stream still clean)."""
+    segments = encode_segments(obj)
+    total = 0
+    for seg in segments:
+        total += len(seg) if not isinstance(seg, memoryview) else seg.nbytes
+    _send_segments(sock, [_U64.pack(total), *segments])
 
 
 def recv_obj(sock: socket.socket) -> Any:
@@ -272,8 +400,14 @@ def decode_message(buf: bytes) -> Tuple[str, Any, int, float]:
 # the socket, and any receiving client reverses it (the transform is
 # self-describing via the envelope marker below, so receivers need no local
 # configuration). This shrinks real wire bytes the way ``wire_dtype``
-# shrinks the *emulated* accounting — lossy, so it is strictly opt-in and
-# emulation backends ignore it (their payloads never leave the process).
+# shrinks the *emulated* accounting — lossy, so it is strictly opt-in.
+#
+# Codecs are *objects* (``WireCodec``), not bare function pairs: a codec may
+# carry per-link state on the sending side (the top-k family keeps an
+# error-feedback residual per link so repeated sends converge to the dense
+# signal). Decode must stay stateless — any receiver can decode any sender's
+# envelope with a fresh instance. Emulation backends never run ``encode``;
+# they use ``wire_bytes`` to keep their emulated byte accounting honest.
 
 _CODEC_ENVELOPE = "__wire_codec__"
 _Q8, _S8 = "__q8__", "__s8__"
@@ -304,7 +438,8 @@ def _int8_encode(payload: Any) -> Any:
         if (
             hasattr(node, "shape")
             and getattr(getattr(node, "dtype", None), "kind", "") in _FLOAT_KINDS
-        ):
+            and np.size(node)  # zero-size: nothing to quantize (absmax of
+        ):                     # an empty array is undefined)
             q, scale = quantize_int8(np.asarray(node))
             return {_Q8: np.asarray(q), _S8: float(np.asarray(scale))}
         return node
@@ -330,35 +465,412 @@ def _int8_decode(payload: Any) -> Any:
     return walk(payload)
 
 
-WIRE_CODECS = {
-    "int8": (_int8_encode, _int8_decode),
+def _is_float_array(node: Any) -> bool:
+    return (
+        hasattr(node, "shape")
+        and getattr(getattr(node, "dtype", None), "kind", "") in _FLOAT_KINDS
+    )
+
+
+class WireCodec:
+    """A per-channel payload transform applied at the socket boundary.
+
+    ``encode(payload, link)`` runs on the *sending* client right before a
+    payload crosses the wire; ``decode(payload)`` reverses it on any
+    receiver. ``link`` is an opaque hashable key identifying the concrete
+    link — ``(channel, group, src, dst)`` on the multiproc client — so a
+    stateful codec (``stateful = True``) can keep independent state (e.g. an
+    error-feedback residual) per link. Decode must be stateless: receivers
+    decode via a fresh instance resolved from the envelope's codec name.
+
+    ``sim(payload)`` returns a cheap shape-faithful stand-in for the coded
+    payload (stub arrays, never touched), used by ``wire_bytes`` so the
+    emulation backends can account post-codec bytes without running the
+    actual (and possibly stateful) transform.
+    """
+
+    name = "identity"
+    lossy = False
+    stateful = False
+
+    def encode(self, payload: Any, link: Any = ()) -> Any:
+        return payload
+
+    def decode(self, payload: Any) -> Any:
+        return payload
+
+    def sim(self, payload: Any) -> Any:
+        return payload
+
+    def wire_bytes(self, payload: Any, wire_dtype: str = "f32") -> int:
+        """Emulated post-codec wire bytes of ``payload`` (element-size
+        accounting, consistent with ``repro.core.channels.payload_bytes``)."""
+        from repro.core.channels import payload_bytes
+
+        return payload_bytes(self.sim(payload), wire_dtype)
+
+    def reset(self, link: Any = None) -> None:
+        """Drop per-link state (all links when ``link`` is None)."""
+
+
+def _stub(shape: Tuple[int, ...], dtype: Any) -> np.ndarray:
+    # an untouched allocation: right shape/dtype for byte accounting, no fill
+    return np.empty(shape, dtype)
+
+
+class Int8Codec(WireCodec):
+    """Per-leaf symmetric int8 quantization (the original ``"int8"``)."""
+
+    name = "int8"
+    lossy = True
+
+    def encode(self, payload: Any, link: Any = ()) -> Any:
+        return _int8_encode(payload)
+
+    def decode(self, payload: Any) -> Any:
+        return _int8_decode(payload)
+
+    def sim(self, payload: Any) -> Any:
+        def walk(node: Any) -> Any:
+            if isinstance(node, dict):
+                return {k: walk(v) for k, v in node.items()}
+            if isinstance(node, (list, tuple)):
+                return [walk(v) for v in node]
+            if _is_float_array(node):
+                return {_Q8: _stub(node.shape, np.int8), _S8: 0.0}
+            return node
+
+        return walk(payload)
+
+
+class Int8BlocksCodec(WireCodec):
+    """Fused blockwise int8 quantization via the Pallas quant kernel.
+
+    All float-array leaves are flattened into one buffer and quantized by a
+    single ``repro.kernels.quant`` call (one fused absmax+scale+round pass
+    per 4096-element block) instead of a per-leaf Python walk with one
+    quantization per tensor — the codec hot path at kernel speed. The coded
+    payload carries the structure with index markers where float leaves
+    lived, plus one ``(q, scale)`` block pair and the leaf specs needed to
+    rebuild them.
+    """
+
+    name = "int8_blocks"
+    lossy = True
+
+    _QB = "__qb__"
+    _QB_ESC = "__qb_block_escape__"
+    _SENTINELS = ({_QB}, {_QB_ESC})
+
+    def encode(self, payload: Any, link: Any = ()) -> Any:
+        from repro.kernels.quant.ops import quantize_flat
+
+        leaves: List[np.ndarray] = []
+
+        def walk(node: Any) -> Any:
+            if isinstance(node, dict):
+                coded = {k: walk(v) for k, v in node.items()}
+                if set(node) in self._SENTINELS:
+                    return {self._QB_ESC: coded}
+                return coded
+            if isinstance(node, list):
+                return [walk(v) for v in node]
+            if isinstance(node, tuple):
+                return tuple(walk(v) for v in node)
+            if _is_float_array(node):
+                # np.asarray, not ascontiguousarray: the latter promotes
+                # 0-d scalar arrays to shape (1,), corrupting the spec
+                leaves.append(np.asarray(node))
+                return {self._QB: len(leaves) - 1}
+            return node
+
+        tree = walk(payload)
+        specs = [
+            (tuple(int(d) for d in l.shape), l.dtype.str) for l in leaves
+        ]
+        if not leaves:
+            return {"tree": tree, "q": None, "scale": None, "specs": specs}
+        flat = np.concatenate(
+            [np.asarray(l, np.float32).reshape(-1) for l in leaves]
+        )
+        if not flat.shape[0]:  # only zero-size float leaves: nothing to code
+            return {"tree": tree, "q": None, "scale": None, "specs": specs}
+        q, scale = quantize_flat(flat)
+        # ship only the first n quantized bytes: the kernel's block padding
+        # is all zeros and would otherwise inflate sub-block payloads past
+        # their raw size (decode re-pads before dequantizing)
+        return {
+            "tree": tree,
+            "q": np.asarray(q).reshape(-1)[: flat.shape[0]],
+            "scale": np.asarray(scale),
+            "specs": specs,
+            "n": int(flat.shape[0]),
+        }
+
+    def decode(self, payload: Any) -> Any:
+        specs = payload["specs"]
+        if payload.get("q") is None:
+            # no (or only zero-size) float leaves were coded
+            leaves = [
+                np.zeros(tuple(int(d) for d in shape), np.dtype(str(dt)))
+                for shape, dt in specs
+            ]
+            return self._rebuild(payload["tree"], leaves)
+        from repro.kernels.quant.ops import BLOCK, dequantize_flat
+
+        n = int(payload["n"])
+        scale = np.asarray(payload["scale"])
+        q = np.zeros((scale.shape[0] * BLOCK,), np.int8)
+        q[:n] = np.asarray(payload["q"]).reshape(-1)
+        flat = np.asarray(
+            dequantize_flat(q.reshape(-1, BLOCK), scale, n)
+        )
+        leaves, offset = [], 0
+        for shape, dt in specs:
+            size = 1
+            for d in shape:
+                size *= int(d)
+            leaves.append(
+                flat[offset : offset + size]
+                .reshape(tuple(int(d) for d in shape))
+                .astype(np.dtype(str(dt)))
+            )
+            offset += size
+        return self._rebuild(payload["tree"], leaves)
+
+    def _rebuild(self, node: Any, leaves: List[np.ndarray]) -> Any:
+        if isinstance(node, dict):
+            if set(node) == {self._QB_ESC}:
+                return {
+                    k: self._rebuild(v, leaves)
+                    for k, v in node[self._QB_ESC].items()
+                }
+            if set(node) == {self._QB} and isinstance(node[self._QB], int):
+                return leaves[node[self._QB]]
+            return {k: self._rebuild(v, leaves) for k, v in node.items()}
+        if isinstance(node, list):
+            return [self._rebuild(v, leaves) for v in node]
+        if isinstance(node, tuple):
+            return tuple(self._rebuild(v, leaves) for v in node)
+        return node
+
+    def sim(self, payload: Any) -> Any:
+        from repro.kernels.quant.ops import BLOCK
+
+        total = [0]
+
+        def walk(node: Any) -> Any:
+            if isinstance(node, dict):
+                return {k: walk(v) for k, v in node.items()}
+            if isinstance(node, (list, tuple)):
+                return [walk(v) for v in node]
+            if _is_float_array(node):
+                size = 1
+                for d in node.shape:
+                    size *= int(d)
+                total[0] += size
+                return {self._QB: 0}
+            return node
+
+        tree = walk(payload)
+        if not total[0]:
+            return {"tree": tree, "q": None, "scale": None, "specs": []}
+        nb = -(-total[0] // BLOCK)
+        return {
+            "tree": tree,
+            "q": _stub((total[0],), np.int8),
+            "scale": _stub((nb, 1), np.float32),
+            "specs": [],
+            "n": total[0],
+        }
+
+
+class TopKCodec(WireCodec):
+    """Magnitude top-k sparsification with per-link error feedback.
+
+    Each float-array leaf is reduced to its ``frac`` largest-magnitude
+    entries (``repro.fl.compression.topk_sparsify``); the unsent remainder
+    is kept as a per-(link, leaf) residual and added to the *next* send on
+    that link, so the compression error feeds back instead of being lost —
+    repeated sends of a constant tensor converge to the dense value. State
+    lives on the sending side only; decode densifies statelessly.
+    """
+
+    lossy = True
+    stateful = True
+
+    _TKV, _TKI, _TKS, _TKD = "__tkv__", "__tki__", "__tks__", "__tkd__"
+    _TK_ESC = "__tk_escape__"
+    _SENTINELS = ({_TKV, _TKI, _TKS, _TKD}, {_TK_ESC})
+
+    def __init__(self, frac: float, name: Optional[str] = None) -> None:
+        frac = float(frac)
+        if not 0.0 < frac <= 1.0:
+            raise WireError(f"topk codec needs 0 < frac <= 1, got {frac}")
+        self.frac = frac
+        self.name = name if name is not None else f"topk{frac:g}"
+        # (link, leaf path) -> error-feedback residual (float32, leaf shape)
+        self._residual: Dict[Any, np.ndarray] = {}
+
+    def encode(self, payload: Any, link: Any = ()) -> Any:
+        from repro.fl.compression import topk_sparsify
+
+        def walk(node: Any, path: Tuple[Any, ...]) -> Any:
+            if isinstance(node, dict):
+                coded = {k: walk(v, path + (k,)) for k, v in node.items()}
+                if set(node) in self._SENTINELS:
+                    return {self._TK_ESC: coded}
+                return coded
+            if isinstance(node, list):
+                return [walk(v, path + (i,)) for i, v in enumerate(node)]
+            if isinstance(node, tuple):
+                return tuple(walk(v, path + (i,)) for i, v in enumerate(node))
+            if _is_float_array(node):
+                if not np.size(node):
+                    return node  # zero-size: nothing to sparsify
+                x = np.asarray(node, np.float32)
+                key = (link, path)
+                r = self._residual.get(key)
+                acc = x + r if r is not None and r.shape == x.shape else x
+                k = max(1, int(round(self.frac * acc.size)))
+                vals, idx = topk_sparsify(acc, k)
+                vals = np.asarray(vals, np.float32)
+                idx = np.asarray(idx, np.int32)
+                res = acc.reshape(-1).copy()
+                res[idx] = 0.0
+                self._residual[key] = res.reshape(acc.shape)
+                return {
+                    self._TKV: vals,
+                    self._TKI: idx,
+                    self._TKS: tuple(int(d) for d in node.shape),
+                    self._TKD: np.asarray(node).dtype.str,
+                }
+            return node
+
+        return walk(payload, ())
+
+    def decode(self, payload: Any) -> Any:
+        from repro.fl.compression import topk_densify
+
+        def walk(node: Any) -> Any:
+            if isinstance(node, dict):
+                if set(node) == {self._TK_ESC}:
+                    return {k: walk(v) for k, v in node[self._TK_ESC].items()}
+                if set(node) == set((self._TKV, self._TKI, self._TKS, self._TKD)):
+                    shape = tuple(int(d) for d in node[self._TKS])
+                    dense = np.asarray(
+                        topk_densify(
+                            np.asarray(node[self._TKV]),
+                            np.asarray(node[self._TKI]),
+                            shape,
+                        )
+                    )
+                    return dense.astype(np.dtype(str(node[self._TKD])))
+                return {k: walk(v) for k, v in node.items()}
+            if isinstance(node, list):
+                return [walk(v) for v in node]
+            if isinstance(node, tuple):
+                return tuple(walk(v) for v in node)
+            return node
+
+        return walk(payload)
+
+    def sim(self, payload: Any) -> Any:
+        def walk(node: Any) -> Any:
+            if isinstance(node, dict):
+                return {k: walk(v) for k, v in node.items()}
+            if isinstance(node, (list, tuple)):
+                return [walk(v) for v in node]
+            if _is_float_array(node):
+                size = 1
+                for d in node.shape:
+                    size *= int(d)
+                k = max(1, int(round(self.frac * size)))
+                return {
+                    self._TKV: _stub((k,), np.float32),
+                    self._TKI: _stub((k,), np.int32),
+                    self._TKS: tuple(int(d) for d in node.shape),
+                    self._TKD: "<f4",
+                }
+            return node
+
+        return walk(payload)
+
+    def reset(self, link: Any = None) -> None:
+        if link is None:
+            self._residual.clear()
+        else:
+            for key in [k for k in self._residual if k[0] == link]:
+                del self._residual[key]
+
+
+# name -> zero-arg factory producing a fresh codec instance. Stateful codecs
+# must be instantiated per backend/channel, never shared — hence factories.
+WIRE_CODECS: Dict[str, Callable[[], WireCodec]] = {
+    "int8": Int8Codec,
+    "int8_blocks": Int8BlocksCodec,
+}
+
+# parametric codec families: prefix -> (parser(name) -> codec, sample name).
+# The sample is a representative concrete member used by conformance tests
+# and benches that iterate "every registered codec".
+_CODEC_FAMILIES: Dict[str, Tuple[Callable[[str], WireCodec], str]] = {
+    "topk": (lambda name: TopKCodec(float(name[4:]), name=name), "topk0.1"),
 }
 
 
-def _codec(name: str):
-    if name not in WIRE_CODECS:
-        raise WireError(
-            f"unknown wire codec {name!r}; registered: {sorted(WIRE_CODECS)}"
-        )
-    return WIRE_CODECS[name]
+def register_codec(name: str, factory: Callable[[], WireCodec]) -> None:
+    WIRE_CODECS[name] = factory
+
+
+def registered_codecs() -> List[str]:
+    """All concrete codec names, plus one sample per parametric family."""
+    return sorted(WIRE_CODECS) + sorted(s for _, s in _CODEC_FAMILIES.values())
+
+
+def make_codec(codec: Any) -> WireCodec:
+    """Resolve a codec name (or pass through an instance) to a ``WireCodec``.
+
+    Concrete names come from ``WIRE_CODECS``; parametric names are parsed by
+    their family prefix (``"topk0.05"`` -> ``TopKCodec(frac=0.05)``)."""
+    if isinstance(codec, WireCodec):
+        return codec
+    name = str(codec)
+    if name in WIRE_CODECS:
+        return WIRE_CODECS[name]()
+    for prefix, (parser, _) in _CODEC_FAMILIES.items():
+        if name.startswith(prefix) and len(name) > len(prefix):
+            try:
+                return parser(name)
+            except (TypeError, ValueError) as exc:
+                raise WireError(f"malformed wire codec name {name!r}: {exc}")
+    raise WireError(
+        f"unknown wire codec {name!r}; registered: {registered_codecs()}"
+    )
 
 
 _ENVELOPE_KEYS = frozenset({_CODEC_ENVELOPE, "payload"})
 
+# decode-side instance cache: decode is stateless, so one shared instance
+# per codec name is safe and avoids re-instantiation per message
+_DECODER_CACHE: Dict[str, WireCodec] = {}
 
-def encode_payload(payload: Any, codec: str) -> Any:
-    """Apply ``codec`` to a channel payload; empty codec is the identity.
+
+def encode_payload(payload: Any, codec: Any, link: Any = ()) -> Any:
+    """Apply ``codec`` (a name or ``WireCodec`` instance) to a channel
+    payload; empty codec is the identity.
 
     A plain payload dict that happens to contain the envelope marker key is
     escaped into an identity envelope (``codec=""``), so ``decode_payload``
     can never misread user data as a codec envelope — every payload
-    round-trips losslessly whether or not a codec is configured."""
+    round-trips losslessly whether or not a codec is configured. ``link``
+    selects the per-link state of a stateful codec."""
     if not codec:
         if isinstance(payload, dict) and _CODEC_ENVELOPE in payload:
             return {_CODEC_ENVELOPE: "", "payload": payload}
         return payload
-    enc, _ = _codec(codec)
-    return {_CODEC_ENVELOPE: codec, "payload": enc(payload)}
+    c = make_codec(codec)
+    return {_CODEC_ENVELOPE: c.name, "payload": c.encode(payload, link)}
 
 
 def decode_payload(payload: Any) -> Any:
@@ -376,13 +888,19 @@ def decode_payload(payload: Any) -> Any:
         codec = payload[_CODEC_ENVELOPE]
         if not codec:  # identity envelope: an escaped colliding payload
             return payload["payload"]
-        _, dec = _codec(codec)
-        return dec(payload["payload"])
+        dec = _DECODER_CACHE.get(codec)
+        if dec is None:
+            dec = _DECODER_CACHE.setdefault(codec, make_codec(codec))
+        return dec.decode(payload["payload"])
     return payload
 
 
-def codec_ratio(payload: Any, codec: str) -> float:
-    """Achieved wire-bytes ratio (coded / raw) of ``codec`` on ``payload``."""
-    raw = len(encode(payload))
-    coded = len(encode(encode_payload(payload, codec)))
+def codec_ratio(payload: Any, codec: Any, link: Any = ()) -> float:
+    """Achieved wire-bytes ratio (coded / raw) of ``codec`` on ``payload``.
+
+    Raw size comes from the :func:`encoded_size` counting walk — the
+    multi-MB raw payload is never re-serialized just to be measured, so a
+    bench run no longer doubles its peak memory."""
+    raw = encoded_size(payload)
+    coded = encoded_size(encode_payload(payload, codec, link))
     return coded / raw if raw else 1.0

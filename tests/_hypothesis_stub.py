@@ -44,6 +44,14 @@ class _Floats(_Strategy):
         return float(rng.uniform(self.min_value, self.max_value))
 
 
+class _Tuples(_Strategy):
+    def __init__(self, *strategies):
+        self.strategies = strategies
+
+    def example(self, rng):
+        return tuple(s.example(rng) for s in self.strategies)
+
+
 class _Lists(_Strategy):
     def __init__(self, elements, min_size=0, max_size=10):
         self.elements = elements
@@ -66,6 +74,10 @@ class strategies:  # noqa: N801 - mirrors the hypothesis module name
     @staticmethod
     def floats(min_value, max_value, **_kw):
         return _Floats(min_value, max_value)
+
+    @staticmethod
+    def tuples(*strategies):
+        return _Tuples(*strategies)
 
     @staticmethod
     def lists(elements, min_size=0, max_size=10, **_kw):

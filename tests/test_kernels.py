@@ -75,6 +75,36 @@ class TestAggKernel:
             aggregate_flat(d, w), reference_aggregate(d, w), rtol=1e-6
         )
 
+    def test_pallas_kernel_against_reference(self):
+        """The actual Pallas matmul kernel (interpret mode), not the CPU
+        jnp dispatch path."""
+        d = jax.random.normal(jax.random.key(0), (5, 1000))
+        w = jnp.array([1.0, 2.0, 3.0, 4.0, 5.0])
+        np.testing.assert_allclose(
+            aggregate_flat(d, w, interpret=True),
+            reference_aggregate(d, w),
+            rtol=1e-5, atol=1e-6,
+        )
+
+    def test_exact_fold_kernel_is_order_exact(self):
+        """The add-only fold kernel (interpret mode) reproduces sequential
+        IEEE accumulation bit-for-bit — the property the fused aggregator
+        path is built on."""
+        rng = np.random.default_rng(0)
+        d = rng.normal(size=(6, 1000)).astype(np.float32)
+        w = rng.uniform(1.0, 30.0, size=6).astype(np.float32)
+        total = 0.0
+        acc = None
+        for c in range(6):
+            scaled = d[c] * float(w[c])
+            total += float(w[c])
+            acc = scaled if acc is None else np.add(acc, scaled)
+        seed = acc / total
+        out = np.asarray(
+            aggregate_flat(d, w, denom=total, exact=True, interpret=True)
+        )
+        assert out.tobytes() == seed.tobytes()
+
     @settings(max_examples=15, deadline=None)
     @given(
         C=st.integers(1, 8),
@@ -106,6 +136,26 @@ class TestQuantKernel:
         qr, sr = reference_quantize(xp)
         assert bool(jnp.all(q == qr))
         np.testing.assert_allclose(s, sr, rtol=1e-6)
+
+    def test_pallas_kernel_matches_reference_blocks(self):
+        """The Pallas quant kernel (interpret mode) vs the jnp reference the
+        ops layer dispatches to on CPU: quantized int8 values identical;
+        scales within one ulp (the interpreted kernel's constant division
+        may be strength-reduced); dequantization of identical inputs is
+        bit-identical."""
+        from repro.kernels.quant.kernel import dequantize_blocks, quantize_blocks
+        from repro.kernels.quant.ref import reference_dequantize
+
+        x = (jax.random.normal(jax.random.key(1), (12, 4096)) * 2.5).astype(
+            jnp.float32
+        )
+        qk, sk = quantize_blocks(x, interpret=True)
+        qr, sr = reference_quantize(x)
+        assert bool(jnp.all(qk == qr))
+        np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=1e-6)
+        dk = dequantize_blocks(qr, sr, interpret=True)
+        dr = reference_dequantize(qr, sr)
+        assert np.asarray(dk).tobytes() == np.asarray(dr).tobytes()
 
     @settings(max_examples=15, deadline=None)
     @given(

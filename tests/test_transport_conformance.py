@@ -15,6 +15,7 @@ from repro.core.channels import backend_factory as registry_factory
 from repro.core.channels import registered_backends
 from repro.transport.conformance import CONFORMANCE_CHECKS, run_conformance
 from repro.transport.multiproc import MultiprocBackend, TransportHub
+from repro.transport.wire import registered_codecs
 
 # "collective" is membership-only during emulation but still an InprocBackend
 # underneath — holding it to the same contract keeps the registry honest.
@@ -219,6 +220,146 @@ class TestWireCodec:
             np.testing.assert_allclose(got_w, w, atol=1.0 / 127.0 + 1e-7)
         finally:
             mgr.close()
+
+
+class TestCodecConformance:
+    """Every registered codec (incl. the parametric top-k family sample)
+    against the shared fixture set: nested pytrees, metadata, empty arrays,
+    marker/sentinel collisions — plus the codecs' stateful behaviors."""
+
+    @pytest.mark.parametrize("codec_name", registered_codecs())
+    def test_roundtrip_fixtures(self, codec_name):
+        from repro.transport.conformance import check_codec_roundtrip
+
+        check_codec_roundtrip(codec_name)
+
+    @pytest.mark.parametrize("codec_name", registered_codecs())
+    def test_codec_channel_over_multiproc(self, codec_name):
+        """Channel(codec=...) compresses across the real socket boundary for
+        every registered codec; the receiver sees float32 leaves back."""
+        from repro.core.channels import ChannelManager
+        from repro.core.tag import Channel as ChannelSpec
+
+        mgr = ChannelManager(
+            [ChannelSpec(
+                name="ch", pair=("a", "b"), backend="multiproc",
+                codec=codec_name,
+            )]
+        )
+        try:
+            ea = mgr.end("ch", "default", "a-0")
+            eb = mgr.end("ch", "default", "b-0")
+            w = np.linspace(-1.0, 1.0, 8192, dtype=np.float32)
+            ea.send("b-0", {"weights": {"w": w}, "num_samples": 3})
+            got = eb.recv("a-0")
+            assert got["num_samples"] == 3
+            got_w = np.asarray(got["weights"]["w"])
+            assert got_w.shape == w.shape and got_w.dtype == np.float32
+            if codec_name.startswith("int8"):
+                np.testing.assert_allclose(got_w, w, atol=1.0 / 127.0 + 1e-6)
+            # the achieved compression is observable per channel
+            ratio = mgr.codec_ratio("ch")
+            assert ratio is not None and 0.0 < ratio < 0.8
+        finally:
+            mgr.close()
+
+    def test_topk_error_feedback_converges(self):
+        """The per-link residual makes repeated sends of a constant tensor
+        converge: the running mean of the decoded sparse messages approaches
+        the dense value, and a different link's state stays independent."""
+        from repro.transport.wire import make_codec
+
+        codec = make_codec("topk0.25")
+        rng = np.random.default_rng(3)
+        x = rng.normal(size=512).astype(np.float32)
+        link_a = ("ch", "default", "a-0", "b-0")
+        errs = []
+        cum = np.zeros_like(x)
+        for t in range(1, 17):
+            out = codec.decode(codec.encode({"w": x}, link=link_a))
+            cum += np.asarray(out["w"])
+            errs.append(float(np.abs(cum / t - x).max()))
+        # error feedback: late rounds are strictly better than the first
+        # (a stateless top-k would stay at errs[0] forever)
+        assert errs[-1] < errs[0] / 2
+        assert errs[-1] < 0.25
+        # a second link starts fresh: its first message is plain top-k of x
+        out_b = codec.decode(
+            codec.encode({"w": x}, link=("ch", "default", "a-0", "c-0"))
+        )
+        k = max(1, round(0.25 * x.size))
+        nz = np.flatnonzero(np.asarray(out_b["w"]))
+        assert len(nz) <= k
+        np.testing.assert_array_equal(np.asarray(out_b["w"])[nz], x[nz])
+        # reset drops the residual state
+        codec.reset()
+        assert codec._residual == {}
+
+    def test_topk_frac_parses_and_bounds(self):
+        from repro.transport.wire import WireError, make_codec
+
+        assert make_codec("topk0.05").frac == 0.05
+        with pytest.raises(WireError):
+            make_codec("topk1.5")
+        with pytest.raises(WireError):
+            make_codec("topkabc")
+
+    def test_encoded_size_matches_encode(self):
+        from repro.transport.conformance import _codec_fixtures
+        from repro.transport.wire import encode, encoded_size
+
+        for fixture in _codec_fixtures():
+            assert encoded_size(fixture) == len(encode(fixture))
+
+    def test_emulated_accounting_honors_codec(self):
+        """Bugfix: a coded channel's *emulated* transfer time and byte stats
+        must reflect post-codec wire bytes, not the raw float payload."""
+        from repro.core.channels import ChannelManager, LinkModel
+        from repro.core.tag import Channel as ChannelSpec
+
+        payload = {"w": np.zeros((1000,), np.float32)}  # 4000 raw bytes
+        for codec, expect_ratio in (("int8", 0.30), ("topk0.1", 0.30)):
+            mgr = ChannelManager(
+                [ChannelSpec(name="ch", pair=("a", "b"), backend="inproc",
+                             codec=codec)]
+            )
+            be = mgr.backend("ch")
+            be.set_link("ch", "a-0", LinkModel(bandwidth=1000.0))
+            ea = mgr.end("ch", "default", "a-0")
+            mgr.end("ch", "default", "b-0")
+            ea.send("b-0", payload)
+            stats = mgr.channel_stats("ch")
+            assert stats["raw_bytes"] == 4000.0
+            assert stats["bytes"] < 4000.0 * expect_ratio, (codec, stats)
+            assert mgr.codec_ratio("ch") == stats["bytes"] / 4000.0
+            # emulated transfer time follows the *coded* bytes
+            assert be.now("a-0") == stats["bytes"] / 1000.0
+            mgr.close()
+
+    def test_uncoded_channel_accounting_unchanged(self):
+        from repro.core.channels import ChannelManager
+        from repro.core.tag import Channel as ChannelSpec
+
+        mgr = ChannelManager(
+            [ChannelSpec(name="ch", pair=("a", "b"), backend="inproc")]
+        )
+        ea = mgr.end("ch", "default", "a-0")
+        mgr.end("ch", "default", "b-0")
+        ea.send("b-0", {"w": np.zeros((1000,), np.float32)})
+        assert mgr.total_bytes("ch") == 4000.0
+        assert mgr.codec_ratio("ch") is None
+        mgr.close()
+
+    def test_unknown_codec_fails_fast_at_manager_construction(self):
+        from repro.core.channels import ChannelManager
+        from repro.core.tag import Channel as ChannelSpec
+        from repro.transport.wire import WireError
+
+        with pytest.raises(WireError):
+            ChannelManager(
+                [ChannelSpec(name="ch", pair=("a", "b"), backend="inproc",
+                             codec="zip9")]
+            )
 
 
 class TestTransientFaultRetry:
