@@ -6,6 +6,14 @@ on ``repro.launch.spawn`` (one OS process per worker behind a
 deployment cost a real process tree pays — interpreter start-up, hub RPCs
 and wire serialization — on top of the identical application work (the two
 runs produce byte-identical global weights, which is asserted).
+
+A second, scaling section drives the pooled + sharded deployment
+(``pool_size`` recycled worker-host processes, one hub shard per groupBy
+label) up to 1024 workers on a hierarchical TAG: the per-worker wall-clock
+must stay near-flat — total wall-clock sublinear in worker count — because
+interpreter start-up is paid per *host*, not per worker, and broker topics
+are spread across shards. Emitted rows: ``deployment="multiproc-pooled"``
+with ``pool_size``, ``shards``, ``wall_s`` and ``per_worker_ms``.
 """
 from __future__ import annotations
 
@@ -17,7 +25,7 @@ import numpy as np
 from repro.core.expansion import JobSpec
 from repro.core.runtime import run_job
 from repro.core.tag import DatasetSpec
-from repro.core.topologies import classical_fl
+from repro.core.topologies import classical_fl, hierarchical_fl
 from repro.launch.spawn import run_job_multiproc
 
 from benchmarks.common import init_weights, result_meta
@@ -25,6 +33,13 @@ from benchmarks.common import init_weights, result_meta
 WORKER_COUNTS = (2, 4, 8)
 SMOKE_WORKER_COUNTS = (2,)
 ROUNDS = 2
+
+# pooled + sharded scaling column: worker counts far beyond what a
+# one-process-per-worker deployment could start in reasonable time
+SCALE_WORKER_COUNTS = (64, 256, 1024)
+SMOKE_SCALE_WORKER_COUNTS = (16,)
+SCALE_POOL_SIZE = 4
+SCALE_ROUNDS = 1
 
 
 def _job(n_workers: int) -> JobSpec:
@@ -35,6 +50,27 @@ def _job(n_workers: int) -> JobSpec:
         tag=tag,
         datasets=tuple(DatasetSpec(name=f"d{i}") for i in range(n_workers)),
         hyperparams={"rounds": ROUNDS, "init_weights": init_weights()},
+    )
+
+
+def _scale_job(n_workers: int, n_groups: int) -> JobSpec:
+    """Hierarchical TAG with ``n_groups`` groupBy labels, so the sharded
+    fabric gets one hub per group plus the root for the global channel."""
+    groups = tuple(f"g{i}" for i in range(n_groups))
+    per = n_workers // n_groups
+    dataset_groups = {
+        g: tuple(f"d{gi * per + i}" for i in range(per))
+        for gi, g in enumerate(groups)
+    }
+    tag = hierarchical_fl(
+        groups=groups,
+        dataset_groups=dataset_groups,
+        trainer_program="repro.transport.conformance.SeededSGDTrainer",
+    )
+    return JobSpec(
+        tag=tag,
+        datasets=tuple(DatasetSpec(name=f"d{i}") for i in range(n_workers)),
+        hyperparams={"rounds": SCALE_ROUNDS, "init_weights": init_weights()},
     )
 
 
@@ -67,6 +103,47 @@ def run(smoke: bool = False) -> List[Dict[str, object]]:
                 )
             )
             print(f"{n:>8} {deployment:>11} {secs:>9.2f}")
+
+    # ---- scaling: pooled hosts + sharded hubs up to 1024 workers ------- #
+    scale_counts = SMOKE_SCALE_WORKER_COUNTS if smoke else SCALE_WORKER_COUNTS
+    walls: List[float] = []
+    print(f"{'workers':>8} {'deployment':>16} {'wall s':>9} {'ms/worker':>10}")
+    for n in scale_counts:
+        n_groups = 8 if n >= 64 else 4
+        t0 = time.perf_counter()
+        res = run_job_multiproc(
+            _scale_job(n, n_groups),
+            timeout=600,
+            pool_size=SCALE_POOL_SIZE,
+            sharded=True,
+        )
+        wall = time.perf_counter() - t0
+        assert not res.errors, list(res.errors.items())[:3]
+        walls.append(wall)
+        rows.append(
+            result_meta(
+                workers=n,
+                deployment="multiproc-pooled",
+                rounds=SCALE_ROUNDS,
+                pool_size=SCALE_POOL_SIZE,
+                shards=n_groups,
+                wall_s=wall,
+                per_worker_ms=1e3 * wall / n,
+            )
+        )
+        print(
+            f"{n:>8} {'multiproc-pooled':>16} {wall:>9.2f} "
+            f"{1e3 * wall / n:>10.1f}"
+        )
+    if len(scale_counts) > 1:
+        # near-flat per-worker cost: total wall-clock grows sublinearly in
+        # worker count (classic spawn pays interpreter start-up per worker)
+        growth = walls[-1] / walls[0]
+        fan = scale_counts[-1] / scale_counts[0]
+        assert growth < fan, (
+            f"pooled scaling regressed: {fan}x workers cost {growth:.1f}x "
+            "wall-clock (expected sublinear)"
+        )
     return rows
 
 

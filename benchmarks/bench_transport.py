@@ -5,6 +5,13 @@ pytree through a ``ChannelManager`` end pair — on the in-process reference
 backend and on the multiproc loopback (real sockets + deterministic wire
 format through a ``TransportHub``). The gap between the two columns is the
 serialization + socket cost a real process deployment pays per message.
+
+A final section compares hub fabrics on grouped traffic: the same per-group
+message load through one monolithic ``TransportHub`` vs a
+``ShardedTransportHub`` (one hub per groupBy label + a root router, the
+paper's per-group broker model). Sharding must not cost throughput — each
+(channel, group) topic lives on exactly one shard, so the client pays the
+same single socket hop.
 """
 from __future__ import annotations
 
@@ -16,6 +23,11 @@ import numpy as np
 from repro import transport as _transport  # noqa: F401 - registers the loopback
 from repro.core.channels import ChannelManager
 from repro.core.tag import Channel as ChannelSpec
+from repro.transport.multiproc import (
+    ShardedTransportHub,
+    TransportHub,
+    make_backend_factory,
+)
 
 from benchmarks.common import result_meta
 
@@ -43,6 +55,42 @@ def _roundtrip_secs(backend: str, n_elems: int, iters: int, codec: str = "") -> 
         return (time.perf_counter() - t0) / iters
     finally:
         mgr.close()
+
+
+def _grouped_fanout_secs(
+    sharded: bool, n_groups: int, iters: int, n_elems: int = 1024
+) -> tuple:
+    """Per-group roundtrips through one hub vs a shard-per-group fabric.
+
+    Returns ``(wall_seconds, total_messages)`` for ``iters`` send+recv
+    roundtrips in each of ``n_groups`` groups of a grouped channel.
+    """
+    groups = tuple(f"g{i}" for i in range(n_groups))
+    hub = ShardedTransportHub(groups) if sharded else TransportHub()
+    mgr = ChannelManager(
+        [ChannelSpec(name="fanout", pair=("leaf", "agg"), group_by=groups)],
+        backend_factory=make_backend_factory(hub.worker_address),
+    )
+    try:
+        payload = {
+            "w": np.random.default_rng(0).normal(size=n_elems).astype(np.float32)
+        }
+        pairs = []
+        for i, g in enumerate(groups):
+            leaf = mgr.end("fanout", g, f"leaf-{i}")
+            agg = mgr.end("fanout", g, f"agg-{i}")
+            leaf.send(f"agg-{i}", payload)  # warmup: connection + lazy setup
+            agg.recv(f"leaf-{i}")
+            pairs.append((leaf, agg, f"leaf-{i}", f"agg-{i}"))
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            for leaf, agg, leaf_id, agg_id in pairs:
+                leaf.send(agg_id, payload)
+                agg.recv(leaf_id)
+        return time.perf_counter() - t0, iters * n_groups
+    finally:
+        mgr.close()
+        hub.close()
 
 
 def run(smoke: bool = False) -> List[Dict[str, object]]:
@@ -94,8 +142,26 @@ def run(smoke: bool = False) -> List[Dict[str, object]]:
             )
             assert ratio < 0.5, f"{codec} codec failed to shrink the wire"
 
+    # single hub vs sharded fabric on grouped traffic
+    n_groups = 2 if smoke else 8
+    fan_iters = 5 if smoke else 50
+    print(f"{'fabric':>10} {'groups':>7} {'msgs':>6} {'msgs/s':>10}")
+    for fabric in ("single", "sharded"):
+        secs, msgs = _grouped_fanout_secs(fabric == "sharded", n_groups, fan_iters)
+        rows.append(
+            result_meta(
+                backend="multiproc",
+                fabric=fabric,
+                groups=n_groups,
+                msgs=msgs,
+                wall_s=secs,
+                msgs_per_s=msgs / secs,
+            )
+        )
+        print(f"{fabric:>10} {n_groups:>7} {msgs:>6} {msgs / secs:>10.0f}")
+
     # sanity: the loopback moved real bytes for every size
-    assert all(r["roundtrip_ms"] > 0 for r in rows)
+    assert all(r["roundtrip_ms"] > 0 for r in rows if "roundtrip_ms" in r)
     return rows
 
 

@@ -1,6 +1,31 @@
 """Shared helpers for the paper-experiment benchmarks: a real (small) ML
 workload — softmax regression on the synthetic federated classification data
-— plugged into Flame roles via the user programming model (Fig. 5)."""
+— plugged into Flame roles via the user programming model (Fig. 5).
+
+Bench JSON schema
+-----------------
+
+``benchmarks.run`` collects each bench's rows into one JSON document
+(``--out``), keyed by bench name. Every row is a flat dict built by
+:func:`result_meta`, so it always carries:
+
+* ``backend`` — the transport the run targeted. Benches without a backend
+  argument read the ``REPRO_BENCH_BACKEND`` env var (default ``inproc``);
+  either way the name is stamped into the row so bench trajectories stay
+  comparable across transports.
+
+Per-bench fields are free-form but follow shared conventions:
+
+* ``wall_s`` / ``roundtrip_ms`` / ``msgs_per_s`` — wall-clock measurements;
+* ``workers`` / ``payload_bytes`` / ``rounds`` — the swept axis;
+* byte accounting mirrors the transport stats vocabulary: a channel's moved
+  (post-codec) bytes are its ``bytes`` and the pre-codec size its
+  ``raw_bytes`` (the ``raw_bytes:<channel>`` stat key on coded channels), so
+  ``wire_ratio`` = coded / raw exactly as
+  ``ChannelManager.codec_ratio`` and ``WireCodec.wire_bytes`` report it;
+* pooled/sharded spawn rows add ``pool_size``, ``shards`` and
+  ``per_worker_ms`` (see ``bench_spawn``).
+"""
 from __future__ import annotations
 
 import os

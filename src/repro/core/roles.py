@@ -189,6 +189,84 @@ def weighted_mean(
     return jax.tree_util.tree_map(lambda x: x / total, acc), total
 
 
+class StreamingMean:
+    """O(1)-memory streaming counterpart of ``weighted_mean``.
+
+    ``fold(weights, n)`` absorbs one client update at a time — callers feed
+    updates in sorted-src order — and ``finalize()`` returns
+    ``(mean_tree, total_samples)`` (``(None, 0.0)`` when nothing carried
+    positive weight). Only the running accumulator tree is retained: the
+    peak number of client update trees held at once is 1 regardless of
+    client count (``peak_buffered``).
+
+    Bit-identity: the per-update ``scale then add`` is the exact IEEE op
+    sequence of ``weighted_mean``'s sequential path — which the fused
+    exact-mode ``aggregate_tree`` kernel also reproduces — so for the same
+    fold order the streaming, buffered-sequential and buffered-fused
+    results are byte-identical. ``fused`` routes the per-update scale/add
+    through the separately-jitted pair from ``repro.fl.strategies`` (the
+    same no-FMA split as the kernel's exact mode); ``None`` auto-dispatches
+    like ``weighted_mean``.
+    """
+
+    def __init__(self, fused: Optional[bool] = None) -> None:
+        self._fused = fused
+        self._acc: Any = None
+        self._total = 0.0
+        self.count = 0
+        self.peak_buffered = 0
+
+    def _resolve_fused(self, weights: Any) -> bool:
+        import jax
+
+        if self._fused is None:
+            from repro.kernels.agg.ops import fused_dispatch_default
+
+            if fused_dispatch_default():
+                leaves = jax.tree_util.tree_leaves(weights)
+                elems = sum(int(np.size(leaf)) for leaf in leaves)
+                self._fused = elems >= FUSED_AGG_MIN_ELEMS
+            else:
+                self._fused = False
+        return bool(self._fused)
+
+    def fold(self, weights: Any, n: float) -> None:
+        import jax
+
+        n = float(n)
+        self._total += n
+        self.count += 1
+        self.peak_buffered = max(self.peak_buffered, 1)
+        if self._resolve_fused(weights):
+            from repro.fl.strategies import _add_scaled, _scale_delta
+
+            w = np.float32(n)
+            scaled = jax.tree_util.tree_map(
+                lambda x: _scale_delta(np.asarray(x), w), weights
+            )
+            if self._acc is None:
+                self._acc = jax.tree_util.tree_map(np.asarray, scaled)
+            else:
+                self._acc = jax.tree_util.tree_map(
+                    lambda a, s: np.asarray(_add_scaled(a, s)),
+                    self._acc, scaled,
+                )
+            return
+        scaled = jax.tree_util.tree_map(lambda x: np.asarray(x) * n, weights)
+        if self._acc is None:
+            self._acc = scaled
+        else:
+            self._acc = jax.tree_util.tree_map(np.add, self._acc, scaled)
+
+    def finalize(self) -> Tuple[Optional[Any], float]:
+        import jax
+
+        if self._acc is None or self._total <= 0:
+            return None, 0.0
+        mean = jax.tree_util.tree_map(lambda x: x / self._total, self._acc)
+        return mean, self._total
+
+
 def _fold_allreduce(
     me: str,
     own_weights: Any,
@@ -337,6 +415,9 @@ class _AggregatorBase(Role):
         self.agg_weights: Any = None
         self.agg_samples: int = 0
         self._server_version: Optional[int] = None  # staleness echo (async)
+        # high-water mark of client update trees held at once while folding:
+        # the streaming path keeps this at 1 regardless of group size
+        self.peak_buffered: int = 0
 
     def distribute(self) -> None:
         end = self.ctx.end(self.down_channel)
@@ -346,17 +427,17 @@ class _AggregatorBase(Role):
         if self._work_done:
             return  # peers were just told to exit; nothing will arrive
         end = self.ctx.end(self.down_channel)
-        # sort by source id before folding: float accumulation order is then
-        # independent of join/arrival order, so the same seeded job produces
-        # byte-identical weights on every transport backend
-        arrived = sorted(end.recv_fifo(end.ends()), key=lambda t: t[0])
-        updates = [
-            (msg["weights"], float(msg.get("num_samples", 1)))
-            for _, msg in arrived
-        ]
-        mean, total = weighted_mean(
-            updates, fused=self.config.get("fused_aggregation")
-        )
+        # stream per source in sorted-src order: one update is in flight at
+        # a time (server memory stays O(1) in group size) and the float
+        # accumulation order is independent of join/arrival order, so the
+        # same seeded job produces byte-identical weights on every transport
+        # backend — and the same bytes the buffered recv_fifo fold produced
+        acc = StreamingMean(fused=self.config.get("fused_aggregation"))
+        for src in sorted(end.ends()):
+            msg = end.recv(src)
+            acc.fold(msg["weights"], float(msg.get("num_samples", 1)))
+        self.peak_buffered = max(self.peak_buffered, acc.peak_buffered)
+        mean, total = acc.finalize()
         if mean is not None:
             self.agg_weights = mean
             self.agg_samples = int(total)

@@ -37,7 +37,7 @@ import numpy as np
 
 from repro.core.channels import WorkerDropped, recv_any_multi
 from repro.core.composer import Composer, Loop, Tasklet
-from repro.core.roles import Role, await_peer, bridge_clock, weighted_mean
+from repro.core.roles import Role, StreamingMean, await_peer, bridge_clock
 
 
 def _tree_sub(a: Any, b: Any) -> Any:
@@ -225,14 +225,15 @@ class _DeadlineBase(_PolicyBase):
         )
         # fold in sorted-src order, not arrival order: virtual-arrival ties
         # are broken by wall-clock thread timing, so an arrival-order fold
-        # would make seeded deadline rounds drift by an ulp run-to-run
-        agg, total = weighted_mean(
-            [
-                (m["weights"], float(m.get("num_samples", 1)))
-                for _, m, _ in sorted(on_time, key=lambda a: a[0])
-            ],
-            fused=self.config.get("fused_aggregation"),
-        )
+        # would make seeded deadline rounds drift by an ulp run-to-run.
+        # The fold itself streams — one scaled tree at a time into the O(1)
+        # accumulator (the deadline window necessarily retains this round's
+        # arrivals for on-time/late classification; the fold adds only one
+        # more tree on top, not another O(C))
+        acc = StreamingMean(fused=self.config.get("fused_aggregation"))
+        for _, m, _ in sorted(on_time, key=lambda a: a[0]):
+            acc.fold(m["weights"], float(m.get("num_samples", 1)))
+        agg, total = acc.finalize()
         if agg is not None:
             self.agg_weights = agg
             self.agg_samples = int(total)
@@ -314,13 +315,11 @@ class _BufferedAsyncBase(_PolicyBase):
         # client -> last version handed to it (the downward version vector);
         # bounds snapshot eviction so a slow client's base stays available
         self._version_vector: Dict[str, int] = {}
-        # (delta, staleness) pairs awaiting the next buffer flush: deltas are
-        # absorbed into strategy state in one stacked accumulate_batch call
-        # at flush time (the fused aggregation hot path) instead of one
-        # tree_map pass per arrival — bit-identical, flush-time semantics
-        # unchanged (staleness/base resolution still happens at arrival)
-        self._pending_updates: List[Tuple[Any, int]] = []
         self.staleness_log: List[Dict[str, Any]] = []
+        # high-water mark of unabsorbed delta trees held at once: the
+        # streaming absorb folds each delta into strategy state at arrival,
+        # so this stays 1 regardless of client count or buffer size
+        self.peak_buffered = 0
 
     def _init_strategy(self) -> None:
         from repro.fl.strategies import get_strategy
@@ -370,25 +369,32 @@ class _BufferedAsyncBase(_PolicyBase):
             del self._version_vector[t]
 
     def _flush_threshold(self) -> int:
-        """Updates per buffer flush (FedBuff's buffer size; 1 for FedAsync)."""
+        """Updates per buffer application (FedBuff's buffer size; 1 for
+        FedAsync). The streaming absorb no longer defers to a flush — the
+        strategy's ``ready`` fires at this same count — but the threshold
+        remains the observable "updates per version" knob."""
         return max(1, int(getattr(self._strategy, "buffer_size", 1)))
 
     def _absorb(self, src: str, msg: Any, arrival: float) -> bool:
-        """Buffer one update; on a full buffer, absorb the whole batch in a
-        single stacked ``accumulate_batch`` (the fused Pallas aggregation
-        path), apply it, bump the local version and snapshot. Returns True
-        when a new version was produced.
+        """Fold one update straight into strategy state via
+        ``accumulate_stream`` (the streaming O(1) absorption path); when the
+        strategy reports a full buffer, apply it, bump the local version and
+        snapshot. Returns True when a new version was produced.
 
-        The delta and its staleness are resolved at *arrival* (against the
-        snapshot the sender trained from), exactly as the incremental path
-        did — only the weighted accumulation is deferred to flush time."""
+        The delta and its staleness are resolved at *arrival* against the
+        snapshot the sender trained from, and the weighted accumulation
+        happens at arrival too — no delta tree is ever retained, so server
+        memory is O(1) in client count and buffer size. The strategy's
+        ``ready`` check fires at exactly the moment the old deferred
+        buffer-flush fired (``count`` reaches the buffer size), and the
+        streaming fold is bit-identical to the flushed batch, so absorbed
+        versions and weights are unchanged."""
         # an unstamped update (sync-tier sender) counts as fresh, not maximal
         trained_from = int(msg.get("version", self._version))
         base, staleness, clamped = self._snapshots.base_for(
             trained_from, self._version
         )
         delta = _tree_sub(msg["weights"], base)
-        self._pending_updates.append((delta, int(staleness)))
         entry = {
             "src": src, "staleness": staleness, "version": self._version,
             "arrival": arrival,
@@ -396,13 +402,11 @@ class _BufferedAsyncBase(_PolicyBase):
         if clamped:
             entry["clamped"] = True
         self.staleness_log.append(entry)
-        if len(self._pending_updates) < self._flush_threshold():
-            return False
-        pending, self._pending_updates = self._pending_updates, []
-        self._strategy_state = self._strategy.accumulate_batch(
+        self.peak_buffered = max(self.peak_buffered, 1)
+        self._strategy_state = self._strategy.accumulate_stream(
             self._strategy_state,
-            [d for d, _ in pending],
-            [s for _, s in pending],
+            delta,
+            int(staleness),
             fused=self.config.get("fused_aggregation"),
         )
         if not bool(self._strategy.ready(self._strategy_state)):
@@ -590,8 +594,10 @@ class AsyncAggregatorMixin(_BufferedAsyncBase):
                 self.metrics.append({"early_stop": True, "version": self._version})
                 # a barriered root above would block forever on this silent
                 # exit: relay once to unblock its current round, then leave
-                # so later rounds skip us. Partially-buffered updates were
-                # never applied to self.weights, so the relay must carry
+                # so later rounds skip us. Partially-accumulated updates
+                # (strategy count below the buffer size) were streamed into
+                # strategy state but never applied to self.weights, so the
+                # relay must carry
                 # zero sample weight or the root would overweight a stale
                 # model by the unapplied updates' sample counts
                 self._buffer_samples = 0.0

@@ -76,6 +76,23 @@ class RuntimePolicy:
 
     The same JobSpec runs under any mode — the policy is a deployment detail,
     exactly like the channel backend choice (§6.2 of the paper).
+
+    Field groups (each field's comment below carries the details):
+
+    * ``mode`` + ``tiers`` — what lowering each tier of the aggregation tree
+      runs. ``tiers`` maps role name -> mode string or override dict
+      (``{"mode": ..., <TIER_PARAM_KEYS>...}``); unlisted roles follow the
+      root-only default.
+    * ``arrivals`` / ``dropouts`` / ``rejoins`` — the virtual-time worker
+      schedule the ``EventEngine`` enforces identically on the threaded and
+      process deployments. Validated: every re-join needs a matching earlier
+      dropout. Over processes, the re-join standby pool is sized by the
+      concurrent-dropout high-water mark of these windows.
+    * ``deadline`` / ``min_participants`` — deadline-mode round bounds.
+    * ``buffer_size`` / ``staleness_exp`` / ``max_updates`` — async
+      (FedBuff) server knobs.
+    * ``grace`` — wall-clock quiet-channel patience; the only wall-clock
+      field (everything above is virtual time).
     """
 
     mode: str = "sync"  # "sync" | "deadline" | "async"

@@ -202,20 +202,70 @@ def _fused_batch_sum(deltas: Sequence[Tree], weights: List[float]):
     return jax.tree_util.tree_map(np.asarray, summed)
 
 
+@jax.jit
+def _scale_delta(x: jax.Array, w: jax.Array) -> jax.Array:
+    # own jit entry, mirroring the exact-mode kernel split: compiling the
+    # scale together with the add would allow FMA contraction and break
+    # bit-equality with the eager ``a + w*d`` chain
+    return x * w
+
+
+@jax.jit
+def _add_scaled(a: jax.Array, s: jax.Array) -> jax.Array:
+    return a + s
+
+
 class _BufferedBatchMixin:
-    """Fused buffer-flush for the buffered async strategies.
+    """Streaming / fused absorption for the buffered async strategies.
+
+    ``accumulate_stream(state, delta, staleness)`` folds ONE update into the
+    strategy state the moment it arrives — the aggregator never buffers
+    delta trees, so server memory is O(1) in client count. The scale and the
+    add run as separate ops (separately-jitted on the fused path, eager
+    numpy-backed ops otherwise), which is the same IEEE op sequence as the
+    incremental ``accumulate`` chain: streaming is bit-identical to it by
+    construction.
 
     ``accumulate_batch(state, deltas, staleness)`` absorbs a whole buffer of
     updates (arrival order) at once: per-update staleness weights are
     computed with the *same* scalar ops as the incremental ``accumulate``,
     then the weighted sum runs as one stacked kernel call instead of one
     Python ``tree_map`` pass per update. Bit-identical to calling
-    ``accumulate`` in a loop — the fused path is a performance switch, not
-    a numerics change.
+    ``accumulate`` (or ``accumulate_stream``) in a loop — the fused path is
+    a performance switch, not a numerics change.
     """
 
     def _update_weight(self, staleness: jax.Array) -> jax.Array:
         raise NotImplementedError
+
+    def accumulate_stream(
+        self,
+        state: Tree,
+        delta: Tree,
+        staleness: int,
+        fused: Any = None,
+    ) -> Tree:
+        """Fold one arriving update into ``state`` (O(1) server memory).
+
+        ``fused=None`` auto-dispatches like ``weighted_mean``: the
+        separately-jitted scale/add pair on accelerators for large payloads,
+        the eager per-leaf ops otherwise. Both produce the same bits as the
+        incremental ``accumulate`` — the switch is purely about speed.
+        """
+        if fused is None:
+            from repro.core.roles import FUSED_AGG_MIN_ELEMS
+            from repro.kernels.agg.ops import fused_dispatch_default
+
+            elems = sum(
+                int(np.size(leaf)) for leaf in jax.tree_util.tree_leaves(delta)
+            )
+            fused = fused_dispatch_default() and elems >= FUSED_AGG_MIN_ELEMS
+        if not fused:
+            return self.accumulate(state, delta, np.int32(staleness))
+        w = self._update_weight(np.int32(staleness))
+        scaled = jax.tree_util.tree_map(lambda d: _scale_delta(d, w), delta)
+        acc = jax.tree_util.tree_map(_add_scaled, state["acc"], scaled)
+        return {"acc": acc, "count": state["count"] + 1}
 
     def accumulate_batch(
         self,

@@ -10,6 +10,18 @@ This is the driver/worker split of the multiproc transport:
   (``MultiprocBackend``) and runs its role program unchanged — the same
   classes that run threaded against ``InprocBackend``.
 
+Two deployment knobs scale this past one-process-per-worker (the paper's
+10k-trainer trees cannot pay a process and a broker round-trip per worker):
+
+* ``pool_size=N`` runs every logical worker on one of N recycled **pool
+  hosts** (``_HostPool``): a host pays interpreter/import cost once and runs
+  each assigned worker as a thread, so job start-up cost is O(pool) instead
+  of O(workers). Event-driven jobs keep their lazy start — a worker's task
+  is queued to a host only when the ``EventEngine`` fires its arrival event.
+* ``sharded=True`` partitions the hub by the TAG's groupBy labels
+  (``ShardedTransportHub``): one broker per group plus a root for
+  cross-shard channels, the paper's per-group MQTT broker model (§6.2).
+
 A seeded sync job therefore produces byte-identical global weights on both
 deployments (the transport-layer acceptance criterion); what changes is the
 deployment, never the application logic.
@@ -20,10 +32,13 @@ re-join schedules — run here too: the driver binds the deployment-agnostic
 Dropout is enforced hub-side (``set_drop`` on the shared backend) so a
 worker's ``WorkerDropped`` surfaces inside its own process exactly like the
 threaded runtime; the supervisor maps the engine's directives onto the
-process tree — orphan cascade via hub-side ``poison``, re-join via a respawn
-(a pre-warmed standby process, so respawn latency is not bounded by
-interpreter start-up). Policy servers (deadline/FedBuff) run unchanged
-because role bodies reach the transport only through ``ChannelEnd``.
+process tree — orphan cascade via hub-side ``poison``, re-join via a task
+assignment to a pre-warmed standby host, so respawn latency is not bounded
+by interpreter start-up. The standby pool is shared and sized by the
+concurrent-dropout high-water mark (``_rejoin_high_water``), not one parked
+process per scheduled re-join. Policy servers (deadline/FedBuff) run
+unchanged because role bodies reach the transport only through
+``ChannelEnd``.
 """
 from __future__ import annotations
 
@@ -47,7 +62,11 @@ from repro.core.runtime import (
     static_membership,
     validate_policy_tiers,
 )
-from repro.transport.multiproc import TransportHub, hub_backend_factory
+from repro.transport.multiproc import (
+    ShardedTransportHub,
+    TransportHub,
+    make_backend_factory,
+)
 
 __all__ = ["MultiprocLauncher", "RemoteProgram", "run_job_multiproc"]
 
@@ -109,8 +128,8 @@ def _remote_program(wid: str, role: str, summary: Dict[str, Any]) -> RemoteProgr
     )
 
 
-def _worker_entry(
-    address: Tuple[str, int],
+def _worker_body(
+    address: Any,
     job: JobSpec,
     worker: WorkerConfig,
     hyperparams: Dict[str, Any],
@@ -120,16 +139,20 @@ def _worker_entry(
     result_q: Any,
     barrier_timeout: float,
     policy: Optional[RuntimePolicy] = None,
-    rejoin_event: Any = None,
     drop_ack: Any = None,
 ) -> None:
-    """Runs inside the spawned worker process.
+    """One logical worker's run, deployment-agnostic on the worker side.
 
-    ``barrier`` is None for dynamically-joining workers (late arrivals and
-    re-join respawns of an event-driven job); ``rejoin_event`` marks a
-    pre-warmed re-join standby: the process pays its interpreter/import cost
-    up front, then parks until the supervisor signals the re-join (or never
-    does — the driver reclaims unused standbys at teardown).
+    Called either as the whole body of a dedicated spawned process
+    (``_worker_entry``) or on a thread of a recycled pool host
+    (``_pool_host_entry``) — the transport keeps both flavors equivalent
+    because every channel op is an RPC keyed by ``worker_id``, never by
+    process identity. ``address`` is a single hub address or a shard
+    address map (``make_backend_factory`` dispatches); ``barrier`` is None
+    for dynamically-joining workers (late arrivals and re-join respawns of
+    an event-driven job); ``drop_ack`` is anything with ``.wait(timeout)``
+    (an ``mp.Event`` for a dedicated process, a ``threading.Event`` routed
+    by the pool host's ack dispatcher).
 
     Dropout is a two-phase report: a ``dropping`` notice goes up *before*
     ``on_dropped`` leaves the channels, and the worker waits on ``drop_ack``
@@ -139,11 +162,10 @@ def _worker_entry(
     worker_id = worker.worker_id
     pol = policy or RuntimePolicy()
     passed_barrier = False
+    channels: Optional[ChannelManager] = None
     try:
-        if rejoin_event is not None and not rejoin_event.wait(timeout=barrier_timeout):
-            return  # standby never signaled: the worker never re-joined
         channels = ChannelManager(
-            job.tag.channels, backend_factory=hub_backend_factory(address)
+            job.tag.channels, backend_factory=make_backend_factory(address)
         )
         if pol.is_lowering:
             overrides = {worker.role: program_cls} if program_cls is not None else {}
@@ -204,6 +226,241 @@ def _worker_entry(
             result_q.put((worker_id, "err", (type(exc).__name__, str(exc))))
         except Exception:
             pass
+    finally:
+        # pool hosts outlive many logical workers: release this worker's hub
+        # sockets here instead of leaning on process exit
+        if channels is not None:
+            try:
+                channels.close()
+            except Exception:
+                pass
+
+
+def _worker_entry(
+    address: Any,
+    job: JobSpec,
+    worker: WorkerConfig,
+    hyperparams: Dict[str, Any],
+    static_members: Dict[str, List[str]],
+    program_cls: Optional[type],
+    barrier: Any,
+    result_q: Any,
+    barrier_timeout: float,
+    policy: Optional[RuntimePolicy] = None,
+    drop_ack: Any = None,
+) -> None:
+    """Entry point of a dedicated (one-worker) spawned process."""
+    _worker_body(
+        address, job, worker, hyperparams, static_members, program_cls,
+        barrier, result_q, barrier_timeout, policy, drop_ack,
+    )
+
+
+def _pool_host_entry(
+    address: Any,
+    job: JobSpec,
+    membership: Dict[Tuple[str, str], List[str]],
+    task_q: Any,
+    ack_q: Any,
+    result_q: Any,
+    barrier: Any,
+    barrier_timeout: float,
+    policy: Optional[RuntimePolicy],
+) -> None:
+    """Entry point of a recycled pool-host process.
+
+    The host pays its interpreter/import/jax start-up cost exactly once,
+    then serves logical-worker assignments from ``task_q`` until the driver
+    sends the ``None`` sentinel: each task ``(worker, hp_overrides,
+    program_cls, use_barrier)`` starts a ``_worker_body`` thread. Results
+    flow up the shared ``result_q`` exactly as from dedicated processes.
+
+    ``ack_q`` carries the driver's drop acknowledgements; a dispatcher
+    thread routes each acked worker id to that worker's local event (several
+    hosted workers can be mid-dropout at once, so a single shared event
+    would misdeliver). Hyperparameters arrive as per-worker *overrides* and
+    are merged over ``job.hyperparams`` here — the big shared entries (e.g.
+    ``init_weights``) cross the process boundary once per host, not once
+    per worker."""
+    acks: Dict[str, threading.Event] = {}
+    acks_lock = threading.Lock()
+
+    def _ack_loop() -> None:
+        while True:
+            try:
+                wid = ack_q.get()
+            except (EOFError, OSError):
+                return
+            if wid is None:
+                return
+            with acks_lock:
+                ev = acks.get(str(wid))
+            if ev is not None:
+                ev.set()
+
+    threading.Thread(target=_ack_loop, name="pool-host-ack", daemon=True).start()
+    while True:
+        try:
+            task = task_q.get()
+        except (EOFError, OSError):
+            return
+        if task is None:
+            return  # driver teardown sentinel
+        worker, overrides, program_cls, use_barrier = task
+        hp = dict(job.hyperparams)
+        hp.update(overrides or {})
+        static = {
+            ch: membership[(ch, group)] for ch, group in worker.groups.items()
+        }
+        ack = threading.Event()
+        with acks_lock:
+            acks[worker.worker_id] = ack
+        threading.Thread(
+            target=_worker_body,
+            args=(
+                address, job, worker, hp, static, program_cls,
+                barrier if use_barrier else None, result_q, barrier_timeout,
+                policy, ack,
+            ),
+            name=f"flame-{worker.worker_id}",
+            daemon=True,
+        ).start()
+
+
+def _rejoin_high_water(policy: RuntimePolicy) -> int:
+    """Standby-pool size: the high-water mark of concurrently-pending
+    re-joins. Each scheduled re-join contributes a ``[drop_at, rejoin_at)``
+    window during which a warm host must be on hand; a sweep over the window
+    edges gives the maximum overlap. Hosts run workers as threads, so this
+    is a warmth knob (how many re-joins can land without paying interpreter
+    start-up), never a correctness bound — disjoint windows share one host
+    where the old scheme parked one process per scheduled re-join."""
+    marks: List[Tuple[float, int]] = []
+    for wid, rejoin_at in policy.rejoins.items():
+        drop_at = float(policy.dropouts.get(wid, 0.0))
+        lo, hi = drop_at, max(float(rejoin_at), drop_at)
+        marks.append((lo, 1))
+        marks.append((hi, -1))
+    # at equal times the freed slot serves the newly-opened window
+    marks.sort(key=lambda m: (m[0], m[1]))
+    cur = peak = 0
+    for _, delta in marks:
+        cur += delta
+        peak = max(peak, cur)
+    return max(peak, 1 if policy.rejoins else 0)
+
+
+class _HostPool:
+    """Driver-side pool of recycled worker-host processes.
+
+    Each host (``_pool_host_entry``) is one OS process that pays its
+    start-up cost once, then runs any number of logical workers as threads
+    assigned over its private task queue. The launcher uses the pool two
+    ways:
+
+    * **whole-deployment pooling** (``pool_size=N``): every logical worker
+      of the job runs on one of N recycled hosts, so process start-up cost
+      is O(pool) instead of O(workers) — the knob that makes 1k-worker jobs
+      land with near-flat wall-clock (see ``benchmarks/bench_spawn.py``);
+    * **shared re-join standby pool** of the classic one-process-per-worker
+      deployment, sized by ``_rejoin_high_water`` instead of one pre-warmed
+      standby per scheduled re-join; a re-join becomes a task assignment to
+      a warm host (same latency class as the old parked-standby signal).
+
+    Assignment picks the least-loaded live host. Hosts are multi-threaded,
+    so pool size is a warmth/parallelism knob, never a correctness bound.
+    """
+
+    def __init__(
+        self,
+        launcher: "MultiprocLauncher",
+        address: Any,
+        result_q: Any,
+        barrier: Any,
+        barrier_timeout: float,
+        size: int,
+    ) -> None:
+        self._lock = threading.Lock()
+        self._hosts: List[Dict[str, Any]] = []
+        self._owner: Dict[str, Dict[str, Any]] = {}
+        for i in range(max(1, int(size))):
+            task_q = launcher._ctx.Queue()
+            ack_q = launcher._ctx.Queue()
+            proc = launcher._ctx.Process(
+                target=_pool_host_entry,
+                args=(
+                    address, launcher.job, launcher._membership, task_q,
+                    ack_q, result_q, barrier, barrier_timeout, launcher.policy,
+                ),
+                name=f"flame-pool-host-{i}",
+                daemon=True,
+            )
+            proc.start()
+            self._hosts.append(
+                {"proc": proc, "task_q": task_q, "ack_q": ack_q, "load": 0}
+            )
+
+    # ------------------------------------------------------------------ #
+    def assign(
+        self,
+        worker: WorkerConfig,
+        hp_overrides: Optional[Dict[str, Any]],
+        program_cls: Optional[type],
+        use_barrier: bool,
+    ) -> Any:
+        """Queue one logical worker onto the least-loaded live host; returns
+        the host process (the liveness handle crash detection watches)."""
+        with self._lock:
+            live = [h for h in self._hosts if h["proc"].is_alive()]
+            host = min(live or self._hosts, key=lambda h: h["load"])
+            host["load"] += 1
+            self._owner[worker.worker_id] = host
+        host["task_q"].put(
+            (worker, dict(hp_overrides or {}), program_cls, bool(use_barrier))
+        )
+        return host["proc"]
+
+    def owns(self, wid: str) -> bool:
+        return wid in self._owner
+
+    def procs(self) -> List[Any]:
+        with self._lock:
+            return [h["proc"] for h in self._hosts]
+
+    def ack(self, wid: str) -> None:
+        """Route a drop acknowledgement to the host running ``wid``."""
+        with self._lock:
+            host = self._owner.get(wid)
+        if host is not None:
+            host["ack_q"].put(wid)
+
+    def release(self, wid: str) -> None:
+        """A hosted worker reached a terminal state: free its load slot so
+        later assignments (re-joins) balance onto the emptiest host."""
+        with self._lock:
+            host = self._owner.pop(wid, None)
+            if host is not None:
+                host["load"] = max(0, host["load"] - 1)
+
+    def close(self) -> None:
+        with self._lock:
+            hosts, self._hosts = self._hosts, []
+            self._owner.clear()
+        for h in hosts:
+            # sentinel first: an idle host exits on its own; _reap then
+            # terminates anything still busy (or already-dead queues)
+            for q in (h["task_q"], h["ack_q"]):
+                try:
+                    q.put_nowait(None)
+                except Exception:
+                    pass
+        MultiprocLauncher._reap([h["proc"] for h in hosts])
+        for h in hosts:
+            for q in (h["task_q"], h["ack_q"]):
+                try:
+                    q.close()
+                except Exception:
+                    pass
 
 
 class MultiprocLauncher:
@@ -221,6 +478,15 @@ class MultiprocLauncher:
     — the same clock semantics as the in-process event runtime, which is
     what makes dropout/deadline schedules mean the same thing on both
     deployments.
+
+    Scale knobs (both pure deployment choices — seeded observables are
+    byte-identical with them on or off):
+
+    * ``pool_size``: run logical workers on this many recycled pool hosts
+      (``_HostPool``) instead of one OS process each.
+    * ``sharded``: partition the hub by the TAG's groupBy labels
+      (``ShardedTransportHub``); a TAG with no labels degrades to the
+      single hub.
     """
 
     def __init__(
@@ -233,6 +499,8 @@ class MultiprocLauncher:
         policy: Optional[RuntimePolicy] = None,
         start_method: str = "spawn",
         wall_clock: Optional[bool] = None,
+        pool_size: Optional[int] = None,
+        sharded: bool = False,
     ) -> None:
         self.job = job
         self.workers = expand(job, registry)
@@ -244,24 +512,40 @@ class MultiprocLauncher:
         self.wall_clock = (
             wall_clock if wall_clock is not None else not self.policy.is_event_driven
         )
+        self.pool_size = None if pool_size is None else max(1, int(pool_size))
+        self.sharded = bool(sharded)
+        self._shard_keys = (
+            sorted({g for c in job.tag.channels for g in c.group_by})
+            if self.sharded
+            else []
+        )
         # "spawn" keeps children clear of the driver's jax/thread state; the
         # override exists for hosts where spawn is unavailable
         self._ctx = multiprocessing.get_context(start_method)
         self._membership = static_membership(self.workers, job.tag)
 
     # ------------------------------------------------------------------ #
-    def _make_hub(self) -> TransportHub:
-        hub = TransportHub(wall_clock=self.wall_clock)
+    def _make_hub(self) -> Any:
+        """The job's broker fabric: one ``TransportHub``, or — when sharding
+        is requested and the TAG declares groupBy labels — a
+        ``ShardedTransportHub`` with one hub per label plus a root for
+        cross-shard channels. Both expose the same driver surface
+        (``worker_address``/``engine_transport``/``stats``/config)."""
+        if self._shard_keys:
+            hub: Any = ShardedTransportHub(
+                self._shard_keys, wall_clock=self.wall_clock
+            )
+        else:
+            hub = TransportHub(wall_clock=self.wall_clock)
         for c in self.job.tag.channels:
-            hub.backend.set_wire_dtype(c.name, c.wire_dtype)
+            hub.set_wire_dtype(c.name, c.wire_dtype)
         for (channel, worker), model in self.link_models.items():
-            hub.backend.set_link(channel, worker, model)
+            hub.set_link(channel, worker, model)
         return hub
 
     def _worker_args(
-        self, w: WorkerConfig, address: Tuple[str, int], barrier: Any,
-        result_q: Any, barrier_timeout: float, rejoin_event: Any = None,
-        drop_ack: Any = None,
+        self, w: WorkerConfig, address: Any, barrier: Any,
+        result_q: Any, barrier_timeout: float, drop_ack: Any = None,
     ) -> Tuple[Any, ...]:
         hp = dict(self.job.hyperparams)
         hp.update(self.per_worker_hyperparams.get(w.worker_id, {}))
@@ -271,19 +555,17 @@ class MultiprocLauncher:
         return (
             address, self.job, w, hp, static,
             self.program_overrides.get(w.role), barrier, result_q, barrier_timeout,
-            self.policy, rejoin_event, drop_ack,
+            self.policy, drop_ack,
         )
 
     def _spawn(
-        self, w: WorkerConfig, address: Tuple[str, int], barrier: Any,
-        result_q: Any, barrier_timeout: float, rejoin_event: Any = None,
-        drop_ack: Any = None,
+        self, w: WorkerConfig, address: Any, barrier: Any,
+        result_q: Any, barrier_timeout: float, drop_ack: Any = None,
     ) -> Any:
         p = self._ctx.Process(
             target=_worker_entry,
             args=self._worker_args(
-                w, address, barrier, result_q, barrier_timeout, rejoin_event,
-                drop_ack,
+                w, address, barrier, result_q, barrier_timeout, drop_ack,
             ),
             name=f"flame-{w.worker_id}",
             daemon=True,
@@ -317,14 +599,28 @@ class MultiprocLauncher:
         result_q = self._ctx.Queue()
         barrier = self._ctx.Barrier(len(self.workers))
         procs: Dict[str, Any] = {}
+        pool: Optional[_HostPool] = None
         programs: Dict[str, Any] = {}
         errors: Dict[str, BaseException] = {}
         deadline = time.monotonic() + timeout
         try:
-            for w in self.workers:
-                procs[w.worker_id] = self._spawn(
-                    w, hub.address, barrier, result_q, timeout
+            if self.pool_size is not None:
+                pool = _HostPool(
+                    self, hub.worker_address, result_q, barrier, timeout,
+                    min(self.pool_size, len(self.workers)),
                 )
+                for w in self.workers:
+                    procs[w.worker_id] = pool.assign(
+                        w,
+                        self.per_worker_hyperparams.get(w.worker_id, {}),
+                        self.program_overrides.get(w.role),
+                        use_barrier=True,
+                    )
+            else:
+                for w in self.workers:
+                    procs[w.worker_id] = self._spawn(
+                        w, hub.worker_address, barrier, result_q, timeout
+                    )
 
             # drain results before joining: a child blocks on its queue
             # feeder thread until the driver consumes its (possibly large)
@@ -397,7 +693,10 @@ class MultiprocLauncher:
                             "deadline (killed by the driver)"
                         ))
         finally:
-            self._reap(list(procs.values()))
+            if pool is not None:
+                pool.close()
+            else:
+                self._reap(list(procs.values()))
             result_q.close()
             hub.close()
 
@@ -410,7 +709,7 @@ class MultiprocLauncher:
         hub = self._make_hub()
         engine = EventEngine(
             self.policy, self.workers,
-            spec_of=self.job.tag.channel, transport=hub.backend,
+            spec_of=self.job.tag.channel, transport=hub.engine_transport,
         )
         supervisor = _ProcessSupervisor(self, hub, engine, timeout)
         try:
@@ -456,14 +755,17 @@ class MultiprocLauncher:
     # ------------------------------------------------------------------ #
     def _finalize(
         self,
-        hub: TransportHub,
+        hub: Any,
         programs: Dict[str, Any],
         errors: Dict[str, BaseException],
         dropped: Optional[Dict[str, float]] = None,
         events: Optional[List[Tuple[float, str, str]]] = None,
     ) -> JobResult:
+        # hub.stats merges across shards on a sharded fabric: each channel
+        # topic lives on exactly one hub, so the sums equal single-hub totals
+        stats = hub.stats
         channel_bytes = {
-            c.name: hub.backend.stats.get(f"bytes:{c.name}", 0.0)
+            c.name: stats.get(f"bytes:{c.name}", 0.0)
             for c in self.job.tag.channels
         }
         for w in self.workers:  # stubs for workers that returned nothing
@@ -484,14 +786,15 @@ class _ProcessSupervisor:
     """Driver-side supervision state for an event-driven process tree.
 
     Owns the result-queue pump (a daemon thread feeding worker outcomes to
-    the ``EventEngine``), the per-worker process table, the pre-warmed
-    re-join standbys, and the fast-fail teardown for workers that die
-    without reporting."""
+    the ``EventEngine``), the per-worker process table, the re-join standby
+    pool (or, with ``pool_size`` set, the whole host pool every worker runs
+    on), and the fast-fail teardown for workers that die without
+    reporting."""
 
     def __init__(
         self,
         launcher: MultiprocLauncher,
-        hub: TransportHub,
+        hub: Any,
         engine: EventEngine,
         timeout: float,
     ) -> None:
@@ -506,9 +809,18 @@ class _ProcessSupervisor:
         self.initial = initial
         self.barrier = launcher._ctx.Barrier(len(initial)) if initial else None
         self.procs: Dict[str, Any] = {}        # wid -> live/most-recent process
-        # wid -> (proc, rejoin_event, drop_ack) of the pre-warmed standby
-        self.standbys: Dict[str, Tuple[Any, Any, Any]] = {}
-        self.drop_acks: Dict[str, Any] = {}    # wid -> active process's ack
+        # whole-deployment host pool (pool_size) — every worker runs here
+        self.pool: Optional[_HostPool] = None
+        if launcher.pool_size is not None:
+            self.pool = _HostPool(
+                launcher, hub.worker_address, self.result_q, self.barrier,
+                timeout, min(launcher.pool_size, max(1, len(launcher.workers))),
+            )
+        # classic deployment's shared re-join standby pool (see
+        # prespawn_standbys); None when pooled — the pool hosts are the
+        # warm standbys already
+        self.standby_pool: Optional[_HostPool] = None
+        self.drop_acks: Dict[str, Any] = {}    # wid -> dedicated process's ack
         # wid -> engine re-join directive recorded at the "dropping" phase
         self._rejoin_at: Dict[str, Optional[float]] = {}
         self.programs: Dict[str, Any] = {}
@@ -523,42 +835,59 @@ class _ProcessSupervisor:
 
     # ------------------------------ spawn ------------------------------ #
     def prespawn_standbys(self) -> None:
-        """Pre-warm one standby process per scheduled re-join: it pays the
-        interpreter/import cost now (concurrently with the job) and parks on
-        an event, so a re-join lands milliseconds after the engine's
-        directive instead of a full process start-up later."""
-        for wid in self.launcher.policy.rejoins:
-            event = self.launcher._ctx.Event()
-            ack = self.launcher._ctx.Event()
-            proc = self.launcher._spawn(
-                self.by_id[wid], self.hub.address, None, self.result_q,
-                self.timeout, rejoin_event=event, drop_ack=ack,
-            )
-            self.standbys[wid] = (proc, event, ack)
+        """Pre-warm the shared re-join standby pool: ``_rejoin_high_water``
+        hosts pay their interpreter/import cost now (concurrently with the
+        job), so a re-join lands milliseconds after the engine's directive
+        instead of a full process start-up later. With whole-deployment
+        pooling there is nothing to do — every host is already warm."""
+        if self.pool is not None or not self.launcher.policy.rejoins:
+            return
+        self.standby_pool = _HostPool(
+            self.launcher, self.hub.worker_address, self.result_q, None,
+            self.timeout, _rejoin_high_water(self.launcher.policy),
+        )
+
+    def _assign(self, wid: str, pool: _HostPool, use_barrier: bool) -> None:
+        w = self.by_id[wid]
+        self.procs[wid] = pool.assign(
+            w,
+            self.launcher.per_worker_hyperparams.get(wid, {}),
+            self.launcher.program_overrides.get(w.role),
+            use_barrier=use_barrier,
+        )
 
     def spawn(self, wid: str) -> None:
+        """Engine arrival directive: start the logical worker — lazily, at
+        its arrival event, never earlier. Pooled: a task assignment to a
+        warm host; classic: a dedicated process spawn."""
+        if self.pool is not None:
+            self._assign(wid, self.pool, use_barrier=wid in self.initial)
+            return
         barrier = self.barrier if wid in self.initial else None
         ack = self.launcher._ctx.Event()
         self.drop_acks[wid] = ack
         self.procs[wid] = self.launcher._spawn(
-            self.by_id[wid], self.hub.address, barrier, self.result_q,
+            self.by_id[wid], self.hub.worker_address, barrier, self.result_q,
             self.timeout, drop_ack=ack,
         )
 
     def signal_rejoin(self, wid: str) -> None:
-        got = self.standbys.pop(wid, None)
-        if got is None:  # pragma: no cover - engine schedules one re-join max
-            raise RuntimeError(f"no re-join standby for worker {wid!r}")
-        proc, event, ack = got
-        if not proc.is_alive():
-            self._finish(wid, error=RuntimeError(
-                f"re-join standby for {wid!r} died before the re-join "
-                f"(exitcode={proc.exitcode})"
-            ))
-            return
-        self.procs[wid] = proc
-        self.drop_acks[wid] = ack  # the respawn can be poisoned later too
-        event.set()
+        pool = self.pool or self.standby_pool
+        if pool is None:  # pragma: no cover - engine re-joins scheduled wids
+            raise RuntimeError(f"no re-join standby pool for worker {wid!r}")
+        self._assign(wid, pool, use_barrier=False)
+
+    def _send_ack(self, wid: str) -> None:
+        """Deliver the driver's drop acknowledgement to wherever the worker
+        runs: its owning pool host's ack queue, or its dedicated process's
+        event."""
+        for pool in (self.pool, self.standby_pool):
+            if pool is not None and pool.owns(wid):
+                pool.ack(wid)
+                return
+        ack = self.drop_acks.get(wid)
+        if ack is not None:
+            ack.set()
 
     def kill(self, wid: str) -> None:
         """Engine kill directive for a dropped worker that will not re-join.
@@ -584,6 +913,9 @@ class _ProcessSupervisor:
             self.pending.discard(wid)
             if error is not None:
                 self.errors.setdefault(wid, error)
+        for pool in (self.pool, self.standby_pool):
+            if pool is not None:
+                pool.release(wid)
         self.done[wid].set()
 
     def _absorb(self, wid: str, status: str, payload: Any) -> None:
@@ -603,12 +935,15 @@ class _ProcessSupervisor:
             # before the worker leaves its channels, so no child ever sees
             # a limbo state (the ordering the engine documents)
             self._rejoin_at[wid] = self.engine.worker_dropped(wid, float(payload))
-            ack = self.drop_acks.get(wid)
-            if ack is not None:
-                ack.set()
+            self._send_ack(wid)
             return
         if status == "dropped":
             at, summary = payload
+            # the dropped worker's thread/process is settling; free its pool
+            # slot so a re-join assignment balances onto the emptiest host
+            for pool in (self.pool, self.standby_pool):
+                if pool is not None:
+                    pool.release(wid)
             # keep the dropped worker's last state visible (the threaded
             # runtime keeps the dropped program object); a successful re-join
             # run overwrites it with the respawned worker's final state
@@ -688,15 +1023,26 @@ class _ProcessSupervisor:
         self._stop.set()
         if self._pump_thread is not None:
             self._pump_thread.join(timeout=5.0)
-        procs = list(self.procs.values())
-        for proc, _event, _ack in self.standbys.values():
-            # an unused standby is parked on its re-join event and must NOT
-            # be woken (it would join a finished job) — terminate it outright
-            if proc.is_alive():
-                proc.terminate()
-            procs.append(proc)
-        self.standbys.clear()
-        MultiprocLauncher._reap(procs)
+        if self.pool is None:
+            # classic deployment: reap the dedicated worker processes. A
+            # re-joined worker's entry points at its standby-pool host —
+            # leave those to the pool close below, which sends the shutdown
+            # sentinel first instead of burning the reap join timeout on a
+            # host that is merely parked
+            hosts = (
+                {id(p) for p in self.standby_pool.procs()}
+                if self.standby_pool is not None
+                else set()
+            )
+            MultiprocLauncher._reap(
+                [p for p in self.procs.values() if p is not None and id(p) not in hosts]
+            )
+        for pool in (self.pool, self.standby_pool):
+            # an unused standby host is parked on its task queue and must
+            # never receive a worker of a finished job — close() sends the
+            # shutdown sentinel and reaps
+            if pool is not None:
+                pool.close()
         self.result_q.close()
 
 

@@ -215,6 +215,10 @@ class JobRecord:
     deployment: str = "inproc"
     policy: Optional[RuntimePolicy] = None
     run_timeout: float = 120.0
+    # deployment-specific runner knobs, forwarded verbatim to the selected
+    # JOB_RUNNERS entry. For "multiproc": ``pool_size`` (recycled worker-host
+    # processes) and ``sharded`` (one hub per groupBy label + root router).
+    deploy_options: Dict[str, Any] = dataclasses.field(default_factory=dict)
     result: Optional[JobResult] = None
     runner_thread: Optional[threading.Thread] = None
     runner_error: Optional[BaseException] = None
@@ -300,6 +304,7 @@ class Controller:
                     per_worker_hyperparams=record.per_worker_hyperparams or None,
                     program_overrides=record.program_overrides or None,
                     timeout=record.run_timeout,
+                    **record.deploy_options,
                 )
                 if record.state is not JobState.TERMINATED:
                     record.result = result
@@ -429,11 +434,14 @@ class APIServer:
         deployment: str = "inproc",
         policy: Optional[RuntimePolicy] = None,
         run_timeout: float = 120.0,
+        deploy_options: Optional[Dict[str, Any]] = None,
     ) -> str:
         """Submit a job. ``deployment`` picks where it runs ("inproc"
         threads or a "multiproc" process tree) and ``policy`` how its rounds
         lower (sync/deadline/async + dropout/re-join schedules) — both are
-        deployment details of the same TAG, never application logic."""
+        deployment details of the same TAG, never application logic.
+        ``deploy_options`` are runner knobs for the chosen deployment, e.g.
+        ``{"pool_size": 4, "sharded": True}`` for "multiproc"."""
         record = JobRecord(
             spec=spec,
             per_worker_hyperparams=dict(per_worker_hyperparams or {}),
@@ -443,6 +451,7 @@ class APIServer:
             deployment=deployment,
             policy=policy,
             run_timeout=run_timeout,
+            deploy_options=dict(deploy_options or {}),
         )
         self.controller.submit(record)
         return spec.job_id

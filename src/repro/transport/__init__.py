@@ -9,14 +9,30 @@ the process boundary:
   framing.
 * ``multiproc``  — a real multi-process transport: a ``TransportHub`` broker in
   the driver process and a ``MultiprocBackend`` client speaking the protocol
-  over local sockets from each worker process.
+  over local sockets from each worker process. For large topologies the hub
+  shards by the TAG's groupBy labels (``ShardedTransportHub`` — one hub per
+  group plus a root for cross-shard channels, the paper's per-group broker
+  model) with a ``ShardRouter`` client placing each channel end on its
+  owning shard.
 * ``conformance``— the shared transport-conformance suite every backend
   (inproc, mqtt-emu, multiproc, ...) must pass.
 
 The process-tree launcher that deploys an expanded TAG over this transport
 lives in ``repro.launch.spawn``.
 """
-from repro.transport.multiproc import MultiprocBackend, TransportHub
+from repro.transport.multiproc import (
+    MultiprocBackend,
+    ShardedTransportHub,
+    ShardRouter,
+    TransportHub,
+)
 from repro.transport.wire import decode, encode
 
-__all__ = ["MultiprocBackend", "TransportHub", "encode", "decode"]
+__all__ = [
+    "MultiprocBackend",
+    "ShardRouter",
+    "ShardedTransportHub",
+    "TransportHub",
+    "encode",
+    "decode",
+]

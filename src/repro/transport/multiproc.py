@@ -52,7 +52,15 @@ from repro.transport.wire import (
     send_obj,
 )
 
-__all__ = ["TransportHub", "MultiprocBackend"]
+__all__ = [
+    "MultiprocBackend",
+    "ShardRouter",
+    "ShardedTransportHub",
+    "TransportHub",
+    "hub_backend_factory",
+    "make_backend_factory",
+    "sharded_backend_factory",
+]
 
 
 # Ops safe to replay after an ambiguous connection fault: read-only queries,
@@ -129,6 +137,30 @@ class TransportHub:
     def address(self) -> Tuple[str, int]:
         host, port = self._sock.getsockname()[:2]
         return str(host), int(port)
+
+    # Driver-side fabric surface, mirrored by ``ShardedTransportHub`` so the
+    # launcher configures/observes either a single hub or a sharded fabric
+    # through one API: ``worker_address`` is what worker processes connect
+    # with (a plain address here, an address map for the sharded fabric) and
+    # ``engine_transport`` is what the EventEngine drives drop/poison/clock
+    # directives through.
+    @property
+    def worker_address(self) -> Tuple[str, int]:
+        return self.address
+
+    @property
+    def engine_transport(self) -> InprocBackend:
+        return self.backend
+
+    @property
+    def stats(self) -> Dict[str, float]:
+        return dict(self.backend.stats)
+
+    def set_wire_dtype(self, channel: str, dtype: str) -> None:
+        self.backend.set_wire_dtype(channel, dtype)
+
+    def set_link(self, channel: str, worker: str, model: LinkModel) -> None:
+        self.backend.set_link(channel, worker, model)
 
     def close(self) -> None:
         self._closed.set()
@@ -233,6 +265,148 @@ class TransportHub:
         if op in TRANSPORT_OPS:
             return getattr(be, op)(*args)
         raise RuntimeError(f"unknown transport op {op!r}")
+
+
+class ShardedTransportHub:
+    """Subtree-sharded broker fabric: one hub per groupBy label plus a root.
+
+    The paper's deployer provisions one MQTT broker per channel *group*
+    (§6.2), so a hierarchical TAG scales by partitioning its traffic across
+    brokers instead of funnelling every message through one. This is that
+    shape for the process deployment: each shard key — a groupBy label from
+    the TAG — gets its own ``TransportHub`` (own listening socket, own
+    mailboxes, own accept/serve threads), and a small **root** hub routes
+    everything no shard owns: channels without a groupBy partition (the
+    implicit ``default`` group) and therefore all cross-shard traffic, e.g.
+    the global channel of a hierarchical job.
+
+    Sharding is pure deployment: the routing key is the ``group`` argument
+    already present on every channel-scoped transport op, so roles and
+    ``ChannelEnd`` s are untouched. Because each (channel, group) topic lives
+    entirely on one hub, per-shard mailbox state needs no coordination —
+    exactly the property that makes the paper's per-group brokers composable.
+
+    Driver-side, this class exposes the same fabric surface as a single
+    ``TransportHub`` (``worker_address``/``engine_transport``/``stats``/
+    config setters) plus the ``EventEngine`` transport ops, which fan
+    worker-scoped directives out to every hub: a worker has ONE fabric-wide
+    clock/drop/poison state no matter how many shards it touches (the same
+    invariant ``ChannelManagerTransport`` maintains over per-channel
+    backends in the threaded runtime).
+    """
+
+    def __init__(
+        self,
+        shards: Sequence[str],
+        host: str = "127.0.0.1",
+        wall_clock: bool = True,
+    ) -> None:
+        self.root = TransportHub(
+            host=host,
+            wall_clock=wall_clock,
+            backend=InprocBackend("multiproc-hub-root", wall_clock=wall_clock),
+        )
+        self.shards: Dict[str, TransportHub] = {}
+        try:
+            for key in sorted(set(shards)):
+                self.shards[key] = TransportHub(
+                    host=host,
+                    wall_clock=wall_clock,
+                    backend=InprocBackend(
+                        f"multiproc-hub:{key}", wall_clock=wall_clock
+                    ),
+                )
+        except BaseException:
+            self.close()
+            raise
+
+    # ------------------------------------------------------------------ #
+    def hubs(self) -> List[TransportHub]:
+        return [self.root, *self.shards.values()]
+
+    @property
+    def addresses(self) -> Dict[str, Tuple[str, int]]:
+        """Shard key -> hub address; the root rides under key ``""``. This
+        map is what worker processes receive instead of a single address
+        (``ShardRouter`` consumes it)."""
+        out: Dict[str, Tuple[str, int]] = {"": self.root.address}
+        for key, hub in self.shards.items():
+            out[key] = hub.address
+        return out
+
+    @property
+    def worker_address(self) -> Dict[str, Tuple[str, int]]:
+        return self.addresses
+
+    @property
+    def engine_transport(self) -> "ShardedTransportHub":
+        return self
+
+    def _backend_for(self, group: str) -> InprocBackend:
+        hub = self.shards.get(group, self.root)
+        return hub.backend
+
+    # ------------- EventEngine transport ops (driver-side) -------------- #
+    # worker-scoped: fan fabric-wide so a drop/poison/clock directive is
+    # visible on whichever shard the worker touches next
+    def set_drop(self, worker: str, at: float) -> None:
+        for hub in self.hubs():
+            hub.backend.set_drop(worker, at)
+
+    def clear_drop(self, worker: str) -> None:
+        for hub in self.hubs():
+            hub.backend.clear_drop(worker)
+
+    def poison(self, worker: str, at: float) -> None:
+        for hub in self.hubs():
+            hub.backend.poison(worker, at)
+
+    def set_clock(self, worker: str, at: float) -> None:
+        for hub in self.hubs():
+            hub.backend.set_clock(worker, at)
+
+    def now(self, worker: str) -> float:
+        return max(hub.backend.now(worker) for hub in self.hubs())
+
+    # channel-scoped: route to the owning shard
+    def peers(self, channel: str, group: str, me: str) -> List[str]:
+        return self._backend_for(group).peers(channel, group, me)
+
+    # ------------------- driver configuration / stats ------------------- #
+    def set_wire_dtype(self, channel: str, dtype: str) -> None:
+        # a channel's groups may live on different shards; dtype is a
+        # per-channel property, so set it everywhere the channel could land
+        for hub in self.hubs():
+            hub.backend.set_wire_dtype(channel, dtype)
+
+    def set_link(self, channel: str, worker: str, model: LinkModel) -> None:
+        for hub in self.hubs():
+            hub.backend.set_link(channel, worker, model)
+
+    @property
+    def stats(self) -> Dict[str, float]:
+        """Fabric-wide accounting: each (channel, group) topic is hosted by
+        exactly one hub, so summing per-key across hubs reproduces the
+        single-hub totals bit-for-bit."""
+        out: Dict[str, float] = {}
+        for hub in self.hubs():
+            for k, v in hub.backend.stats.items():
+                out[k] = out.get(k, 0.0) + float(v)
+        return out
+
+    # ------------------------------------------------------------------ #
+    def close(self) -> None:
+        for hub in self.hubs():
+            try:
+                hub.close()
+            except OSError:  # pragma: no cover - teardown best-effort
+                pass
+
+    def __enter__(self) -> "ShardedTransportHub":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()
 
 
 class MultiprocBackend:
@@ -475,6 +649,187 @@ def hub_backend_factory(address: Tuple[str, int]) -> Callable[[Any], MultiprocBa
     split)."""
     client = MultiprocBackend(address)
     return lambda spec: client
+
+
+class ShardRouter:
+    """``TransportBackend`` client over a sharded hub fabric.
+
+    Holds one ``MultiprocBackend`` per hub in the fabric and routes each
+    operation by its scope:
+
+    * **channel-scoped** ops (join/leave/peers, the send/recv family, peek,
+      earliest) carry a ``group`` argument — they go to the hub owning that
+      group's shard; a group no shard owns (including the implicit
+      ``default``) goes to the root hub. This is how ``ChannelManager`` ends
+      land on the owning shard without any change to role code: the end's
+      group IS the routing key.
+    * **worker-scoped** failure/clock writes (set_drop/clear_drop/poison,
+      set_clock) fan out to every hub: the worker keeps one fabric-wide
+      clock and drop state. ``now`` reads the max across hubs (each hub's
+      clock is a lower bound on the worker's fabric time); ``advance`` first
+      levels every hub at that max, then steps them all, so the hub-side
+      dropout check fires against the same schedule a single hub would
+      apply. Reads that the driver maintains fabric-wide (``drop_time``,
+      ``check_poison``) are answered by the root alone.
+    * **channel config** (set_link/set_wire_dtype/set_codec) fans to every
+      hub, since different groups of one channel may live on different
+      shards. The per-link codec state a stateful ``WireCodec`` keeps is
+      keyed by (channel, group, src, dst) inside each shard client — and a
+      link's group pins it to one shard, so that state never splits.
+    """
+
+    def __init__(
+        self, addresses: Dict[str, Tuple[str, int]], name: str = "multiproc"
+    ) -> None:
+        self.name = name
+        addrs = {str(k): (str(v[0]), int(v[1])) for k, v in addresses.items()}
+        if "" not in addrs:
+            raise ValueError(
+                'sharded address map needs a root hub under key ""'
+            )
+        self._root = MultiprocBackend(addrs.pop(""), name=name)
+        self._shards = {
+            key: MultiprocBackend(addr, name=name)
+            for key, addr in sorted(addrs.items())
+        }
+        self._all: List[MultiprocBackend] = [self._root, *self._shards.values()]
+
+    def _be(self, group: str) -> MultiprocBackend:
+        return self._shards.get(group, self._root)
+
+    # --------------------------- membership --------------------------- #
+    def join(self, channel: str, group: str, worker: str) -> None:
+        self._be(group).join(channel, group, worker)
+
+    def leave(self, channel: str, group: str, worker: str) -> None:
+        self._be(group).leave(channel, group, worker)
+
+    def peers(self, channel: str, group: str, me: str) -> List[str]:
+        return self._be(group).peers(channel, group, me)
+
+    # ---------------------------- messaging --------------------------- #
+    def send(self, channel: str, group: str, src: str, dst: str, payload: Any) -> None:
+        self._be(group).send(channel, group, src, dst, payload)
+
+    def recv(
+        self, channel: str, group: str, me: str, end: str, timeout: Optional[float]
+    ) -> Any:
+        return self._be(group).recv(channel, group, me, end, timeout)
+
+    def recv_any(
+        self,
+        channel: str,
+        group: str,
+        me: str,
+        ends: Sequence[str],
+        timeout: Optional[float],
+        advance: bool = True,
+    ) -> Tuple[str, Any, float]:
+        return self._be(group).recv_any(channel, group, me, ends, timeout, advance)
+
+    def recv_fifo(
+        self,
+        channel: str,
+        group: str,
+        me: str,
+        ends: Sequence[str],
+        timeout: Optional[float],
+    ) -> Iterable[Tuple[str, Any]]:
+        return self._be(group).recv_fifo(channel, group, me, ends, timeout)
+
+    def peek(self, channel: str, group: str, me: str, end: str) -> Optional[Any]:
+        return self._be(group).peek(channel, group, me, end)
+
+    def earliest(
+        self, channel: str, group: str, me: str, ends: Sequence[str]
+    ) -> Optional[Tuple[float, str]]:
+        return self._be(group).earliest(channel, group, me, ends)
+
+    # ------------------- failure emulation / cancel -------------------- #
+    def set_drop(self, worker: str, at: float) -> None:
+        for be in self._all:
+            be.set_drop(worker, at)
+
+    def clear_drop(self, worker: str) -> None:
+        for be in self._all:
+            be.clear_drop(worker)
+
+    def drop_time(self, worker: str) -> Optional[float]:
+        # the driver writes drop schedules fabric-wide; any hub answers
+        return self._root.drop_time(worker)
+
+    def poison(self, worker: str, at: float) -> None:
+        for be in self._all:
+            be.poison(worker, at)
+
+    def check_poison(self, worker: str) -> None:
+        self._root.check_poison(worker)
+
+    # ------------------------- configuration -------------------------- #
+    def set_link(self, channel: str, worker: str, model: LinkModel) -> None:
+        for be in self._all:
+            be.set_link(channel, worker, model)
+
+    def set_wire_dtype(self, channel: str, dtype: str) -> None:
+        for be in self._all:
+            be.set_wire_dtype(channel, dtype)
+
+    def set_codec(self, channel: str, codec: str) -> None:
+        for be in self._all:
+            be.set_codec(channel, codec)
+
+    def link(self, channel: str, worker: str) -> LinkModel:
+        return self._root.link(channel, worker)
+
+    # ----------------------------- clocks ------------------------------ #
+    def now(self, worker: str) -> float:
+        return max(be.now(worker) for be in self._all)
+
+    def advance(self, worker: str, seconds: float) -> None:
+        # level every hub at the fabric clock, then step them all: the
+        # drop check inside each hub's advance then runs against the same
+        # (clock + seconds) a single hub would have checked, and the first
+        # hub to cross the schedule raises WorkerDropped for the role
+        t = self.now(worker)
+        for be in self._all:
+            be.set_clock(worker, t)
+        for be in self._all:
+            be.advance(worker, seconds)
+
+    def set_clock(self, worker: str, at: float) -> None:
+        for be in self._all:
+            be.set_clock(worker, at)
+
+    # ------------------------------ stats ------------------------------ #
+    @property
+    def stats(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for be in self._all:
+            for k, v in be.stats.items():
+                out[k] = out.get(k, 0.0) + float(v)
+        return out
+
+    def close(self) -> None:
+        for be in self._all:
+            be.close()
+
+
+def sharded_backend_factory(
+    addresses: Dict[str, Tuple[str, int]],
+) -> Callable[[Any], ShardRouter]:
+    """``hub_backend_factory``'s sharded twin: every channel spec shares one
+    ``ShardRouter``, which places each end on its group's owning shard."""
+    client = ShardRouter(addresses)
+    return lambda spec: client
+
+
+def make_backend_factory(address: Any) -> Callable[[Any], Any]:
+    """Worker-side dispatch for the driver/worker split: a plain
+    ``(host, port)`` address yields a single-hub client factory; a shard
+    address map (``ShardedTransportHub.addresses``) yields a routing one."""
+    if isinstance(address, dict):
+        return sharded_backend_factory(address)
+    return hub_backend_factory((str(address[0]), int(address[1])))
 
 
 class LoopbackMultiprocBackend(MultiprocBackend):

@@ -1,0 +1,179 @@
+"""Scale-path equivalence: pooled hosts + sharded hubs over real processes.
+
+``pool_size`` (recycled worker-host processes) and ``sharded`` (one hub per
+groupBy label plus a root router) are pure deployment knobs: a seeded job —
+dropout and re-join schedule included — must produce byte-identical
+observables to the classic one-process-per-worker, single-hub deployment.
+
+Marked ``multiproc``: CI runs these in a dedicated job with a hard timeout.
+Schedules follow the test_multiproc_policy recipe: ordering is forced by
+virtual times, so wall-clock scheduling noise cannot change the compared
+observables.
+"""
+import numpy as np
+import pytest
+
+from repro.core.expansion import JobSpec
+from repro.core.runtime import RuntimePolicy
+from repro.core.tag import DatasetSpec
+from repro.core.topologies import classical_fl, hierarchical_fl
+from repro.launch.spawn import _rejoin_high_water, run_job_multiproc
+from repro.transport.conformance import SeededSGDTrainer  # noqa: F401 - spawn target
+
+pytestmark = pytest.mark.multiproc
+
+_RNG = np.random.default_rng(11)
+W0 = {
+    "w": (0.01 * _RNG.normal(size=(32, 10))).astype(np.float32),
+    "b": np.zeros((10,), np.float32),
+}
+
+
+def _hier_job(rounds=2):
+    tag = hierarchical_fl(
+        groups=("west", "east"),
+        dataset_groups={"west": ("d0", "d1"), "east": ("d2", "d3")},
+        trainer_program="repro.transport.conformance.SeededSGDTrainer",
+    )
+    return JobSpec(
+        tag=tag,
+        datasets=tuple(DatasetSpec(name=f"d{i}") for i in range(4)),
+        hyperparams={"rounds": rounds, "init_weights": W0},
+    )
+
+
+def _grouped_job(rounds=2):
+    """Grouped *flat* topology: one deadline tier (so participation is
+    forced by virtual times, deterministically), but the param channel spans
+    west/east/default groups — three hub shards plus the root when
+    ``sharded=True``."""
+    tag = classical_fl(
+        groups=("west", "east"),
+        trainer_program="repro.transport.conformance.SeededSGDTrainer",
+    )
+    return JobSpec(
+        tag=tag,
+        datasets=tuple(DatasetSpec(name=f"d{i}") for i in range(4)),
+        hyperparams={"rounds": rounds, "init_weights": W0},
+    )
+
+
+def _observables(res):
+    glob = res.program("global-aggregator-0")
+    return {
+        "participation": [
+            (
+                e["round"],
+                list(e["included"]),
+                list(e["excluded"]),
+                list(e["missing"]),
+            )
+            for e in glob.participation_log
+        ],
+        "dropped": dict(res.dropped),
+        "events": list(res.events),
+        "channel_bytes": dict(res.channel_bytes),
+        "weights": np.asarray(res.global_weights()["w"]).tobytes(),
+    }
+
+
+class TestPooledShardedEquivalence:
+    def test_rejoin_job_matches_single_hub_bytewise(self, assert_children_reaped):
+        """A grouped deadline job with a trainer dropout + re-join: the
+        pooled + sharded deployment (2 recycled hosts, one hub per group
+        plus a root) produces byte-identical observables to the classic
+        single-hub process tree — participation sets, lifecycle events,
+        per-channel wire accounting and global weights. The merged shard
+        stats equal the single-hub totals because every (channel, group)
+        topic lives on exactly one shard."""
+        pol = RuntimePolicy(
+            mode="deadline", deadline=10.0, grace=4.0,
+            dropouts={"trainer-2": 0.5}, rejoins={"trainer-2": 1.5},
+        )
+        per_worker = {f"trainer-{i}": {"compute_time": 1.0} for i in range(4)}
+        kw = dict(policy=pol, per_worker_hyperparams=per_worker)
+        base = run_job_multiproc(_grouped_job(), timeout=180, **kw)
+        assert not base.errors, base.errors
+        ps = run_job_multiproc(
+            _grouped_job(), timeout=180, pool_size=2, sharded=True, **kw
+        )
+        assert not ps.errors, ps.errors
+        # the schedule actually bit, over the pooled+sharded deployment too:
+        # dropped at 0.5 (< compute_time) => misses round 0, back for round 1
+        assert ps.dropped == {"trainer-2": 0.5}
+        assert (1.5, "rejoin", "trainer-2") in ps.events
+        obs = _observables(ps)
+        assert obs["participation"][0][3] == ["trainer-2"]  # missing round 0
+        assert "trainer-2" in obs["participation"][1][1]  # included round 1
+        assert _observables(base) == obs
+        # pool hosts and shard hubs are torn down, not leaked
+        assert_children_reaped()
+
+    def test_sync_pooled_sharded_weights_match(self):
+        """Seeded sync H-FL with no policy at all: pooled + sharded matches
+        the single-hub deployment's global weights and per-channel wire
+        bytes exactly."""
+        base = run_job_multiproc(_hier_job(), timeout=120)
+        assert not base.errors, base.errors
+        ps = run_job_multiproc(
+            _hier_job(), timeout=120, pool_size=2, sharded=True
+        )
+        assert not ps.errors, ps.errors
+        assert (
+            np.asarray(base.global_weights()["w"]).tobytes()
+            == np.asarray(ps.global_weights()["w"]).tobytes()
+        )
+        assert base.channel_bytes == ps.channel_bytes
+
+
+class TestDeployOptionsThroughControlPlane:
+    def test_create_job_forwards_pool_and_shard_knobs(self):
+        """``APIServer.create_job(deploy_options=...)`` forwards runner knobs
+        verbatim to the selected deployment: a multiproc job runs pooled and
+        sharded without the caller touching the spawner directly."""
+        from repro.core.registry import ComputeSpec
+        from repro.mgmt.plane import APIServer, InprocDeployer, JobState
+
+        api = APIServer()
+        api.register_compute(InprocDeployer(ComputeSpec("c0", realm="default")))
+        job = _hier_job()
+        for d in job.datasets:
+            api.register_dataset(d)
+        job_id = api.create_job(
+            job,
+            deployment="multiproc",
+            deploy_options={"pool_size": 2, "sharded": True},
+            run_timeout=120.0,
+        )
+        api.start_job(job_id)
+        state = api.wait_job(job_id, timeout=120)
+        assert state == JobState.COMPLETED
+        rec = api.job(job_id)
+        assert rec.result is not None and not rec.result.errors
+        base = run_job_multiproc(_hier_job(), timeout=120)
+        assert (
+            np.asarray(rec.result.global_weights()["w"]).tobytes()
+            == np.asarray(base.global_weights()["w"]).tobytes()
+        )
+
+
+class TestStandbyPoolSizing:
+    """The shared re-join standby pool is sized by the concurrent-dropout
+    high-water mark, not one pre-warmed process per scheduled re-join."""
+
+    def test_disjoint_windows_share_one_host(self):
+        pol = RuntimePolicy(
+            mode="deadline", deadline=5.0, grace=1.0,
+            dropouts={"a-0": 1.0, "b-0": 4.0, "c-0": 2.0},
+            rejoins={"a-0": 2.0, "b-0": 5.0, "c-0": 3.5},
+        )
+        # windows [1,2) [2,3.5) [4,5) never overlap: one host serves all
+        assert _rejoin_high_water(pol) == 1
+
+    def test_overlapping_windows_add_hosts(self):
+        pol = RuntimePolicy(
+            mode="deadline", deadline=5.0, grace=1.0,
+            dropouts={"a-0": 1.0, "b-0": 1.5},
+            rejoins={"a-0": 3.0, "b-0": 3.5},
+        )
+        assert _rejoin_high_water(pol) == 2

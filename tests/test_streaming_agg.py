@@ -1,0 +1,130 @@
+"""Streaming aggregation: O(1) server memory, bit-identical to batched.
+
+The aggregator roles fold arriving updates one at a time through
+``StreamingMean`` / ``ServerStrategy.accumulate_stream`` instead of
+buffering every client tree and folding at round close. These tests pin the
+two invariants the docs advertise (docs/ARCHITECTURE.md):
+
+* **bit-identity** — for the same fold order, the streaming fold executes
+  the exact IEEE op sequence of the batched path (scale each update, add
+  into the accumulator, divide once by the total), so results match the
+  buffered ``weighted_mean`` / ``accumulate_batch`` byte for byte, on
+  ragged pytrees included;
+* **O(1) server memory** — the peak number of client update trees held at
+  once is 1 regardless of client count (``peak_buffered``).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.expansion import JobSpec
+from repro.core.roles import StreamingMean, weighted_mean
+from repro.core.runtime import run_job
+from repro.core.tag import DatasetSpec
+from repro.core.topologies import classical_fl
+from repro.fl.strategies import FedAsync, FedBuff
+
+_RNG = np.random.default_rng(17)
+W0 = {
+    "w": (0.01 * _RNG.normal(size=(32, 10))).astype(np.float32),
+    "b": np.zeros((10,), np.float32),
+}
+
+
+def _ragged_tree(rng, scale=1.0):
+    """A deliberately ragged pytree: mixed ranks, odd sizes, nested lists."""
+    return {
+        "w": (scale * rng.normal(size=(33, 7))).astype(np.float32),
+        "b": (scale * rng.normal(size=(7,))).astype(np.float32),
+        "blocks": [
+            (scale * rng.normal(size=(5, 2, 2))).astype(np.float32),
+            (scale * rng.normal(size=(11,))).astype(np.float32),
+        ],
+    }
+
+
+def _leaves_bytes(tree):
+    return [np.asarray(x).tobytes() for x in jax.tree_util.tree_leaves(tree)]
+
+
+class TestStreamingMeanMatchesBatched:
+    @pytest.mark.parametrize("n_clients", [1, 3, 17])
+    def test_bitwise_equal_to_weighted_mean(self, n_clients):
+        rng = np.random.default_rng(5 + n_clients)
+        updates = [
+            (_ragged_tree(rng), float(rng.integers(1, 9)))
+            for _ in range(n_clients)
+        ]
+        batched, total_batched = weighted_mean(updates)
+        acc = StreamingMean()
+        for tree, n in updates:
+            acc.fold(tree, n)
+        streamed, total_streamed = acc.finalize()
+        assert total_batched == total_streamed
+        assert _leaves_bytes(batched) == _leaves_bytes(streamed)
+        # O(1): one in-flight tree no matter how many clients were folded
+        assert acc.peak_buffered == 1
+        assert acc.count == n_clients
+
+    def test_fused_matches_sequential_bitwise(self):
+        """The jitted per-update scale/add pair (the kernel's exact-mode
+        split, which forbids FMA contraction) must be byte-identical to the
+        eager numpy fold in the same order."""
+        rng = np.random.default_rng(9)
+        updates = [(_ragged_tree(rng), float(i + 1)) for i in range(6)]
+        seq = StreamingMean(fused=False)
+        fused = StreamingMean(fused=True)
+        for tree, n in updates:
+            seq.fold(tree, n)
+            fused.fold(tree, n)
+        seq_mean, seq_total = seq.finalize()
+        fused_mean, fused_total = fused.finalize()
+        assert seq_total == fused_total
+        assert _leaves_bytes(seq_mean) == _leaves_bytes(fused_mean)
+
+    def test_empty_and_zero_weight_finalize_to_none(self):
+        acc = StreamingMean()
+        assert acc.finalize() == (None, 0.0)
+        acc.fold({"w": np.ones((2,), np.float32)}, 0.0)
+        assert acc.finalize() == (None, 0.0)
+
+
+class TestStrategyStreamMatchesBatch:
+    @pytest.mark.parametrize("strategy", [FedBuff(buffer_size=8), FedAsync()])
+    def test_accumulate_stream_equals_accumulate_batch(self, strategy):
+        rng = np.random.default_rng(23)
+        deltas = [_ragged_tree(rng, scale=0.1) for _ in range(5)]
+        staleness = [0, 2, 1, 4, 0]
+        params = _ragged_tree(np.random.default_rng(0))
+        batch_state = strategy.accumulate_batch(
+            strategy.init(params), deltas, staleness
+        )
+        stream_state = strategy.init(params)
+        for delta, s in zip(deltas, staleness):
+            stream_state = strategy.accumulate_stream(stream_state, delta, s)
+        assert int(batch_state["count"]) == int(stream_state["count"]) == 5
+        assert _leaves_bytes(batch_state["acc"]) == _leaves_bytes(
+            stream_state["acc"]
+        )
+
+
+class TestServerPeakBuffered:
+    @pytest.mark.parametrize("n_clients", [2, 6])
+    def test_sync_aggregator_peak_is_one(self, n_clients):
+        """End-to-end: the sync global aggregator streams per-source in
+        sorted-src order, so its server-side peak buffered-tree count is 1
+        regardless of how many trainers report."""
+        job = JobSpec(
+            tag=classical_fl(
+                trainer_program="repro.transport.conformance.SeededSGDTrainer"
+            ),
+            datasets=tuple(DatasetSpec(name=f"d{i}") for i in range(n_clients)),
+            hyperparams={"rounds": 2, "init_weights": W0},
+        )
+        res = run_job(job, timeout=60)
+        assert not res.errors, res.errors
+        glob = res.program("global-aggregator-0")
+        assert glob.peak_buffered == 1
+        assert not np.array_equal(
+            np.asarray(res.global_weights()["w"]), W0["w"]
+        )
