@@ -1,0 +1,74 @@
+"""Vertical FL convergence vs rounds — the latency-dominated protocol.
+
+The vertical-split protocol exchanges per-batch activations and gradients
+instead of model-sized weight blobs: per round it moves
+``steps * parties * 2`` small messages over the activation channel. This
+bench tracks the head's training-loss trajectory against rounds and the
+wire shape (messages vs bytes per round), the numbers that characterise a
+latency-bound protocol.
+
+Row schema (``results["vertical"]["rows"]``): ``rounds``, ``parties``,
+``final_loss``, ``first_loss``, ``msgs_per_round``, ``bytes_per_round``,
+``wall_s`` + the standard ``backend`` stamp.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core.expansion import JobSpec
+from repro.core.runtime import run_job
+from repro.core.tag import DatasetSpec
+
+from benchmarks.common import result_meta
+
+PARTIES = 3
+
+
+def _run_once(rounds: int, parties: int = PARTIES) -> Dict[str, object]:
+    from repro.core.topologies import vertical_fl
+
+    job = JobSpec(
+        tag=vertical_fl(),
+        datasets=tuple(DatasetSpec(name=f"d{i}") for i in range(parties)),
+        hyperparams={"rounds": rounds, "vertical_steps": 4},
+    )
+    t0 = time.time()
+    res = run_job(job, timeout=120)
+    wall = time.time() - t0
+    assert not res.errors, res.errors
+    head = res.program("head-0")
+    losses = [m["vertical_loss"] for m in head.metrics if "vertical_loss" in m]
+    assert len(losses) == rounds
+    chans = head.ctx.channels
+    return result_meta(
+        rounds=rounds,
+        parties=parties,
+        first_loss=losses[0],
+        final_loss=losses[-1],
+        loss_trace=losses,
+        msgs_per_round=chans.total_msgs("activation-channel") / rounds,
+        bytes_per_round=chans.total_bytes("activation-channel") / rounds,
+        wall_s=wall,
+    )
+
+
+def run(smoke: bool = False) -> Dict[str, object]:
+    sweep = (2, 4) if smoke else (2, 4, 8, 16)
+    rows: List[Dict[str, object]] = []
+    print(f"{'rounds':>7} {'first_loss':>11} {'final_loss':>11} "
+          f"{'msgs/round':>11} {'bytes/round':>12}")
+    for rounds in sweep:
+        row = _run_once(rounds)
+        rows.append(row)
+        print(f"{rounds:>7} {row['first_loss']:>11.4f} {row['final_loss']:>11.4f} "
+              f"{row['msgs_per_round']:>11.1f} {row['bytes_per_round']:>12.0f}")
+    # convergence sanity: more rounds, lower loss; and every run improves
+    for row in rows:
+        assert row["final_loss"] < row["first_loss"], row
+    assert rows[-1]["final_loss"] < rows[0]["final_loss"], rows
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run(smoke=True)

@@ -73,6 +73,20 @@ def main(argv=None):
         results["spawn"] = bench_spawn.run(smoke=True)
 
         print("=" * 72)
+        print("Smoke — vertical FL: loss vs rounds (latency-dominated protocol)")
+        print("=" * 72)
+        from benchmarks import bench_vertical
+
+        results["vertical"] = bench_vertical.run(smoke=True)
+
+        print("=" * 72)
+        print("Smoke — gossip ring: accuracy vs rounds (raw + top-k links)")
+        print("=" * 72)
+        from benchmarks import bench_gossip
+
+        results["gossip"] = bench_gossip.run(smoke=True)
+
+        print("=" * 72)
         print(f"smoke benchmarks passed in {time.time()-t0:.1f}s")
         if args.out:
             with open(args.out, "w") as f:
@@ -141,6 +155,20 @@ def main(argv=None):
     from benchmarks import bench_spawn
 
     results["spawn"] = bench_spawn.run()
+
+    print("=" * 72)
+    print("Vertical FL — loss vs rounds (latency-dominated protocol)")
+    print("=" * 72)
+    from benchmarks import bench_vertical
+
+    results["vertical"] = bench_vertical.run()
+
+    print("=" * 72)
+    print("Gossip ring — accuracy vs rounds (raw + top-k links)")
+    print("=" * 72)
+    from benchmarks import bench_gossip
+
+    results["gossip"] = bench_gossip.run()
 
     import os
 

@@ -1,0 +1,89 @@
+"""Serverless gossip ring: neighbor averaging with per-link top-k compression.
+
+No aggregator anywhere: each trainer runs local SGD, then the ``gossip-avg``
+round protocol averages its model with its two ring neighbors. The protocol
+rewrites the trainer's tasklet chain at compose time (drop ``fetch``, swap
+``upload`` for ``gossip``), so the stock ``Trainer`` role works unmodified.
+Links optionally carry the ``topk`` error-feedback codec — gossip is where
+per-link compression economics matter most.
+
+Run:  PYTHONPATH=src:. python examples/gossip_ring.py
+"""
+import numpy as np
+
+from repro.core.expansion import JobSpec
+from repro.core.roles import Trainer
+from repro.core.runtime import run_job
+from repro.core.tag import DatasetSpec
+from repro.core.topologies import gossip_fl
+
+N, ROUNDS = 4, 5
+FEATURES, CLASSES = 16, 5
+
+
+def _softmax(z):
+    z = z - z.max(axis=1, keepdims=True)
+    e = np.exp(z)
+    return e / e.sum(axis=1, keepdims=True)
+
+
+class SGDTrainer(Trainer):
+    """Standard horizontal trainer — gossip needs nothing special from it."""
+
+    def load_data(self):
+        rng = np.random.default_rng(abs(hash(self.ctx.worker.dataset)) % 2**32)
+        w_true = np.random.default_rng(0).normal(size=(FEATURES, CLASSES))
+        self.x = rng.normal(size=(128, FEATURES)).astype(np.float32)
+        self.y = (self.x @ w_true).argmax(axis=1)
+        self.num_samples = len(self.x)
+
+    def train(self):
+        if self.weights is None:
+            return
+        w, b = self.weights["w"].copy(), self.weights["b"].copy()
+        onehot = np.eye(CLASSES, dtype=np.float32)[self.y]
+        g = (_softmax(self.x @ w + b) - onehot) / len(self.x)
+        self.weights = {"w": w - 0.5 * (self.x.T @ g), "b": b - 0.5 * g.sum(axis=0)}
+
+
+def accuracy(weights) -> float:
+    rng = np.random.default_rng(123)
+    w_true = np.random.default_rng(0).normal(size=(FEATURES, CLASSES))
+    x = rng.normal(size=(1024, FEATURES)).astype(np.float32)
+    y = (x @ w_true).argmax(axis=1)
+    pred = (x @ weights["w"] + weights["b"]).argmax(axis=1)
+    return float((pred == y).mean())
+
+
+def run_ring(codec: str):
+    job = JobSpec(
+        tag=gossip_fl(backend="inproc", codec=codec),
+        datasets=tuple(DatasetSpec(name=f"edge-{i}") for i in range(N)),
+        hyperparams={
+            "rounds": ROUNDS,
+            "init_weights": {
+                "w": np.zeros((FEATURES, CLASSES), np.float32),
+                "b": np.zeros((CLASSES,), np.float32),
+            },
+        },
+    )
+    res = run_job(job, program_overrides={"trainer": SGDTrainer}, timeout=120)
+    assert not res.errors, res.errors
+    accs = [accuracy(p.weights) for p in res.programs.values()]
+    some = next(iter(res.programs.values()))
+    gbytes = some.ctx.channels.total_bytes("gossip-channel")
+    return accs, gbytes
+
+
+def main():
+    print(f"{'codec':>9} | {'mean acc':>8} | {'spread':>7} | {'link bytes':>10}")
+    for codec in ("", "topk0.25"):
+        accs, gbytes = run_ring(codec)
+        mean, spread = float(np.mean(accs)), float(np.max(accs) - np.min(accs))
+        print(f"{codec or 'raw':>9} | {mean:8.3f} | {spread:7.4f} | {gbytes:>10}")
+        assert mean > 0.5, f"ring failed to learn (acc={mean:.3f})"
+    print("gossip_ring OK — aggregator-free averaging over a ring TAG")
+
+
+if __name__ == "__main__":
+    main()

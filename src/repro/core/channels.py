@@ -788,6 +788,12 @@ class ChannelManager:
     def total_bytes(self, channel: str) -> float:
         return self._backends[channel].stats.get(f"bytes:{channel}", 0.0)
 
+    def total_msgs(self, channel: str) -> int:
+        """Messages moved over ``channel`` — the latency-dominated protocols
+        (vertical per-batch activation exchange) are characterised by message
+        count, not byte volume."""
+        return int(self._backends[channel].stats.get(f"msgs:{channel}", 0))
+
     def channel_stats(self, channel: str) -> Dict[str, float]:
         """Per-channel wire accounting: moved bytes/messages plus — on coded
         channels — the raw (pre-codec) bytes and the achieved compression

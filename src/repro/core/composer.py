@@ -207,6 +207,14 @@ class Composer:
         except KeyError:
             raise ComposerError(f"no tasklet with alias {alias!r}") from None
 
+    def has_tasklet(self, alias: str) -> bool:
+        """True iff ``alias`` is registered *and* still part of the chain
+        (a removed tasklet stays registered but is no longer runnable)."""
+        t = self._tasklets.get(alias)
+        if t is None or self.chain is None:
+            return False
+        return self.chain._locate(t) is not None
+
     def run(self) -> None:
         if self.chain is None:
             raise ComposerError("composer has no chain (call set_chain)")

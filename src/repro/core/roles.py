@@ -11,6 +11,7 @@ Table 3 is done over these files in the benchmark suite).
 from __future__ import annotations
 
 import abc
+import queue
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -311,6 +312,7 @@ class Role(abc.ABC):
         self.rounds = int(self.config.get("rounds", 3))
         self._round = 0
         self.metrics: List[Dict[str, float]] = []
+        self._protocol: Any = None  # lazily-bound RoundProtocol
 
     # -------- user-implemented core functions (paper Fig. 5) ---------- #
     def initialize(self) -> None:  # pragma: no cover - overridden
@@ -329,6 +331,37 @@ class Role(abc.ABC):
     def compose(self) -> None:
         ...
 
+    # -------------------------- round protocol ------------------------ #
+    def _protocol_channel(self) -> Optional[str]:
+        """The channel whose TAG ``protocol`` attribute selects this role's
+        round protocol. ``None`` (the base default) means the role has no
+        protocol surface — it always resolves the ``weight-sync`` no-op."""
+        return None
+
+    def _protocol_name(self, channel: Optional[str]) -> str:
+        """``round_protocol`` hyperparam > TAG channel attribute > default."""
+        name = str(self.config.get("round_protocol", "") or "")
+        if not name and channel is not None:
+            for c in self.ctx.tag.channels_of(self.ctx.worker.role):
+                if c.name == channel and getattr(c, "protocol", ""):
+                    name = c.protocol
+                    break
+        return name or "weight-sync"
+
+    @property
+    def protocol(self) -> Any:
+        """The ``RoundProtocol`` bound to this role, resolved lazily on first
+        use (subclasses may rebind their protocol channel after ``__init__``,
+        e.g. the auto-channel global aggregator)."""
+        if self._protocol is None:
+            from repro.core.protocols import make_protocol
+
+            channel = self._protocol_channel()
+            self._protocol = make_protocol(
+                self._protocol_name(channel), self, channel
+            )
+        return self._protocol
+
     def pre_run(self) -> None:
         """Join this worker's channels. Runs before any chain executes (the
         runtime barriers between pre_run and run to avoid join races)."""
@@ -339,6 +372,10 @@ class Role(abc.ABC):
         if self.composer is None:
             self.compose()
         assert self.composer is not None
+        # protocol chain surgery runs after compose() (including any subclass
+        # surgery) so the protocol sees the final chain; the default
+        # weight-sync protocol leaves chains untouched
+        self.protocol.rewrite_chain(self.composer)
         self.composer.run()
 
     def on_dropped(self, at: float) -> None:
@@ -354,7 +391,14 @@ class Role(abc.ABC):
 # Classical / Hierarchical FL roles
 # ====================================================================== #
 class Trainer(Role):
-    """Leaf trainer: fetch global weights, train locally, upload update."""
+    """Leaf trainer: fetch global weights, train locally, upload update.
+
+    The *content* of fetch/upload — what crosses the wire each step — lives
+    in the channel's ``RoundProtocol`` (``repro.core.protocols``); the
+    default is the classic ``weight-sync`` exchange. The chain below is only
+    the *shape* of a round, which is why the same Trainer class serves
+    weight-sync, vertical-split and gossip topologies unchanged.
+    """
 
     param_channel = "param-channel"
 
@@ -367,27 +411,21 @@ class Trainer(Role):
         # update's staleness. Sync servers send no version (payloads — and so
         # the emulated wire bytes — are unchanged in sync mode).
         self._server_version: Optional[int] = None
+        # a trainer on a single unconventionally-named channel (gossip ring,
+        # vertical activation channel, ...) binds to it without a subclass
+        chans = [c.name for c in ctx.tag.channels_of(ctx.worker.role)]
+        if chans and self.param_channel not in chans and len(chans) == 1:
+            self.param_channel = chans[0]
+
+    def _protocol_channel(self) -> Optional[str]:
+        return self.param_channel
 
     # ----------------------------- tasklets --------------------------- #
     def fetch(self) -> None:
-        end = self.ctx.end(self.param_channel)
-        msg = end.recv(await_peer(self.ctx, end))
-        self.weights = msg["weights"]
-        self._server_version = msg.get("version", self._server_version)
-        self._work_done = bool(msg.get("done", False))
+        self.protocol.fetch()
 
     def upload(self) -> None:
-        if self._work_done:
-            return
-        end = self.ctx.end(self.param_channel)
-        # emulated local compute time, if the harness configured one
-        self.ctx.advance_clock(
-            self.param_channel, float(self.config.get("compute_time", 0.0))
-        )
-        update = {"weights": self.weights, "num_samples": self.num_samples}
-        if self._server_version is not None:
-            update["version"] = self._server_version
-        end.send(await_peer(self.ctx, end), update)
+        self.protocol.upload()
 
     def compose(self) -> None:
         with Composer() as composer:
@@ -405,7 +443,12 @@ class Trainer(Role):
 
 
 class _AggregatorBase(Role):
-    """Shared distribute/aggregate machinery for aggregator-like roles."""
+    """Shared distribute/aggregate machinery for aggregator-like roles.
+
+    Like ``Trainer``, the step *content* is the down channel's
+    ``RoundProtocol`` (default ``weight-sync``: broadcast weights, fold a
+    sorted-src streaming mean); this class owns only the round shape.
+    """
 
     down_channel = "param-channel"  # towards trainers
 
@@ -419,29 +462,14 @@ class _AggregatorBase(Role):
         # the streaming path keeps this at 1 regardless of group size
         self.peak_buffered: int = 0
 
+    def _protocol_channel(self) -> Optional[str]:
+        return self.down_channel
+
     def distribute(self) -> None:
-        end = self.ctx.end(self.down_channel)
-        end.broadcast({"weights": self.weights, "done": self._work_done})
+        self.protocol.distribute()
 
     def aggregate(self) -> None:
-        if self._work_done:
-            return  # peers were just told to exit; nothing will arrive
-        end = self.ctx.end(self.down_channel)
-        # stream per source in sorted-src order: one update is in flight at
-        # a time (server memory stays O(1) in group size) and the float
-        # accumulation order is independent of join/arrival order, so the
-        # same seeded job produces byte-identical weights on every transport
-        # backend — and the same bytes the buffered recv_fifo fold produced
-        acc = StreamingMean(fused=self.config.get("fused_aggregation"))
-        for src in sorted(end.ends()):
-            msg = end.recv(src)
-            acc.fold(msg["weights"], float(msg.get("num_samples", 1)))
-        self.peak_buffered = max(self.peak_buffered, acc.peak_buffered)
-        mean, total = acc.finalize()
-        if mean is not None:
-            self.agg_weights = mean
-            self.agg_samples = int(total)
-            self.weights = self.agg_weights
+        self.protocol.aggregate()
 
 
 class Aggregator(_AggregatorBase):
@@ -465,10 +493,12 @@ class Aggregator(_AggregatorBase):
         self.ctx.advance_clock(
             self.up_channel, float(self.config.get("compute_time", 0.0))
         )
-        update = {"weights": self.weights, "num_samples": self.agg_samples}
-        if self._server_version is not None:
-            update["version"] = self._server_version
-        end.send(await_peer(self.ctx, end), update)
+        end.send(
+            await_peer(self.ctx, end),
+            self.protocol.pack_update(
+                self.weights, self.agg_samples, self._server_version
+            ),
+        )
 
     def compose(self) -> None:
         with Composer() as composer:
@@ -567,9 +597,16 @@ class DistributedTrainer(Trainer):
 
     def allreduce(self) -> None:
         end = self.ctx.end(self.ring_channel)
-        peers = end.ends()
-        end.broadcast({"weights": self.weights, "num_samples": self.num_samples})
-        received = list(end.recv_fifo(peers))
+        # deterministic exchange: send in sorted-peer order and drain one
+        # mailbox per peer in the same order (recv_fifo's arrival-order drain
+        # broke virtual-time ties by wall-clock thread timing), then fold in
+        # sorted worker-id order — ring results are run-to-run reproducible
+        # on every backend by construction, not by downstream sorting alone
+        peers = sorted(end.ends())
+        update = {"weights": self.weights, "num_samples": self.num_samples}
+        for peer in peers:
+            end.send(peer, update)
+        received = [(src, end.recv(src)) for src in peers]
         self.weights, _ = _fold_allreduce(
             end.me, self.weights, float(self.num_samples), received
         )
@@ -589,17 +626,47 @@ class DistributedTrainer(Trainer):
 
 class HybridTrainer(Trainer):
     """Hybrid FL (Fig 2e): intra-cluster all-reduce on the fast P2P channel;
-    only the cluster leader uploads to / fetches from the global aggregator."""
+    only the cluster leader uploads to / fetches from the global aggregator.
+
+    Leadership is *elected*, not static: the leader is the lowest-ranked
+    **live** member of the cluster (static expansion order filtered by ring
+    membership), so a cluster survives its leader dropping mid-round — the
+    next member takes over the uplink on the following step. Each round the
+    leader's in-cluster re-broadcast pins the round *cohort* (the members
+    participating in this round's all-reduce) and a monotonically increasing
+    ``cluster_round`` stamp; the all-reduce exchanges only within the pinned
+    cohort and discards stale stamps, so a worker re-joining mid-round syncs
+    up at the next round broadcast instead of corrupting the current fold.
+
+    Known limitation: a leader that drops *after* the aggregator sent it the
+    round weights but *before* its in-cluster re-broadcast loses that
+    broadcast; under a sync (barriered) aggregator the cluster then only
+    recovers at the next round's distribute. Deadline/async uplink policies
+    tolerate the skipped round by design.
+    """
 
     ring_channel = "ring-channel"
 
-    def _cluster_rank(self) -> Tuple[int, List[str]]:
+    def __init__(self, ctx: RoleContext) -> None:
+        super().__init__(ctx)
+        self._cluster_round = 0
+        self._cohort: List[str] = []
+        self._said_hello = False
+
+    def _live_members(self) -> List[str]:
+        """Static cluster members filtered to the ones currently on the ring
+        (in static order — rank survives dropouts and re-joins)."""
         me = self.ctx.worker.worker_id
-        members = self.ctx.static_members.get(self.ring_channel)
-        if not members:
-            end = self.ctx.end(self.ring_channel)
-            members = sorted(end.ends() + [me])
-        return members.index(me), list(members)
+        end = self.ctx.end(self.ring_channel)
+        live = set(end.ends()) | {me}
+        static = self.ctx.static_members.get(self.ring_channel)
+        if static:
+            return [m for m in static if m in live]
+        return sorted(live)
+
+    def _cluster_rank(self) -> Tuple[int, List[str]]:
+        members = self._live_members()
+        return members.index(self.ctx.worker.worker_id), members
 
     def pre_run(self) -> None:
         """Non-leaders never join the uplink channel, so the aggregator's
@@ -613,41 +680,141 @@ class HybridTrainer(Trainer):
         if self._work_done:
             return
         end = self.ctx.end(self.ring_channel)
-        peers = end.ends()
-        if not peers:
+        me = end.me
+        cohort = [m for m in (self._cohort or self._live_members()) if m != me]
+        if not cohort:
+            self._cluster_samples = self.num_samples
+            self._cluster_round += 1
             return
-        end.broadcast({"weights": self.weights, "num_samples": self.num_samples})
-        received = list(end.recv_fifo(peers))
+        update = {
+            "weights": self.weights,
+            "num_samples": self.num_samples,
+            "cluster_round": self._cluster_round,
+        }
+        live = set(end.ends())
+        for peer in sorted(cohort):
+            if peer in live:  # skip cohort members that already dropped
+                end.send(peer, update)
+        received = []
+        for src in sorted(cohort):  # sorted per-src drain: deterministic
+            msg = self._recv_cluster(end, src)
+            if msg is not None:
+                received.append((src, msg))
         self.weights, self._cluster_samples = _fold_allreduce(
-            end.me, self.weights, float(self.num_samples), received
+            me, self.weights, float(self.num_samples), received
         )
+        self._cluster_round += 1
+
+    def _recv_cluster(self, end: ChannelEnd, src: str) -> Optional[Dict[str, Any]]:
+        """One cohort member's round-stamped all-reduce contribution.
+
+        Tolerates mid-round dropout (``None``: fold without the dead member)
+        and skips stale messages — leftover round broadcasts share the
+        leader's mailbox, and a re-joined worker's mailbox can hold
+        contributions from rounds it missed."""
+        deadline = time.monotonic() + float(self.config.get("grace", 30.0))
+        while True:
+            try:
+                msg = end.recv(src, timeout=0.25)
+            except queue.Empty:
+                end.check_poison()
+                if src not in end.ends():
+                    return None  # dropped mid-round
+                if time.monotonic() >= deadline:
+                    raise RuntimeError(
+                        f"{end.me}: cluster member {src!r} sent no round-"
+                        f"{self._cluster_round} all-reduce contribution"
+                    )
+                continue
+            if "members" in msg:
+                continue  # a round broadcast this worker already moved past
+            if "hello" in msg:
+                if int(msg["hello"]) < self._cluster_round:
+                    # a fresh incarnation of ``src`` (re-joined mid-job): it
+                    # never saw this round's broadcast, so no contribution is
+                    # coming — fold without it; it syncs at the next round
+                    return None
+                continue  # cold-start hello; src will still contribute
+            if int(msg.get("cluster_round", self._cluster_round)) != self._cluster_round:
+                continue  # stale contribution from a missed round
+            return msg
 
     def fetch(self) -> None:
-        """Leader fetches from the aggregator and re-broadcasts in-cluster."""
-        rank, members = self._cluster_rank()
+        """The elected leader fetches from the aggregator and re-broadcasts
+        in-cluster with the round cohort pinned; everyone else waits for the
+        broadcast, re-electing whenever the current leader drops."""
         ring = self.ctx.end(self.ring_channel)
-        if rank == 0:
-            super().fetch()
-            ring.broadcast({"weights": self.weights, "done": self._work_done})
-        else:
-            msg = ring.recv(members[0])
+        if not self._said_hello:
+            # first fetch of this incarnation (cold start OR a fresh program
+            # after a re-join): announce it, so a peer mid-all-reduce stops
+            # waiting for a contribution this incarnation never saw the round
+            # broadcast for (FIFO order guarantees the hello is drained
+            # before anything this incarnation sends later)
+            hello = {"hello": self._cluster_round}
+            for m in self._live_members():
+                if m != ring.me:
+                    ring.send(m, hello)
+            self._said_hello = True
+        deadline = time.monotonic() + float(self.config.get("grace", 30.0))
+        while True:
+            rank, members = self._cluster_rank()
+            if rank == 0:
+                super().fetch()  # joins the uplink on first election
+                self._cohort = members
+                bcast = {
+                    "weights": self.weights,
+                    "done": self._work_done,
+                    "cluster_round": self._cluster_round,
+                    "members": members,
+                }
+                # relay the server version so a member promoted to leader
+                # mid-job echoes it on its first upload (deadline/async
+                # uplink policies discard unstamped updates)
+                if self._server_version is not None:
+                    bcast["version"] = self._server_version
+                ring.broadcast(bcast)
+                return
+            try:
+                msg = ring.recv(members[0], timeout=0.25)
+            except queue.Empty:
+                ring.check_poison()
+                if time.monotonic() >= deadline:
+                    raise RuntimeError(
+                        f"{ring.me}: no round broadcast from cluster leader "
+                        f"{members[0]!r}"
+                    )
+                continue  # leader may have dropped: re-elect and retry
+            if "members" not in msg:
+                continue  # an all-reduce leftover from a round this worker missed
+            if int(msg.get("cluster_round", 0)) < self._cluster_round:
+                continue  # stale round broadcast
             self.weights = msg["weights"]
             self._work_done = bool(msg.get("done", False))
+            self._server_version = msg.get("version", self._server_version)
+            self._cluster_round = int(msg.get("cluster_round", self._cluster_round))
+            self._cohort = list(msg.get("members", members))
+            return
 
     def upload(self) -> None:
-        """Only the cluster leader uploads one cluster-level model."""
+        """Only the cluster leader uploads one cluster-level model. The
+        leader is re-resolved against the round cohort's *live* members, so
+        a mid-round leader dropout promotes the next cohort member."""
         if self._work_done:
             return
-        rank, _ = self._cluster_rank()
-        if rank != 0:
+        me = self.ctx.worker.worker_id
+        ring = self.ctx.end(self.ring_channel)
+        live = set(ring.ends()) | {me}
+        leaders = [m for m in (self._cohort or [me]) if m in live]
+        if not leaders or leaders[0] != me:
             return
-        end = self.ctx.end(self.param_channel)
+        end = self.ctx.end(self.param_channel)  # a promoted leader joins here
         end.send(
-            end.ends()[0],
-            {
-                "weights": self.weights,
-                "num_samples": getattr(self, "_cluster_samples", self.num_samples),
-            },
+            await_peer(self.ctx, end),
+            self.protocol.pack_update(
+                self.weights,
+                getattr(self, "_cluster_samples", self.num_samples),
+                self._server_version,
+            ),
         )
 
     def compose(self) -> None:

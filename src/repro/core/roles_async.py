@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.core.channels import WorkerDropped, recv_any_multi
 from repro.core.composer import Composer, Loop, Tasklet
+from repro.core.protocols import pack_broadcast, pack_update
 from repro.core.roles import Role, StreamingMean, await_peer, bridge_clock
 
 
@@ -107,6 +108,26 @@ class _SnapshotStore:
 
 class _PolicyBase:
     """Shared policy plumbing for the deadline/async mixins (any tier)."""
+
+    def __init__(self, ctx) -> None:
+        super().__init__(ctx)
+        # Policy mixins lower *how* weight-sync rounds run; they do not (yet)
+        # lower other round protocols. Fail fast at program-build time rather
+        # than deadlock mid-round on a protocol whose message flow the mixin
+        # does not speak.
+        declared = str(self.config.get("round_protocol", "") or "")
+        if not declared:
+            for c in ctx.tag.channels_of(ctx.worker.role):
+                if getattr(c, "protocol", "") and c.protocol != "weight-sync":
+                    declared = c.protocol
+                    break
+        if declared and declared != "weight-sync":
+            raise RuntimeError(
+                f"runtime policies (deadline/async) only lower the "
+                f"'weight-sync' round protocol, but role "
+                f"{ctx.worker.role!r} declares {declared!r}; run this "
+                "topology under the sync policy"
+            )
 
     def _policy(self) -> Any:
         pol = self.config.get("runtime_policy")
@@ -212,10 +233,7 @@ class _DeadlineBase(_PolicyBase):
         self._expected = self._trainers()
         self._round_start = self.ctx.now(self.down_channel)
         for t in self._expected:
-            end.send(
-                t,
-                {"weights": self.weights, "done": done, "version": self._version},
-            )
+            end.send(t, pack_broadcast(self.weights, done, self._version))
 
     def _close_round(self) -> None:
         """Collect under the deadline, fold the on-time updates into the
@@ -285,7 +303,7 @@ class DeadlineRootMixin(_DeadlineBase):
     def end_of_train(self) -> None:
         end = self._down()
         for t in self._trainers():
-            end.send(t, {"weights": self.weights, "done": True})
+            end.send(t, pack_broadcast(self.weights, True))
 
     def compose(self) -> None:
         with Composer() as composer:
@@ -350,9 +368,7 @@ class _BufferedAsyncBase(_PolicyBase):
         """Send the current weights to ``client`` and record the handed-out
         version in the version vector (drives snapshot retention)."""
         self._version_vector[client] = version
-        end.send(
-            client, {"weights": self.weights, "done": done, "version": version}
-        )
+        end.send(client, pack_broadcast(self.weights, done, version))
 
     def _snapshot_floor(self) -> int:
         """Oldest version a tracked client may still be training from: its
@@ -495,7 +511,7 @@ class AsyncRootMixin(_BufferedAsyncBase):
     def finish(self) -> None:
         end = self._down()
         for t in self._trainers():
-            end.send(t, {"weights": self.weights, "done": True})
+            end.send(t, pack_broadcast(self.weights, True))
 
     def compose(self) -> None:
         with Composer() as composer:
@@ -639,13 +655,10 @@ class AsyncAggregatorMixin(_BufferedAsyncBase):
         self.ctx.advance_clock(
             self.up_channel, float(self.config.get("compute_time", 0.0))
         )
-        update: Dict[str, Any] = {
-            "weights": self.weights,
-            "num_samples": int(self._buffer_samples),
-            "tier_staleness": list(self._buffer_staleness),
-        }
-        if self._root_version is not None:
-            update["version"] = self._root_version
+        update: Dict[str, Any] = pack_update(
+            self.weights, int(self._buffer_samples), self._root_version
+        )
+        update["tier_staleness"] = list(self._buffer_staleness)
         up.send(roots[0], update)
         self.relay_log.append(
             {
@@ -661,7 +674,7 @@ class AsyncAggregatorMixin(_BufferedAsyncBase):
     def finish(self) -> None:
         end = self._down()
         for t in self._trainers():
-            end.send(t, {"weights": self.weights, "done": True})
+            end.send(t, pack_broadcast(self.weights, True))
 
     def compose(self) -> None:
         with Composer() as composer:

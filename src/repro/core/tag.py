@@ -60,6 +60,12 @@ class Channel:
               real wire bytes; emulation backends use it for post-codec
               byte *accounting* only (their payloads never leave the
               process). Empty (default) sends raw payloads.
+    protocol: round protocol run over this channel, by registered name
+              ("weight-sync", "vertical-split", "gossip-avg" — see
+              ``repro.core.protocols``). Controls *what* flows per round
+              step, independent of runtime policy (sync/deadline/async)
+              and deployment. Empty (default) means weight synchronisation,
+              which is bit-identical to the pre-protocol behaviour.
     """
 
     name: str
@@ -69,6 +75,7 @@ class Channel:
     backend: str = "inproc"
     wire_dtype: str = "f32"
     codec: str = ""
+    protocol: str = ""
 
     def groups(self) -> Tuple[str, ...]:
         return self.group_by if self.group_by else (DEFAULT_GROUP,)
@@ -233,6 +240,7 @@ class TAG:
                     "backend": c.backend,
                     "wireDtype": c.wire_dtype,
                     "codec": c.codec,
+                    "protocol": c.protocol,
                 }
                 for c in self.channels
             ],
@@ -265,6 +273,7 @@ class TAG:
                 backend=c.get("backend", "inproc"),
                 wire_dtype=c.get("wireDtype", "f32"),
                 codec=c.get("codec", ""),
+                protocol=c.get("protocol", ""),
             )
             for c in d["channels"]
         )

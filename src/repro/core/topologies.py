@@ -1,12 +1,15 @@
-"""Topology templates (paper §6.3): C-FL, H-FL, CO-FL, Hybrid, Distributed.
+"""Topology templates (paper §6.3): C-FL, H-FL, CO-FL, Hybrid, Distributed —
+plus the protocol-pluggable additions (vertical FL, gossip ring).
 
 Each builder returns a validated TAG. These are the "templates provided in
 Flame" users pick from; transformations between them are small TAG edits
 (quantified by ``repro.core.tag.diff_tags`` and the Table 4 reproduction).
+Downstream topologies register through ``register_template`` (mirroring
+``repro.transport.wire.register_codec``) instead of editing this module.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.tag import DEFAULT_GROUP, TAG, Channel, FuncTags, Role
 
@@ -296,10 +299,121 @@ def distributed_fl(
     return tag
 
 
-TEMPLATES = {
-    "classical": classical_fl,
-    "hierarchical": hierarchical_fl,
-    "coordinated": coordinated_fl,
-    "hybrid": hybrid_fl,
-    "distributed": distributed_fl,
-}
+def vertical_fl(
+    backend: str = "inproc",
+    party_program: str = "repro.core.roles.Trainer",
+    head_program: str = "repro.core.roles.GlobalAggregator",
+    codec: str = "",
+) -> TAG:
+    """Feature-split vertical FL: parties hold disjoint feature columns of the
+    *same* samples; the head holds the labels. Per round the parties exchange
+    per-batch partial activations / gradients with the head over one channel.
+
+    The stock ``Trainer``/``GlobalAggregator`` programs run this unchanged:
+    the channel's ``protocol="vertical-split"`` swaps what their
+    fetch/upload/distribute/aggregate steps put on the wire, with zero new
+    role classes and zero runtime edits (the tentpole claim of ISSUE 7).
+    """
+    act = Channel(
+        name="activation-channel",
+        pair=("party", "head"),
+        func_tags=FuncTags(
+            {"party": ("fetch", "upload"), "head": ("distribute", "aggregate")}
+        ),
+        backend=backend,
+        codec=codec,
+        protocol="vertical-split",
+    )
+    party = Role(
+        name="party",
+        program=party_program,
+        is_data_consumer=True,
+        group_association=({"activation-channel": DEFAULT_GROUP},),
+    )
+    head = Role(
+        name="head",
+        program=head_program,
+        group_association=({"activation-channel": DEFAULT_GROUP},),
+    )
+    tag = TAG(name="vertical-fl", roles=(party, head), channels=(act,))
+    tag.validate()
+    return tag
+
+
+def gossip_fl(
+    backend: str = "p2p-emu",
+    trainer_program: str = "repro.core.roles.Trainer",
+    codec: str = "",
+) -> TAG:
+    """Serverless gossip ring: trainers average weights with their ring
+    neighbors each round — no aggregator role at all.
+
+    Like :func:`vertical_fl` this reuses the stock ``Trainer``; the
+    channel's ``protocol="gossip-avg"`` rewrites the composed chain (drops
+    ``fetch``, replaces ``upload`` with neighbor averaging) via the Table 1
+    surgical-edit API. Pass ``codec="topk0.25"`` to run each ring link
+    through the error-feedback sparsifier.
+    """
+    ring = Channel(
+        name="gossip-channel",
+        pair=("trainer", "trainer"),
+        func_tags=FuncTags({"trainer": ("gossip",)}),
+        backend=backend,
+        codec=codec,
+        protocol="gossip-avg",
+    )
+    trainer = Role(
+        name="trainer",
+        program=trainer_program,
+        is_data_consumer=True,
+        group_association=({"gossip-channel": DEFAULT_GROUP},),
+    )
+    tag = TAG(name="gossip-fl", roles=(trainer,), channels=(ring,))
+    tag.validate()
+    return tag
+
+
+# ---------------------------------------------------------------------- #
+# template registry — the extension entry point (mirrors register_codec)
+# ---------------------------------------------------------------------- #
+TemplateFactory = Callable[..., TAG]
+
+TEMPLATES: Dict[str, TemplateFactory] = {}
+
+
+def register_template(
+    name: str, factory: TemplateFactory, *, overwrite: bool = False
+) -> None:
+    """Register a topology template under ``name``.
+
+    Downstream packages call this at import time so their topologies are
+    reachable by name (mgmt plane, benchmarks, docs) without editing core
+    modules. Re-registering an existing name raises unless ``overwrite=True``.
+    """
+    if not overwrite and name in TEMPLATES:
+        raise ValueError(
+            f"template {name!r} already registered (pass overwrite=True to replace)"
+        )
+    TEMPLATES[name] = factory
+
+
+def registered_templates() -> List[str]:
+    return sorted(TEMPLATES)
+
+
+def get_template(name: str) -> TemplateFactory:
+    try:
+        return TEMPLATES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown template {name!r}; registered: {registered_templates()}"
+        ) from None
+
+
+register_template("classical", classical_fl)
+register_template("hierarchical", hierarchical_fl)
+register_template("coordinated", coordinated_fl)
+register_template("hybrid", hybrid_fl)
+register_template("distributed", distributed_fl)
+register_template("vertical", vertical_fl)
+register_template("gossip", gossip_fl)

@@ -392,6 +392,23 @@ _STRATEGIES: Dict[str, Callable[..., ServerStrategy]] = {
 }
 
 
+def register_strategy(
+    name: str, factory: Callable[..., ServerStrategy], *, overwrite: bool = False
+) -> None:
+    """Register a server strategy under ``name`` (mirrors
+    ``register_codec``/``register_template``): downstream aggregation rules
+    become reachable by name without editing this module."""
+    if not overwrite and name in _STRATEGIES:
+        raise ValueError(
+            f"strategy {name!r} already registered (pass overwrite=True to replace)"
+        )
+    _STRATEGIES[name] = factory
+
+
+def registered_strategies() -> List[str]:
+    return sorted(_STRATEGIES)
+
+
 def get_strategy(name: str, **kwargs: Any) -> ServerStrategy:
     try:
         return _STRATEGIES[name](**kwargs)

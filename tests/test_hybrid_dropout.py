@@ -1,0 +1,128 @@
+"""Hybrid FL under dropout/re-join schedules: leader election mid-round.
+
+The hybrid topology's resilience story — the lowest-ranked *live* cluster
+member owns the uplink — previously had only sync happy-path coverage. These
+tests drive the election through the event engine's dropout/re-join
+schedules under a deadline root (the sync root barriers on every leader, so
+a dead leader would block it by design; deadline/async uplink policies are
+the deployment mode hybrid clusters run under when members churn).
+"""
+import numpy as np
+
+from repro.core.expansion import JobSpec
+from repro.core.roles import HybridTrainer
+from repro.core.runtime import RuntimePolicy, run_job
+from repro.core.tag import DatasetSpec
+from repro.core.topologies import hybrid_fl
+
+W0 = {"w": np.full((8,), 2.0, np.float32), "b": np.zeros((2, 2), np.float32)}
+
+
+class ClockedHybridTrainer(HybridTrainer):
+    """Advances the ring clock during local training so virtual-time dropout
+    schedules can fire *mid-round* (between the leader's re-broadcast and the
+    cluster all-reduce) instead of only at upload boundaries."""
+
+    def train(self):
+        self.ctx.advance_clock(
+            self.ring_channel, float(self.config.get("train_time", 1.0))
+        )
+
+
+def _job(rounds=4):
+    tag = hybrid_fl(
+        groups=("c0", "c1"),
+        dataset_groups={"c0": ("d0", "d1"), "c1": ("d2", "d3")},
+    )
+    return JobSpec(
+        tag=tag,
+        datasets=tuple(DatasetSpec(name=f"d{i}") for i in range(4)),
+        hyperparams={"rounds": rounds, "init_weights": W0, "grace": 5.0},
+    )
+
+
+def _run(policy, rounds=4):
+    res = run_job(
+        _job(rounds=rounds),
+        timeout=60,
+        policy=policy,
+        program_overrides={"trainer": ClockedHybridTrainer},
+    )
+    assert not res.errors, res.errors
+    return res
+
+
+def _policy(**kw):
+    kw.setdefault("mode", "deadline")
+    kw.setdefault("deadline", 50.0)
+    kw.setdefault("grace", 3.0)
+    return RuntimePolicy(**kw)
+
+
+def test_hybrid_deadline_happy_path_completes():
+    res = _run(_policy())
+    glob = res.program("global-aggregator-0")
+    assert glob._round >= 4
+    # one leader per cluster reached the uplink each round
+    assert all(
+        len(e["included"]) <= 2 for e in glob.participation_log
+    ), glob.participation_log
+
+
+def test_hybrid_non_leader_dropout_mid_round():
+    """A non-leader dropping mid-train must not stall its cluster: the
+    leader folds the all-reduce without the dead member and still uploads."""
+    res = _run(_policy(dropouts={"trainer-1": 1.5}))
+    assert res.dropped == {"trainer-1": 1.5}
+    assert (1.5, "dropout", "trainer-1") in res.events
+    glob = res.program("global-aggregator-0")
+    # cluster c0's leader (trainer-0) keeps participating after the dropout
+    late_rounds = [e for e in glob.participation_log if e["round"] >= 2]
+    assert any("trainer-0" in e["included"] for e in late_rounds)
+
+
+def test_hybrid_leader_dropout_promotes_next_member():
+    """The cluster leader dropping mid-round promotes the next live member:
+    it takes over the uplink (joining the param channel for the first time)
+    and later rounds include the promoted leader's uploads."""
+    res = _run(_policy(dropouts={"trainer-0": 1.5}))
+    assert res.dropped == {"trainer-0": 1.5}
+    glob = res.program("global-aggregator-0")
+    included = set()
+    for e in glob.participation_log:
+        included |= set(e["included"])
+    # the promoted leader's uploads reached the aggregator
+    assert "trainer-1" in included, glob.participation_log
+    # the dead leader stopped being expected once it left the channel
+    assert "trainer-0" not in glob.participation_log[-1]["included"]
+    assert "trainer-0" not in glob.participation_log[-1]["missing"]
+
+
+def test_hybrid_dropout_then_rejoin():
+    """A member that re-joins mid-job syncs up at the next round broadcast
+    (fresh program, cluster_round adopted from the leader) and the ring
+    all-reduce folds it back in without corrupting the current round."""
+    res = _run(
+        _policy(dropouts={"trainer-1": 1.5}, rejoins={"trainer-1": 2.5}),
+        rounds=5,
+    )
+    assert res.dropped == {"trainer-1": 1.5}
+    assert (2.5, "rejoin", "trainer-1") in res.events
+    glob = res.program("global-aggregator-0")
+    assert glob._round >= 5
+    # after the re-join, cluster c0 still uploads through one leader, and the
+    # final consensus is a finite model (the re-joined member's stale rounds
+    # were discarded, not folded)
+    w = res.global_weights()
+    assert np.isfinite(np.asarray(w["w"])).all()
+
+
+def test_hybrid_leader_dropout_keeps_cluster_weights_finite():
+    """Election mid-round never folds a half-exchanged all-reduce: surviving
+    members land on finite, identical cluster weights."""
+    res = _run(_policy(dropouts={"trainer-2": 1.5}), rounds=4)
+    glob = res.program("global-aggregator-0")
+    assert glob._round >= 4
+    # trainer-3 (the promoted leader of c1) holds finite weights
+    t3 = res.program("trainer-3")
+    assert np.isfinite(np.asarray(t3.weights["w"])).all()

@@ -1,0 +1,83 @@
+"""Vertical-FL and gossip jobs byte-identical inproc vs multiproc.
+
+The ISSUE-7 acceptance criterion in conformance-suite style: the two new
+protocol topologies — added purely via TAG templates + protocol classes —
+must produce byte-identical per-worker weights whether the workers are
+threads against emu backends or OS processes against the transport hub.
+
+Marked ``multiproc``: CI runs these in the dedicated hard-timeout job.
+"""
+import numpy as np
+import pytest
+
+from repro.core.expansion import JobSpec
+from repro.core.runtime import run_job
+from repro.core.tag import DatasetSpec
+from repro.core.topologies import gossip_fl, vertical_fl
+from repro.launch.spawn import run_job_multiproc
+from repro.transport.conformance import SeededSGDTrainer  # noqa: F401 - spawn target
+
+pytestmark = pytest.mark.multiproc
+
+W0 = {"w": np.zeros((32, 10), np.float32), "b": np.zeros((10,), np.float32)}
+
+
+def _datasets(n):
+    return tuple(DatasetSpec(name=f"d{i}") for i in range(n))
+
+
+def _assert_programs_byte_identical(res_in, res_mp):
+    import jax
+
+    assert not res_in.errors, res_in.errors
+    assert not res_mp.errors, res_mp.errors
+    assert sorted(res_in.programs) == sorted(res_mp.programs)
+    for wid in res_in.programs:
+        la = jax.tree_util.tree_leaves(res_in.programs[wid].weights)
+        lb = jax.tree_util.tree_leaves(res_mp.programs[wid].weights)
+        assert len(la) == len(lb)
+        for x, y in zip(la, lb):
+            assert np.asarray(x).dtype == np.asarray(y).dtype
+            assert np.asarray(x).tobytes() == np.asarray(y).tobytes(), (
+                f"{wid}: leaf differs between deployments"
+            )
+
+
+def test_vertical_fl_inproc_vs_multiproc_byte_identical():
+    job = lambda: JobSpec(  # noqa: E731
+        tag=vertical_fl(),
+        datasets=_datasets(3),
+        hyperparams={"rounds": 2},
+    )
+    res_in = run_job(job(), timeout=60)
+    res_mp = run_job_multiproc(job(), timeout=120)
+    _assert_programs_byte_identical(res_in, res_mp)
+    # the head's loss trajectory is part of the contract too
+    in_losses = [
+        m["vertical_loss"]
+        for m in res_in.program("head-0").metrics
+        if "vertical_loss" in m
+    ]
+    mp_losses = [
+        m["vertical_loss"]
+        for m in res_mp.program("head-0").metrics
+        if "vertical_loss" in m
+    ]
+    assert in_losses == mp_losses and len(in_losses) == 2
+
+
+def test_gossip_inproc_vs_multiproc_byte_identical():
+    # codec stays empty: emu backends only *account* coded bytes while the
+    # hub really encodes, so a lossy codec intentionally breaks cross-
+    # deployment identity — the identity contract is for raw payloads
+    tag = gossip_fl(
+        trainer_program="repro.transport.conformance.SeededSGDTrainer"
+    )
+    job = lambda: JobSpec(  # noqa: E731
+        tag=tag,
+        datasets=_datasets(4),
+        hyperparams={"rounds": 2, "init_weights": W0},
+    )
+    res_in = run_job(job(), timeout=60)
+    res_mp = run_job_multiproc(job(), timeout=120)
+    _assert_programs_byte_identical(res_in, res_mp)

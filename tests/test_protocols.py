@@ -1,0 +1,290 @@
+"""Round protocols: the weight-sync extraction, vertical FL, gossip, and the
+template/protocol/strategy registries."""
+import numpy as np
+import pytest
+
+from repro.core.composer import ComposerError
+from repro.core.expansion import JobSpec
+from repro.core.protocols import (
+    GossipAvg,
+    WeightSync,
+    make_protocol,
+    pack_broadcast,
+    pack_update,
+    register_protocol,
+    registered_protocols,
+)
+from repro.core.runtime import RuntimePolicy, run_job
+from repro.core.tag import TAG, Channel, DatasetSpec
+from repro.core.topologies import (
+    classical_fl,
+    gossip_fl,
+    register_template,
+    registered_templates,
+    vertical_fl,
+)
+from repro.fl.strategies import register_strategy, registered_strategies
+
+W0 = {"w": np.full((8,), 2.0, np.float32), "b": np.zeros((2, 2), np.float32)}
+
+
+def _datasets(n):
+    return tuple(DatasetSpec(name=f"d{i}") for i in range(n))
+
+
+def _tree_bytes(t):
+    import jax
+
+    return [np.asarray(x).tobytes() for x in jax.tree_util.tree_leaves(t)]
+
+
+# ---------------------------------------------------------------------- #
+# weight-sync extraction
+# ---------------------------------------------------------------------- #
+class TestWeightSyncExtraction:
+    def test_explicit_protocol_matches_default_bit_for_bit(self):
+        """Declaring protocol='weight-sync' (hyperparam or TAG attribute)
+        must reproduce the implicit default exactly: the extraction moved
+        code, not behavior."""
+
+        def _run(**hp):
+            job = JobSpec(
+                tag=classical_fl(),
+                datasets=_datasets(4),
+                hyperparams={"rounds": 2, "init_weights": W0, **hp},
+            )
+            res = run_job(job, timeout=60)
+            assert not res.errors, res.errors
+            return res
+
+        base = _run()
+        explicit = _run(round_protocol="weight-sync")
+        assert _tree_bytes(base.global_weights()) == _tree_bytes(
+            explicit.global_weights()
+        )
+        assert base.channel_bytes == explicit.channel_bytes
+
+    def test_pack_helpers_sync_payloads_carry_no_version(self):
+        assert pack_broadcast(W0, False) == {"weights": W0, "done": False}
+        assert pack_update(W0, 3) == {"weights": W0, "num_samples": 3}
+        assert pack_broadcast(W0, True, 2)["version"] == 2
+        assert pack_update(W0, 3, 0)["version"] == 0
+
+
+# ---------------------------------------------------------------------- #
+# vertical FL
+# ---------------------------------------------------------------------- #
+class TestVerticalSplit:
+    def _run(self, rounds=3, n_parties=3, **hp):
+        job = JobSpec(
+            tag=vertical_fl(),
+            datasets=_datasets(n_parties),
+            hyperparams={"rounds": rounds, **hp},
+        )
+        res = run_job(job, timeout=60)
+        assert not res.errors, res.errors
+        return res
+
+    def test_loss_decreases_over_rounds(self):
+        res = self._run(rounds=4)
+        head = res.program("head-0")
+        losses = [m["vertical_loss"] for m in head.metrics if "vertical_loss" in m]
+        assert len(losses) == 4
+        assert losses[-1] < losses[0]
+
+    def test_seeded_runs_are_byte_identical(self):
+        a, b = self._run(), self._run()
+        for wid in a.programs:
+            assert _tree_bytes(a.programs[wid].weights) == _tree_bytes(
+                b.programs[wid].weights
+            )
+
+    def test_parties_hold_disjoint_column_blocks(self):
+        res = self._run(n_parties=3, vertical_features=32)
+        widths = [
+            np.asarray(res.program(f"party-{i}").weights["w"]).shape[0]
+            for i in range(3)
+        ]
+        assert sum(widths) == 32
+        assert all(w > 0 for w in widths)
+
+    def test_latency_dominated_traffic_shape(self):
+        """Vertical rounds are many small messages (2 hops per batch per
+        party), not one model-sized message — the message count dwarfs a
+        weight-sync job of the same round count."""
+        res = self._run(rounds=2, vertical_steps=4)
+        # per round: 1 marker bcast (3 msgs) + per step (4): 3 activations
+        # up + 3 grads down -> 3 + 24 = 27; 2 rounds + final done bcast
+        chans = res.program("head-0").ctx.channels
+        assert chans.total_msgs("activation-channel") >= 2 * 27
+
+
+# ---------------------------------------------------------------------- #
+# gossip
+# ---------------------------------------------------------------------- #
+class TestGossipAvg:
+    def _run(self, n=4, rounds=3, tag=None, **hp):
+        job = JobSpec(
+            tag=tag or gossip_fl(backend="inproc"),
+            datasets=_datasets(n),
+            hyperparams={"rounds": rounds, "init_weights": W0, **hp},
+        )
+        res = run_job(job, timeout=60)
+        assert not res.errors, res.errors
+        return res
+
+    def test_noop_trainers_keep_consensus(self):
+        res = self._run()
+        for wid, p in res.programs.items():
+            np.testing.assert_array_equal(p.weights["w"], W0["w"])
+
+    def test_real_training_converges_and_is_deterministic(self):
+        tag = gossip_fl(
+            backend="inproc",
+            trainer_program="repro.transport.conformance.SeededSGDTrainer",
+        )
+        hp = {
+            "init_weights": {
+                "w": np.zeros((32, 10), np.float32),
+                "b": np.zeros((10,), np.float32),
+            }
+        }
+        a = self._run(tag=tag, **hp)
+        b = self._run(tag=tag, **hp)
+        for wid in a.programs:
+            assert _tree_bytes(a.programs[wid].weights) == _tree_bytes(
+                b.programs[wid].weights
+            )
+        # neighbor averaging moved every model off its purely-local optimum:
+        # ring members see each other's data through the averaged weights
+        ws = [np.asarray(p.weights["w"]) for p in a.programs.values()]
+        assert not np.array_equal(ws[0], ws[1])  # consensus not yet complete
+        assert all(np.isfinite(w).all() for w in ws)
+
+    def test_two_members_average_to_midpoint(self):
+        """n=2 ring: each member's single neighbor is the other — one round
+        of equal-sample averaging lands both on the midpoint."""
+
+        from repro.core.roles import Trainer
+
+        class BiasTrainer(Trainer):
+            def train(self):
+                if self.weights is None:
+                    self.weights = self.config.get("init_weights")
+                k = float(self.ctx.worker.worker_id[-1])
+                self.weights = {
+                    n: np.asarray(v) + k for n, v in self.weights.items()
+                }
+
+        job = JobSpec(
+            tag=gossip_fl(backend="inproc"),
+            datasets=_datasets(2),
+            hyperparams={"rounds": 1, "init_weights": W0},
+        )
+        res = run_job(
+            job, timeout=60, program_overrides={"trainer": BiasTrainer}
+        )
+        assert not res.errors, res.errors
+        w0 = res.program("trainer-0").weights["w"]
+        w1 = res.program("trainer-1").weights["w"]
+        np.testing.assert_array_equal(w0, w1)
+        np.testing.assert_allclose(w0, W0["w"] + 0.5)  # mean of +0 and +1
+
+    def test_rewrite_chain_requires_trainer_shape(self):
+        """The gossip protocol's chain surgery names its anchors — applying
+        it to a chain without fetch/upload must fail loudly."""
+        from repro.core.composer import Composer, Tasklet
+
+        class FakeRole:
+            weights = None
+            config = {}
+
+        with Composer() as comp:
+            t1 = Tasklet("serve", lambda: None)
+            t2 = Tasklet("finish", lambda: None)
+            t1 >> t2
+        proto = GossipAvg(FakeRole(), "gossip-channel")
+        with pytest.raises(ComposerError, match="fetch"):
+            proto.rewrite_chain(comp)
+
+
+# ---------------------------------------------------------------------- #
+# policy lowering guard
+# ---------------------------------------------------------------------- #
+class TestPolicyGuard:
+    def test_policy_lowering_rejects_non_weight_sync(self):
+        job = JobSpec(
+            tag=vertical_fl(),
+            datasets=_datasets(2),
+            hyperparams={"rounds": 2},
+        )
+        with pytest.raises(RuntimeError, match="weight-sync"):
+            run_job(
+                job,
+                timeout=30,
+                policy=RuntimePolicy(mode="deadline", deadline=5.0, grace=1.0),
+            )
+
+    def test_sync_policy_allows_vertical(self):
+        job = JobSpec(
+            tag=vertical_fl(),
+            datasets=_datasets(2),
+            hyperparams={"rounds": 2},
+        )
+        res = run_job(job, timeout=60, policy=RuntimePolicy(mode="sync"))
+        assert not res.errors, res.errors
+
+
+# ---------------------------------------------------------------------- #
+# registries
+# ---------------------------------------------------------------------- #
+class TestRegistries:
+    def test_protocol_registry(self):
+        assert {"weight-sync", "vertical-split", "gossip-avg"} <= set(
+            registered_protocols()
+        )
+        with pytest.raises(ValueError, match="already registered"):
+            register_protocol("weight-sync", GossipAvg)
+        register_protocol("weight-sync", WeightSync)  # same factory: idempotent
+        with pytest.raises(KeyError, match="unknown round protocol"):
+            make_protocol("no-such-protocol", None, None)
+
+    def test_template_registry(self):
+        names = registered_templates()
+        assert {
+            "classical", "hierarchical", "coordinated", "hybrid",
+            "distributed", "vertical", "gossip",
+        } <= set(names)
+        with pytest.raises(ValueError, match="already registered"):
+            register_template("classical", classical_fl)
+        register_template("classical", classical_fl, overwrite=True)
+
+    def test_template_registration_roundtrip(self):
+        def my_topology():
+            return classical_fl()
+
+        register_template("test-only-topology", my_topology)
+        try:
+            from repro.core.topologies import get_template
+
+            assert get_template("test-only-topology") is my_topology
+        finally:
+            from repro.core.topologies import TEMPLATES
+
+            TEMPLATES.pop("test-only-topology", None)
+
+    def test_strategy_registry(self):
+        assert "fedavg" in registered_strategies()
+        with pytest.raises(ValueError, match="already registered"):
+            register_strategy("fedavg", object)
+
+    def test_tag_serialization_roundtrips_protocol(self):
+        tag = gossip_fl()
+        again = TAG.from_json(tag.to_json())
+        assert again.channel("gossip-channel").protocol == "gossip-avg"
+        # default stays empty (sync jobs' serialized TAGs unchanged)
+        assert classical_fl().channel("param-channel").protocol == ""
+
+    def test_channel_protocol_field_defaults_empty(self):
+        ch = Channel(name="c", pair=("a", "b"))
+        assert ch.protocol == ""
