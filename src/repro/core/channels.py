@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import os
 import queue
 import threading
 import time
@@ -110,7 +111,7 @@ TRANSPORT_OPS: Tuple[str, ...] = (
     # membership
     "join", "leave", "peers",
     # messaging
-    "send", "recv", "recv_any", "recv_fifo", "peek", "earliest",
+    "send", "send_many", "recv", "recv_any", "recv_fifo", "peek", "earliest",
     # failure emulation / cancellation
     "set_drop", "clear_drop", "drop_time", "poison", "check_poison",
     # link / wire configuration
@@ -152,6 +153,9 @@ class TransportBackend(Protocol):
 
     # ---------------------------- messaging --------------------------- #
     def send(self, channel: str, group: str, src: str, dst: str, payload: Any) -> None: ...
+    def send_many(
+        self, channel: str, group: str, src: str, dsts: Sequence[str], payload: Any
+    ) -> None: ...
     def recv(
         self, channel: str, group: str, me: str, end: str, timeout: Optional[float]
     ) -> Any: ...
@@ -193,6 +197,25 @@ class TransportBackend(Protocol):
     def now(self, worker: str) -> float: ...
     def advance(self, worker: str, seconds: float) -> None: ...
     def set_clock(self, worker: str, at: float) -> None: ...
+
+
+# Broadcast fan-out fast path: when enabled (the default), ChannelEnd lowers
+# multi-destination sends onto the backend's ``send_many`` op — one encode /
+# one RPC per logical broadcast instead of one per destination. The env var
+# reaches spawned worker processes (spawn children inherit os.environ), so a
+# single toggle flips every deployment; byte accounting is bit-identical
+# either way, which the equivalence tests pin.
+_FANOUT_ENABLED = os.environ.get("REPRO_BROADCAST_FANOUT", "1") not in ("0", "false")
+
+
+def set_broadcast_fanout(enabled: bool) -> None:
+    """Enable/disable the ``send_many`` broadcast fast path process-wide."""
+    global _FANOUT_ENABLED
+    _FANOUT_ENABLED = bool(enabled)
+
+
+def broadcast_fanout_enabled() -> bool:
+    return _FANOUT_ENABLED
 
 
 class ChannelEnd:
@@ -263,9 +286,23 @@ class ChannelEnd:
         from any of ``ends`` on this channel, or ``None``."""
         return self._backend.earliest(self.channel, self.group, self.me, ends)
 
+    def send_many(self, ends: Sequence[str], msg: Any) -> None:
+        """Send one payload to several destinations.
+
+        Lowers onto the backend's ``send_many`` (one encode, one RPC, broker-
+        side fan-out) when the fast path is enabled; otherwise loops ``send``.
+        Ordering, virtual-clock arithmetic and byte accounting are identical
+        to the per-destination loop in both modes."""
+        if not ends:
+            return
+        if _FANOUT_ENABLED and len(ends) > 1:
+            self._backend.send_many(self.channel, self.group, self.me, list(ends), msg)
+        else:
+            for end in ends:
+                self.send(end, msg)
+
     def broadcast(self, msg: Any) -> None:
-        for end in self.ends():
-            self.send(end, msg)
+        self.send_many(self.ends(), msg)
 
     # ----------------------------- topology --------------------------- #
     def ends(self) -> List[str]:
@@ -486,6 +523,63 @@ class InprocBackend:
                 Message(src, payload, nbytes, arrival)
             )
             self._cv.notify_all()
+
+    def send_many(
+        self, channel: str, group: str, src: str, dsts: Sequence[str], payload: Any
+    ) -> None:
+        """Deliver one payload to every dst — O(1) encode/accounting work.
+
+        Payload sizing (``payload_bytes`` / codec accounting walk) runs once;
+        the per-destination clock/broker/dropout arithmetic replicates the
+        ``send`` loop exactly under a single lock hold, so arrivals, stats
+        and dropout behavior are bit-identical to ``for dst: send(dst)``.
+        The same payload object is delivered by reference to each mailbox,
+        exactly as the loop would."""
+        if not dsts:
+            return
+        wire = self._wire_dtype.get(channel, "f32")
+        codec = self._codec_acct.get(channel)
+        raw_bytes = payload_bytes(payload, wire)
+        if codec is None:
+            nbytes = raw_bytes
+        else:
+            nbytes = codec.wire_bytes(payload, wire)
+        sender_link = self.link(channel, src)
+        dur = sender_link.transfer_time(nbytes)
+        with self._lock:
+            try:
+                for dst in dsts:
+                    topic = (channel, group, dst)
+                    start = self._clock[src]
+                    if self.wall_clock:
+                        start = max(start, self._wall())
+                    if self.shared_broker:
+                        start = max(start, self._broker_free_at[topic])
+                    arrival = start + dur
+                    drop_at = self._drop_at.get(src)
+                    if drop_at is not None and arrival > drop_at:
+                        # sender dies mid-fan-out: earlier dsts already have
+                        # their copies (same as the per-dst loop), this and
+                        # later transfers never complete
+                        if self.shared_broker:
+                            self._broker_free_at[topic] = max(
+                                self._broker_free_at[topic], min(drop_at, start + dur)
+                            )
+                        self._check_alive(src, arrival)  # raises WorkerDropped
+                    if self.shared_broker:
+                        self._broker_free_at[topic] = start + dur
+                    self._clock[src] = arrival
+                    self.stats[f"bytes:{channel}"] += nbytes
+                    self.stats[f"msgs:{channel}"] += 1
+                    if codec is not None:
+                        self.stats[f"raw_bytes:{channel}"] += raw_bytes
+                    self._box(channel, group, dst, src).put(
+                        Message(src, payload, nbytes, arrival)
+                    )
+            finally:
+                # wake receivers even when a mid-fan-out dropout aborts the
+                # loop — earlier destinations' messages are already delivered
+                self._cv.notify_all()
 
     def _get_msg(
         self, channel: str, group: str, me: str, end: str, timeout: Optional[float]
@@ -809,6 +903,11 @@ class ChannelManager:
             coded = stats.get(f"coded_bytes:{channel}", out["bytes"])
             out["raw_bytes"] = float(raw)
             out["codec_ratio"] = float(coded) / float(raw)
+        # the multiproc client counts encode calls; the fan-out fast path
+        # makes this O(1) per broadcast instead of O(dsts)
+        encodes = stats.get(f"payload_encodes:{channel}")
+        if encodes is not None:
+            out["payload_encodes"] = float(encodes)
         return out
 
     def codec_ratio(self, channel: str) -> Optional[float]:

@@ -361,8 +361,8 @@ class VerticalSplit(RoundProtocol):
             probs = e / e.sum(axis=1, keepdims=True)
             yb = y[idx]
             grad = (probs - eye[yb]) / np.float32(cfg["batch"])
-            for p in parties:
-                end.send(p, {"grad": grad, "step": step})
+            # identical grad frame per party: one encode, broker-side fan-out
+            end.send_many(parties, {"grad": grad, "step": step})
             b = b - cfg["lr"] * grad.sum(axis=0)
             losses.append(
                 float(-np.log(probs[np.arange(len(yb)), yb] + 1e-12).mean())
@@ -434,8 +434,9 @@ class GossipAvg(RoundProtocol):
         )
         update = pack_update(role.weights, role.num_samples)
         neighbors = self._neighbors()
-        for nb in neighbors:  # sorted sends, then sorted per-src drains:
-            end.send(nb, update)  # deterministic regardless of arrival order
+        # sorted sends (one fan-out), then sorted per-src drains:
+        # deterministic regardless of arrival order
+        end.send_many(neighbors, update)
         received = [(nb, end.recv(nb)) for nb in neighbors]
         role.weights, _ = _fold_allreduce(
             end.me, role.weights, float(role.num_samples), received

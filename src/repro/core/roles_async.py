@@ -232,8 +232,9 @@ class _DeadlineBase(_PolicyBase):
         end = self._down()
         self._expected = self._trainers()
         self._round_start = self.ctx.now(self.down_channel)
-        for t in self._expected:
-            end.send(t, pack_broadcast(self.weights, done, self._version))
+        end.send_many(
+            self._expected, pack_broadcast(self.weights, done, self._version)
+        )
 
     def _close_round(self) -> None:
         """Collect under the deadline, fold the on-time updates into the
@@ -302,8 +303,7 @@ class DeadlineRootMixin(_DeadlineBase):
 
     def end_of_train(self) -> None:
         end = self._down()
-        for t in self._trainers():
-            end.send(t, pack_broadcast(self.weights, True))
+        end.send_many(self._trainers(), pack_broadcast(self.weights, True))
 
     def compose(self) -> None:
         with Composer() as composer:
@@ -510,8 +510,7 @@ class AsyncRootMixin(_BufferedAsyncBase):
 
     def finish(self) -> None:
         end = self._down()
-        for t in self._trainers():
-            end.send(t, pack_broadcast(self.weights, True))
+        end.send_many(self._trainers(), pack_broadcast(self.weights, True))
 
     def compose(self) -> None:
         with Composer() as composer:
@@ -673,8 +672,7 @@ class AsyncAggregatorMixin(_BufferedAsyncBase):
 
     def finish(self) -> None:
         end = self._down()
-        for t in self._trainers():
-            end.send(t, pack_broadcast(self.weights, True))
+        end.send_many(self._trainers(), pack_broadcast(self.weights, True))
 
     def compose(self) -> None:
         with Composer() as composer:

@@ -99,8 +99,9 @@ class CoordAggregator(Aggregator):
         if self._work_done or not self.active:
             return
         end = self.ctx.end(self.down_channel)
-        for t in self.assigned_trainers:
-            end.send(t, {"weights": self.weights, "done": False})
+        end.send_many(
+            self.assigned_trainers, {"weights": self.weights, "done": False}
+        )
 
     def aggregate(self) -> None:
         if self._work_done or not self.active:
@@ -162,8 +163,7 @@ class CoordGlobalAggregator(GlobalAggregator):
         if self._work_done:
             return
         end = self.ctx.end(self.down_channel)
-        for a in self.active_aggs:
-            end.send(a, {"weights": self.weights, "done": False})
+        end.send_many(self.active_aggs, {"weights": self.weights, "done": False})
 
     def aggregate(self) -> None:
         if self._work_done:
@@ -249,8 +249,9 @@ class Coordinator(Role):
                 },
             )
         gl_end = self.ctx.end(COORD_GLOBAL)
-        for g in self._members(COORD_GLOBAL):
-            gl_end.send(g, {"active_aggs": active, "done": done})
+        gl_end.send_many(
+            self._members(COORD_GLOBAL), {"active_aggs": active, "done": done}
+        )
         self._active_now = active
         if done:
             self._work_done = True

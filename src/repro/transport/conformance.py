@@ -252,13 +252,17 @@ def check_dropout_mid_recv_fifo(factory: Factory) -> None:
 
 
 def check_dropout_on_send(factory: Factory) -> None:
-    """A sender dying mid-transfer delivers nothing."""
+    """A sender dying mid-transfer delivers nothing. Pipelined transports
+    may defer the fault past the fire-and-forget send itself, but it must
+    surface no later than the sender's next synchronous op (the barrier
+    ``now`` below) — never silently retried or dropped."""
     be = factory()
     be.set_link(CH, "a-0", LinkModel(bandwidth=10.0))  # 100B -> 10s transfer
     ea, eb = _pair(be)
     be.set_drop("a-0", at=4.0)
     try:
         ea.send("b-0", np.zeros(25, np.float32))
+        be.now("a-0")  # ack barrier for pipelined sends
     except WorkerDropped as exc:
         assert exc.worker == "a-0" and exc.at == 4.0
     else:
@@ -318,6 +322,143 @@ def check_stats_accounting(factory: Factory) -> None:
     stats = dict(be.stats)
     assert stats.get(f"bytes:{CH}") == 200.0  # 100 elements x 2 bytes
     assert stats.get(f"msgs:{CH}") == 1.0
+
+
+# ------------------------------------------------------------------ #
+# send_many (broadcast fan-out) checks
+# ------------------------------------------------------------------ #
+_SM_DSTS = ("b-0", "b-1", "b-2")
+
+
+def _fanout_setup(be: TransportBackend) -> None:
+    for w in ("a-0", *_SM_DSTS, "c-0"):
+        be.join(CH, G, w)
+
+
+def _wire_stats(stats: Dict[str, float], channel: str) -> Dict[str, float]:
+    """``channel``'s accounting keys, normalized to their prefix, that must
+    match the per-dst send loop exactly. (``payload_encodes:`` deliberately
+    excluded — fewer encodes is the whole point of the fast path.)"""
+    prefixes = ("bytes:", "msgs:", "raw_bytes:", "coded_bytes:")
+    return {
+        p: float(stats[p + channel]) for p in prefixes if (p + channel) in stats
+    }
+
+
+def check_send_many_delivery(factory: Factory) -> None:
+    """send_many delivers the payload to exactly the given dst set."""
+    be = factory()
+    _fanout_setup(be)
+    payload = {"w": np.arange(8, dtype=np.float32), "done": False}
+    be.send_many(CH, G, "a-0", [], payload)  # empty dst list is a no-op
+    be.send_many(CH, G, "a-0", list(_SM_DSTS), payload)
+    for dst in _SM_DSTS:
+        got = be.recv(CH, G, dst, "a-0", timeout=5.0)
+        assert got["done"] is False
+        assert np.asarray(got["w"]).tobytes() == payload["w"].tobytes(), dst
+    # a joined member outside the dst list receives nothing
+    assert be.peek(CH, G, "c-0", "a-0") is None
+    for dst in _SM_DSTS:
+        assert be.peek(CH, G, dst, "a-0") is None  # exactly one copy each
+
+
+def check_send_many_fifo_interleave(factory: Factory) -> None:
+    """send_many interleaves with plain sends in issue order per mailbox."""
+    be = factory()
+    _fanout_setup(be)
+    be.send(CH, G, "a-0", "b-0", "first")
+    be.send_many(CH, G, "a-0", ["b-0", "b-1"], "fanned")
+    be.send(CH, G, "a-0", "b-0", "last")
+    got = [be.recv(CH, G, "b-0", "a-0", timeout=5.0) for _ in range(3)]
+    assert got == ["first", "fanned", "last"], got
+    assert be.recv(CH, G, "b-1", "a-0", timeout=5.0) == "fanned"
+
+
+def check_send_many_accounting(factory: Factory) -> None:
+    """Clock arithmetic and byte accounting are bit-identical to the
+    per-dst send loop: same sender clock, same per-dst arrivals, same
+    bytes/msgs (and raw/coded bytes on coded transports). Each comparison
+    run lives on its own channel with its own worker names, so the check
+    stays exact when ``factory`` hands out clients of one shared hub."""
+    payload = {"w": np.arange(25, dtype=np.float32)}  # 100B on the wire
+
+    def _run(fanout: bool) -> tuple:
+        tag = "many" if fanout else "loop"
+        ch = f"conf-sm-{tag}"
+        src = f"sma-{tag}"
+        dsts = [f"smb{i}-{tag}" for i in range(3)]
+        be = factory()
+        be.set_link(ch, src, LinkModel(bandwidth=100.0, latency=1.0))
+        for w in (src, *dsts):
+            be.join(ch, G, w)
+        if fanout:
+            be.send_many(ch, G, src, dsts, payload)
+        else:
+            for dst in dsts:
+                be.send(ch, G, src, dst, payload)
+        arrivals = []
+        for dst in dsts:
+            got = be.earliest(ch, G, dst, [src])
+            assert got is not None, dst
+            arrivals.append(float(got[0]))
+        return be.now(src), arrivals, _wire_stats(dict(be.stats), ch)
+
+    clock_loop, arr_loop, stats_loop = _run(fanout=False)
+    clock_many, arr_many, stats_many = _run(fanout=True)
+    assert clock_many == clock_loop, (clock_many, clock_loop)
+    assert arr_many == arr_loop, (arr_many, arr_loop)
+    assert stats_many == stats_loop, (stats_many, stats_loop)
+
+
+def check_send_many_stateful_fallback(factory: Factory) -> None:
+    """A link-stateful codec (per-dst error-feedback residuals) must make
+    send_many behave exactly like the per-dst send loop: per-dst payloads
+    and accounting bit-identical across two consecutive fan-outs (the
+    second send is where a shared-encode shortcut would corrupt per-link
+    residual state)."""
+    be_probe = factory()
+    if getattr(be_probe, "set_codec", None) is None:
+        return  # codec-free transport: nothing to fall back from
+
+    payload = {"w": np.linspace(-1.0, 1.0, 64).astype(np.float32)}
+    extra = {"w": (np.linspace(1.0, -1.0, 64) * 0.5).astype(np.float32)}
+
+    def _run(fanout: bool) -> tuple:
+        tag = "many" if fanout else "loop"
+        ch = f"conf-tk-{tag}"
+        src = f"tka-{tag}"
+        dsts = [f"tkb0-{tag}", f"tkb1-{tag}"]
+        be = factory()
+        be.set_codec(ch, "topk0.25")
+        for w in (src, *dsts):
+            be.join(ch, G, w)
+
+        def _take(dst: str) -> bytes:
+            return np.asarray(be.recv(ch, G, dst, src, timeout=5.0)["w"]).tobytes()
+
+        def _fan() -> None:
+            if fanout:
+                be.send_many(ch, G, src, dsts, payload)
+            else:
+                for dst in dsts:
+                    be.send(ch, G, src, dst, payload)
+
+        rounds = []
+        # fan-out, then a dsts[0]-only send (residuals now DIVERGE per
+        # dst), then a second fan-out whose per-dst payloads legitimately
+        # differ — a shared-encode shortcut cannot reproduce the loop here
+        _fan()
+        rounds.append([_take(dst) for dst in dsts])
+        be.send(ch, G, src, dsts[0], extra)
+        rounds.append([_take(dsts[0])])
+        _fan()
+        rounds.append([_take(dst) for dst in dsts])
+        return rounds, _wire_stats(dict(be.stats), ch)
+
+    rounds_loop, stats_loop = _run(fanout=False)
+    rounds_many, stats_many = _run(fanout=True)
+    assert rounds_many == rounds_loop
+    assert stats_many == stats_loop, (stats_many, stats_loop)
 
 
 # ------------------------------------------------------------------ #
@@ -485,6 +626,10 @@ CONFORMANCE_CHECKS: Dict[str, Callable[[Factory], None]] = {
     "supervisor_rejoin_reset": check_supervisor_rejoin_reset,
     "clock_ops": check_clock_ops,
     "stats_accounting": check_stats_accounting,
+    "send_many_delivery": check_send_many_delivery,
+    "send_many_fifo_interleave": check_send_many_fifo_interleave,
+    "send_many_accounting": check_send_many_accounting,
+    "send_many_stateful_fallback": check_send_many_stateful_fallback,
 }
 
 

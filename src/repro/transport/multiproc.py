@@ -53,6 +53,7 @@ from repro.transport.wire import (
 )
 
 __all__ = [
+    "DeferredAckError",
     "MultiprocBackend",
     "ShardRouter",
     "ShardedTransportHub",
@@ -79,6 +80,18 @@ _IDEMPOTENT_OPS = frozenset({
     "set_drop", "clear_drop", "poison", "set_link", "set_wire_dtype",
     "set_clock",
 })
+
+
+class DeferredAckError(ConnectionError):
+    """Connection fault while draining deferred send acks.
+
+    The pipelined send path is fire-and-forget: the hub's replies are
+    collected at the next synchronous op on the connection. If the
+    connection dies mid-drain, the outcome of those sends is ambiguous —
+    deliberately NOT a ``ConnectionResetError``/``BrokenPipeError``, so
+    ``_call``'s idempotent-op retry can never reconnect over it and mask
+    the fault (PR 4's rule: non-idempotent ops never silently retry).
+    """
 
 
 # ------------------------------------------------------------------ #
@@ -120,12 +133,16 @@ class TransportHub:
         port: int = 0,
         wall_clock: bool = True,
         backend: Optional[InprocBackend] = None,
+        backlog: int = 1024,
     ) -> None:
         self.backend = backend or InprocBackend("multiproc-hub", wall_clock=wall_clock)
         self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._sock.bind((host, port))
-        self._sock.listen(128)
+        # a pool of 1k workers connects in one burst; an undersized backlog
+        # turns that into connection-refused storms (the kernel may clamp to
+        # net.core.somaxconn, and MultiprocBackend._conn retries once)
+        self._sock.listen(max(1, int(backlog)))
         self._closed = threading.Event()
         self._accept_thread = threading.Thread(
             target=self._accept_loop, name="transport-hub-accept", daemon=True
@@ -300,11 +317,13 @@ class ShardedTransportHub:
         shards: Sequence[str],
         host: str = "127.0.0.1",
         wall_clock: bool = True,
+        backlog: int = 1024,
     ) -> None:
         self.root = TransportHub(
             host=host,
             wall_clock=wall_clock,
             backend=InprocBackend("multiproc-hub-root", wall_clock=wall_clock),
+            backlog=backlog,
         )
         self.shards: Dict[str, TransportHub] = {}
         try:
@@ -315,6 +334,7 @@ class ShardedTransportHub:
                     backend=InprocBackend(
                         f"multiproc-hub:{key}", wall_clock=wall_clock
                     ),
+                    backlog=backlog,
                 )
         except BaseException:
             self.close()
@@ -420,6 +440,12 @@ class MultiprocBackend:
     # one reconnect-with-backoff on a transient connection fault before the
     # error surfaces (the first slice of the multi-host reconnect story)
     RETRY_BACKOFF = 0.05
+    # max in-flight fire-and-forget sends per connection before the client
+    # drains acks inline: bounds the hub's reply backlog (an ack frame is
+    # ~tens of bytes, so the cap keeps worst-case buffered replies far under
+    # any socket buffer — client writes and hub replies can never deadlock
+    # on mutually full buffers)
+    MAX_PENDING_ACKS = 256
 
     def __init__(self, address: Tuple[str, int], name: str = "multiproc") -> None:
         self.name = name
@@ -445,15 +471,76 @@ class MultiprocBackend:
     def _conn(self) -> socket.socket:
         sock = getattr(self._local, "sock", None)
         if sock is None:
-            sock = socket.create_connection(self.address, timeout=30.0)
+            try:
+                sock = socket.create_connection(self.address, timeout=30.0)
+            except (ConnectionRefusedError, TimeoutError):
+                # a hub draining a full accept backlog (1k pooled workers
+                # connecting in one burst) can refuse briefly — one bounded
+                # retry before the fault surfaces
+                time.sleep(self.RETRY_BACKOFF)
+                sock = socket.create_connection(self.address, timeout=30.0)
             sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
             # blocking after connect: receive waits are governed by the hub's
             # op timeout, not the socket's
             sock.settimeout(None)
             self._local.sock = sock
+            self._local.pending = 0
             with self._socks_lock:
                 self._all_socks.append(sock)
         return sock
+
+    def _drop_conn(self, sock: socket.socket) -> None:
+        """Discard a faulted connection so the next call reconnects. Any
+        un-drained acks died with the stream."""
+        self._local.pending = 0
+        try:
+            sock.close()
+        finally:
+            self._local.sock = None
+
+    def _drain_acks(self, sock: socket.socket) -> None:
+        """Collect the hub's replies for every fire-and-forget send still in
+        flight on this connection. The first deferred error (e.g. a
+        ``WorkerDropped`` from a send) is re-raised only after the stream is
+        realigned — every pending reply consumed — so the connection stays
+        usable. A connection fault mid-drain leaves the outcome of those
+        sends ambiguous and surfaces as ``DeferredAckError``, which the
+        retry layer never masks."""
+        pending = getattr(self._local, "pending", 0)
+        if not pending:
+            return
+        first_err: Optional[Tuple[str, List[Any]]] = None
+        try:
+            while pending:
+                status, value = recv_obj(sock)
+                pending -= 1
+                self._local.pending = pending
+                if status != "ok" and first_err is None:
+                    first_err = (str(value[0]), list(value[1]))
+        except (ConnectionError, OSError) as exc:
+            n = pending
+            self._drop_conn(sock)
+            raise DeferredAckError(
+                f"connection fault with {n} deferred send ack(s) outstanding"
+            ) from exc
+        if first_err is not None:
+            _raise_error(first_err[0], first_err[1])
+
+    def _send_nowait(self, op: str, *args: Any) -> None:
+        """Issue a send-family op fire-and-forget (pipelined): write the
+        frame, defer collecting the hub's ack to the next synchronous op on
+        this connection. A deferred fault therefore surfaces before the next
+        op returns — never silently retried. A write failure here is
+        unambiguous (the op was not dispatched) and raises synchronously."""
+        sock = self._conn()
+        if getattr(self._local, "pending", 0) >= self.MAX_PENDING_ACKS:
+            self._drain_acks(sock)
+        try:
+            send_obj(sock, (op, list(args)))
+        except (ConnectionError, OSError):
+            self._drop_conn(sock)
+            raise
+        self._local.pending = getattr(self._local, "pending", 0) + 1
 
     def _call(self, op: str, *args: Any) -> Any:
         """One RPC to the hub, with a single reconnect-with-backoff retry on
@@ -462,7 +549,9 @@ class MultiprocBackend:
         to ``_IDEMPOTENT_OPS``: a fault racing the hub's dispatch may have
         applied the op already, and replaying e.g. ``send`` or ``advance``
         would double-apply it (duplicate message, double clock step) —
-        those ops surface the fault to the caller instead."""
+        those ops surface the fault to the caller instead. (A fault while
+        draining *deferred* acks arrives as ``DeferredAckError``, which is
+        deliberately outside the retried types.)"""
         try:
             return self._call_once(op, *args)
         except (ConnectionResetError, BrokenPipeError):
@@ -473,15 +562,15 @@ class MultiprocBackend:
 
     def _call_once(self, op: str, *args: Any) -> Any:
         sock = self._conn()
+        # synchronous ops are the pipeline's ack barrier: deferred send
+        # faults surface here, before this op is dispatched
+        self._drain_acks(sock)
         try:
             send_obj(sock, (op, list(args)))
             status, value = recv_obj(sock)
         except (ConnectionError, OSError):
             # drop the broken socket so the next call reconnects
-            try:
-                sock.close()
-            finally:
-                self._local.sock = None
+            self._drop_conn(sock)
             raise
         if status == "ok":
             return value
@@ -492,6 +581,20 @@ class MultiprocBackend:
         """Close every connection this client ever opened (all threads).
         Teardown-only: an in-flight call on another thread surfaces as a
         ConnectionError there."""
+        # Drain this thread's deferred acks before closing: closing a socket
+        # with unread replies in the kernel receive buffer resets (RST) the
+        # stream, which may discard frames written but not yet read by the
+        # hub — a worker whose *last* op was a fire-and-forget send (e.g. an
+        # aggregator's final done-broadcast) would silently lose it. Once the
+        # acks are in, the hub has processed every frame. Other threads'
+        # pipelines are unreachable from here (pending counts are
+        # thread-local); their owners drain at their own sync ops.
+        sock = getattr(self._local, "sock", None)
+        if sock is not None:
+            try:
+                self._drain_acks(sock)
+            except Exception:
+                pass
         with self._socks_lock:
             socks, self._all_socks = self._all_socks, []
         for sock in socks:
@@ -500,6 +603,7 @@ class MultiprocBackend:
             except OSError:
                 pass
         self._local.sock = None
+        self._local.pending = 0
 
     # --------------------------- membership --------------------------- #
     def join(self, channel: str, group: str, worker: str) -> None:
@@ -512,6 +616,26 @@ class MultiprocBackend:
         return list(self._call("peers", channel, group, me))
 
     # ---------------------------- messaging --------------------------- #
+    def _bump_codec_stats(
+        self, channel: str, raw: float, coded: float, encodes: float
+    ) -> None:
+        """Update the client-side accounting counters. The O(structure)
+        counting walks run in the caller, outside the lock — the lock guards
+        only the dict updates, so concurrent sender threads no longer
+        serialize on payload-sized work."""
+        with self._codec_stats_lock:
+            stats = self._codec_stats
+            if raw or coded:
+                stats[f"raw_bytes:{channel}"] = (
+                    stats.get(f"raw_bytes:{channel}", 0.0) + raw
+                )
+                stats[f"coded_bytes:{channel}"] = (
+                    stats.get(f"coded_bytes:{channel}", 0.0) + coded
+                )
+            stats[f"payload_encodes:{channel}"] = (
+                stats.get(f"payload_encodes:{channel}", 0.0) + encodes
+            )
+
     def send(self, channel: str, group: str, src: str, dst: str, payload: Any) -> None:
         codec = self._codecs.get(channel)
         if codec is not None:
@@ -520,19 +644,42 @@ class MultiprocBackend:
             )
             # O(structure) counting walks — the achieved ratio lands in
             # stats without re-serializing either payload
-            with self._codec_stats_lock:
-                self._codec_stats[f"raw_bytes:{channel}"] = (
-                    self._codec_stats.get(f"raw_bytes:{channel}", 0.0)
-                    + encoded_size(payload)
-                )
-                self._codec_stats[f"coded_bytes:{channel}"] = (
-                    self._codec_stats.get(f"coded_bytes:{channel}", 0.0)
-                    + encoded_size(coded)
-                )
+            raw = float(encoded_size(payload))
+            enc = float(encoded_size(coded))
+            self._bump_codec_stats(channel, raw, enc, 1.0)
             payload = coded
         else:
             payload = encode_payload(payload, "")
-        self._call("send", channel, group, src, dst, payload)
+            self._bump_codec_stats(channel, 0.0, 0.0, 1.0)
+        self._send_nowait("send", channel, group, src, dst, payload)
+
+    def send_many(
+        self, channel: str, group: str, src: str, dsts: Sequence[str], payload: Any
+    ) -> None:
+        """O(1)-encode fan-out: encode the payload once and ship ONE framed
+        RPC; the hub delivers to every dst broker-side. Falls back to the
+        per-dst ``send`` loop when the channel's codec is link-stateful
+        (per-dst error-feedback residuals make per-dst payloads legitimately
+        differ). Byte accounting equals the per-dst loop exactly: stateless
+        encodes are deterministic, so N× one walk == sum of N walks."""
+        dsts = list(dsts)
+        if not dsts:
+            return
+        codec = self._codecs.get(channel)
+        if codec is not None and codec.link_stateful:
+            for dst in dsts:
+                self.send(channel, group, src, dst, payload)
+            return
+        if codec is not None:
+            coded = encode_payload(payload, codec, link=(channel, group, src))
+            raw = float(encoded_size(payload)) * len(dsts)
+            enc = float(encoded_size(coded)) * len(dsts)
+            self._bump_codec_stats(channel, raw, enc, 1.0)
+            payload = coded
+        else:
+            payload = encode_payload(payload, "")
+            self._bump_codec_stats(channel, 0.0, 0.0, 1.0)
+        self._send_nowait("send_many", channel, group, src, dsts, payload)
 
     def recv(
         self, channel: str, group: str, me: str, end: str, timeout: Optional[float]
@@ -710,6 +857,14 @@ class ShardRouter:
     # ---------------------------- messaging --------------------------- #
     def send(self, channel: str, group: str, src: str, dst: str, payload: Any) -> None:
         self._be(group).send(channel, group, src, dst, payload)
+
+    def send_many(
+        self, channel: str, group: str, src: str, dsts: Sequence[str], payload: Any
+    ) -> None:
+        # every (channel, group) topic lives on exactly one shard, so the
+        # whole dst list is owned by one hub: one encode per shard touched —
+        # and a single send_many call touches exactly one
+        self._be(group).send_many(channel, group, src, dsts, payload)
 
     def recv(
         self, channel: str, group: str, me: str, end: str, timeout: Optional[float]

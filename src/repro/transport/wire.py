@@ -492,6 +492,11 @@ class WireCodec:
     name = "identity"
     lossy = False
     stateful = False
+    # True when encode output depends on the concrete (channel, group, src,
+    # dst) link — e.g. per-link error-feedback residuals. The broadcast
+    # fan-out fast path (one encode shipped to many dsts) is only valid when
+    # this is False; link-stateful codecs fall back to per-dst encodes.
+    link_stateful = False
 
     def encode(self, payload: Any, link: Any = ()) -> Any:
         return payload
@@ -698,6 +703,10 @@ class TopKCodec(WireCodec):
 
     lossy = True
     stateful = True
+    # residuals are keyed per (channel, group, src, dst): identical payloads
+    # legitimately encode differently per destination, so the O(1)-encode
+    # broadcast fast path must not ship one coded body to many dsts
+    link_stateful = True
 
     _TKV, _TKI, _TKS, _TKD = "__tkv__", "__tki__", "__tks__", "__tkd__"
     _TK_ESC = "__tk_escape__"

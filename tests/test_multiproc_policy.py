@@ -223,6 +223,95 @@ class TestMgmtPlaneDeployment:
         )
 
 
+class TestBroadcastFanoutTransparency:
+    """The send_many broadcast fast path is a pure performance switch:
+    seeded jobs produce byte-identical observables with it on vs off, on
+    the threaded runtime and over real processes (spawned workers pick the
+    toggle up from the inherited environment)."""
+
+    @staticmethod
+    def _with_fanout(enabled, fn):
+        import os
+
+        from repro.core import channels
+
+        prev = os.environ.get("REPRO_BROADCAST_FANOUT")
+        os.environ["REPRO_BROADCAST_FANOUT"] = "1" if enabled else "0"
+        channels.set_broadcast_fanout(enabled)
+        try:
+            return fn()
+        finally:
+            if prev is None:
+                os.environ.pop("REPRO_BROADCAST_FANOUT", None)
+            else:
+                os.environ["REPRO_BROADCAST_FANOUT"] = prev
+            channels.set_broadcast_fanout(prev is None or prev not in ("0", "false"))
+
+    @staticmethod
+    def _observables(res):
+        assert not res.errors, res.errors
+        glob = res.program("global-aggregator-0")
+        out = {
+            "dropped": res.dropped,
+            "events": res.events,
+            "channel_bytes": res.channel_bytes,
+            "weights": {
+                k: np.asarray(v).tobytes() for k, v in res.global_weights().items()
+            },
+        }
+        if getattr(glob, "participation_log", None):
+            out["participation"] = _participation(res)
+        return out
+
+    def test_sync_job_identical_fanout_on_vs_off(self):
+        def _sync_job():
+            return _classical_job(rounds=2)
+
+        on_in = self._with_fanout(True, lambda: run_job(_sync_job(), timeout=60))
+        off_in = self._with_fanout(False, lambda: run_job(_sync_job(), timeout=60))
+        assert self._observables(on_in) == self._observables(off_in)
+        on_mp = self._with_fanout(
+            True, lambda: run_job_multiproc(_sync_job(), timeout=120)
+        )
+        off_mp = self._with_fanout(
+            False, lambda: run_job_multiproc(_sync_job(), timeout=120)
+        )
+        assert self._observables(on_mp) == self._observables(off_mp)
+        # and across deployments, with the fast path live on both
+        assert self._observables(on_in) == self._observables(on_mp)
+
+    def test_deadline_job_identical_fanout_on_vs_off(self):
+        pol = RuntimePolicy(
+            mode="deadline", deadline=2.0, grace=5.0,
+            dropouts={"trainer-1": 0.7},
+        )
+        per_worker = {
+            "trainer-0": {"compute_time": 0.5},
+            "trainer-1": {"compute_time": 0.5},
+            "trainer-2": {"compute_time": 5.0},
+        }
+        kw = dict(policy=pol, per_worker_hyperparams=per_worker)
+        on_in = self._with_fanout(
+            True, lambda: run_job(_classical_job(), timeout=60, **kw)
+        )
+        off_in = self._with_fanout(
+            False, lambda: run_job(_classical_job(), timeout=60, **kw)
+        )
+        assert self._observables(on_in) == self._observables(off_in)
+        on_mp = self._with_fanout(
+            True, lambda: run_job_multiproc(_classical_job(), timeout=120, **kw)
+        )
+        off_mp = self._with_fanout(
+            False, lambda: run_job_multiproc(_classical_job(), timeout=120, **kw)
+        )
+        assert self._observables(on_mp) == self._observables(off_mp)
+        assert self._observables(on_in) == self._observables(on_mp)
+        # the schedule actually bit: straggler excluded, dropout recorded
+        part = _participation(on_mp)
+        assert part[0]["excluded"] == ["trainer-2"]
+        assert on_mp.dropped == {"trainer-1": 0.7}
+
+
 class TestOrphanCascadeOverMultiproc:
     def test_intermediate_dropout_surfaces_same_orphans_as_inproc(self):
         """Dropout-without-rejoin of an H-FL intermediate aggregator over

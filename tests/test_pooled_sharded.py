@@ -126,6 +126,47 @@ class TestPooledShardedEquivalence:
         assert base.channel_bytes == ps.channel_bytes
 
 
+class TestShardedFanoutTransparency:
+    def test_sharded_deadline_job_identical_fanout_on_vs_off(self):
+        """The send_many fast path over the sharded fabric (one encode per
+        owning shard, broker-side fan-out) is observationally invisible: a
+        grouped deadline job is byte-identical with the fast path on vs off,
+        and to the single-hub deployment with it on."""
+        import os
+
+        from repro.core import channels
+
+        # generous wall-clock grace: no straggler schedule here, so collection
+        # exits as soon as all four updates arrive — the headroom only shields
+        # the three back-to-back process trees from CI load spikes
+        pol = RuntimePolicy(mode="deadline", deadline=10.0, grace=30.0)
+        per_worker = {f"trainer-{i}": {"compute_time": 1.0} for i in range(4)}
+        kw = dict(policy=pol, per_worker_hyperparams=per_worker)
+
+        def _with_fanout(enabled, **extra):
+            prev = os.environ.get("REPRO_BROADCAST_FANOUT")
+            os.environ["REPRO_BROADCAST_FANOUT"] = "1" if enabled else "0"
+            channels.set_broadcast_fanout(enabled)
+            try:
+                res = run_job_multiproc(_grouped_job(), timeout=180, **extra, **kw)
+            finally:
+                if prev is None:
+                    os.environ.pop("REPRO_BROADCAST_FANOUT", None)
+                else:
+                    os.environ["REPRO_BROADCAST_FANOUT"] = prev
+                channels.set_broadcast_fanout(
+                    prev is None or prev not in ("0", "false")
+                )
+            assert not res.errors, res.errors
+            return res
+
+        on_sharded = _with_fanout(True, pool_size=2, sharded=True)
+        off_sharded = _with_fanout(False, pool_size=2, sharded=True)
+        assert _observables(on_sharded) == _observables(off_sharded)
+        on_single = _with_fanout(True)
+        assert _observables(on_sharded) == _observables(on_single)
+
+
 class TestDeployOptionsThroughControlPlane:
     def test_create_job_forwards_pool_and_shard_knobs(self):
         """``APIServer.create_job(deploy_options=...)`` forwards runner knobs
