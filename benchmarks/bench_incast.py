@@ -1,0 +1,164 @@
+"""Uplink incast benchmark: hub-side partial aggregation (reduce plane).
+
+Measures one weight-sync uplink round — ``n_srcs`` clients each sending one
+update frame into a single server end through a live ``TransportHub`` —
+with the reduce plane off (the server decodes and folds every frame via the
+ordered fold) vs on (the broker folds frames as they arrive and the server
+receives O(shards) partial frames).
+
+The server fold runs in a consumer thread started *before* the sends, so
+hub mailbox memory stays bounded by the producer/consumer gap in both modes
+and the timed region covers the full incast: last send issued *and* the
+server-side mean finalized. Client sends ride the pipelined send path
+(fire-and-forget acks) exactly as ``WeightSync`` trainers do.
+
+The smoke grid also asserts the reduce plane's frame accounting: with the
+plan on, exactly ``shards`` partial frames reach the server while the
+client-leg ``msgs:`` count — and therefore the simulated-clock arithmetic —
+is identical to the unreduced incast.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro import transport as _transport  # noqa: F401 - registers the loopback
+from repro.core.channels import ChannelManager
+from repro.core.roles import StreamingMean
+from repro.core.tag import Channel as ChannelSpec
+from repro.transport.multiproc import TransportHub, make_backend_factory
+from repro.transport.wire import reduce_src
+
+from benchmarks.common import result_meta
+
+# (elements, label, fan-ins): 64KB frames sweep the incast width; 4MB frames
+# are capped at 256-way — the unreduced baseline must hold a visible slice
+# of the round in hub mailboxes, and 1024 x 4MB baselines nothing real runs
+SIZES_FULL = [(16384, "64KB", (64, 256, 1024)), (1 << 20, "4MB", (64, 256))]
+SIZES_SMOKE = [(16384, "64KB", (64,))]
+
+# full-mode acceptance floor: broker-side reduce must at least halve the
+# 256-way x 4MB incast wall-clock (O(shards) frames vs O(n_srcs) decodes)
+SPEEDUP_FLOOR = 2.0
+SPEEDUP_CELL = (256, "4MB")
+
+
+def _incast_secs(shards: int, n_srcs: int, n_elems: int, iters: int) -> tuple:
+    """Wall-clock of ``iters`` incast rounds; ``shards=0`` = reduce off.
+
+    Returns ``(seconds_per_round, mean_tree, stats_dict)`` — the mean is
+    returned so callers can cross-check reduce on vs off numerically.
+    """
+    hub = TransportHub()
+    mgr = ChannelManager(
+        [ChannelSpec(name="incast", pair=("src", "dst"))],
+        backend_factory=make_backend_factory(hub.worker_address),
+    )
+    try:
+        srcs = sorted(f"src-{i}" for i in range(n_srcs))
+        server = mgr.end("incast", "default", "dst-0")
+        ends = {s: mgr.end("incast", "default", s) for s in srcs}
+        if shards:
+            server.install_reduce(srcs, shards)
+        rng = np.random.default_rng(7)
+        base = rng.normal(size=n_elems).astype(np.float32)
+        payloads = {
+            s: {"weights": {"w": base + np.float32(i)}, "num_samples": 1 + i % 3}
+            for i, s in enumerate(srcs)
+        }
+        mean_box: Dict[str, object] = {}
+
+        def _fold() -> None:
+            acc = StreamingMean()
+            if shards:
+                for i in range(shards):
+                    part = server.recv(reduce_src(i), timeout=120.0)
+                    acc.fold_partial(
+                        part["acc"], part["num_samples"], count=part["count"]
+                    )
+            else:
+                for _, msg in server.recv_ordered(srcs, timeout=120.0):
+                    acc.fold(msg["weights"], float(msg["num_samples"]))
+            mean_box["mean"], _ = acc.finalize()
+
+        total = 0.0
+        for _ in range(iters):
+            consumer = threading.Thread(target=_fold)
+            t0 = time.perf_counter()
+            consumer.start()
+            for s in srcs:
+                ends[s].send("dst-0", payloads[s])
+            consumer.join()
+            total += time.perf_counter() - t0
+        return total / iters, mean_box["mean"], mgr.channel_stats("incast")
+    finally:
+        mgr.close()
+        hub.close()
+
+
+def run(smoke: bool = False) -> List[Dict[str, object]]:
+    sizes = SIZES_SMOKE if smoke else SIZES_FULL
+    iters = 2 if smoke else 3
+    rows: List[Dict[str, object]] = []
+    print(f"{'payload':>10} {'srcs':>6} {'reduce':>8} {'round':>12} {'speedup':>9}")
+    for n_elems, label, fanins in sizes:
+        for n_srcs in fanins:
+            shards = max(1, n_srcs // 64)
+            cell = {}
+            for mode, plan in (("off", 0), ("on", shards)):
+                secs, mean, stats = _incast_secs(plan, n_srcs, n_elems, iters)
+                cell[mode] = (secs, mean, stats)
+                rows.append(
+                    result_meta(
+                        backend="multiproc",
+                        payload=label,
+                        payload_bytes=n_elems * 4,
+                        srcs=n_srcs,
+                        reduce=mode,
+                        shards=plan,
+                        round_ms=secs * 1e3,
+                        server_frames=(
+                            stats.get("hub_partials", 0.0)
+                            if plan
+                            else stats.get("msgs", 0.0)
+                        )
+                        / iters,
+                    )
+                )
+            speedup = cell["off"][0] / cell["on"][0]
+            print(
+                f"{label:>10} {n_srcs:>6} {'off':>8} "
+                f"{cell['off'][0] * 1e3:>10.1f}ms {'':>9}"
+            )
+            print(
+                f"{label:>10} {n_srcs:>6} {'on':>8} "
+                f"{cell['on'][0] * 1e3:>10.1f}ms {speedup:>8.2f}x"
+            )
+            # both modes compute the same mean (bit-identical at one shard,
+            # shard-grouped fold order above it)
+            np.testing.assert_allclose(
+                cell["on"][1]["w"], cell["off"][1]["w"], rtol=1e-5, atol=1e-6
+            )
+            stats_on, stats_off = cell["on"][2], cell["off"][2]
+            # client-leg accounting identical: every src's frame is sent,
+            # clocked and byte-counted the same whether or not it is folded
+            assert stats_on.get("msgs") == stats_off.get("msgs"), (
+                stats_on, stats_off,
+            )
+            if shards:
+                # O(shards) frames reach the server, all n_srcs were folded
+                assert stats_on.get("hub_partials") == shards * iters, stats_on
+                assert stats_on.get("hub_reduced") == n_srcs * iters, stats_on
+            if not smoke and (n_srcs, label) == SPEEDUP_CELL:
+                assert speedup >= SPEEDUP_FLOOR, (
+                    f"hub reduce speedup {speedup:.2f}x < {SPEEDUP_FLOOR}x "
+                    f"at {n_srcs}-way x {label}"
+                )
+    return rows
+
+
+if __name__ == "__main__":
+    run(smoke=True)

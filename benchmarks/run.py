@@ -59,6 +59,13 @@ def main(argv=None):
         results["transport"] = bench_transport.run(smoke=True)
 
         print("=" * 72)
+        print("Smoke — uplink incast: hub-side reduce on vs off")
+        print("=" * 72)
+        from benchmarks import bench_incast
+
+        results["incast"] = bench_incast.run(smoke=True)
+
+        print("=" * 72)
         print("Smoke — wire codecs: encode/decode throughput + ratio")
         print("=" * 72)
         from benchmarks import bench_codec
@@ -141,6 +148,13 @@ def main(argv=None):
     from benchmarks import bench_transport
 
     results["transport"] = bench_transport.run()
+
+    print("=" * 72)
+    print("Uplink incast — hub-side partial aggregation on vs off")
+    print("=" * 72)
+    from benchmarks import bench_incast
+
+    results["incast"] = bench_incast.run()
 
     print("=" * 72)
     print("Wire codecs — encode/decode throughput + achieved ratio")

@@ -118,6 +118,8 @@ TRANSPORT_OPS: Tuple[str, ...] = (
     "set_link", "set_wire_dtype", "link",
     # clocks
     "now", "advance", "set_clock",
+    # reduce plane (hub-side partial aggregation of an incast topic)
+    "install_reduce",
 )
 
 
@@ -198,6 +200,17 @@ class TransportBackend(Protocol):
     def advance(self, worker: str, seconds: float) -> None: ...
     def set_clock(self, worker: str, at: float) -> None: ...
 
+    # --------------------------- reduce plane -------------------------- #
+    def install_reduce(
+        self,
+        channel: str,
+        group: str,
+        dst: str,
+        srcs: Sequence[str],
+        shards: int = 1,
+        fused: Optional[bool] = None,
+    ) -> None: ...
+
 
 # Broadcast fan-out fast path: when enabled (the default), ChannelEnd lowers
 # multi-destination sends onto the backend's ``send_many`` op — one encode /
@@ -216,6 +229,86 @@ def set_broadcast_fanout(enabled: bool) -> None:
 
 def broadcast_fanout_enabled() -> bool:
     return _FANOUT_ENABLED
+
+
+# Hub-reduce kill switch: the reduce plane is opt-in per job (``reduce_plan``
+# hyperparam), but this process-wide toggle can veto it everywhere — the
+# uplink mirror of REPRO_BROADCAST_FANOUT. Spawned workers inherit the env
+# var, so one setting governs every deployment of a job.
+_HUB_REDUCE_ENABLED = os.environ.get("REPRO_HUB_REDUCE", "1") not in ("0", "false")
+
+
+def set_hub_reduce(enabled: bool) -> None:
+    """Enable/disable hub-side partial aggregation process-wide."""
+    global _HUB_REDUCE_ENABLED
+    _HUB_REDUCE_ENABLED = bool(enabled)
+
+
+def hub_reduce_enabled() -> bool:
+    return _HUB_REDUCE_ENABLED
+
+
+def reduce_blocks(srcs: Sequence[str], shards: int) -> List[List[str]]:
+    """Partition an incast's sources into the reduce plan's shard blocks.
+
+    Sorted sources, contiguous blocks, sizes as even as possible — the ONE
+    partition function shared by the installing server and the reducing
+    broker, so both sides agree on which pseudo-source delivers which
+    partial. Returns ``[]`` when ``srcs`` is empty or ``shards < 1`` (reduce
+    off)."""
+    order = sorted(srcs)
+    if not order or int(shards) < 1:
+        return []
+    n = min(int(shards), len(order))
+    q, r = divmod(len(order), n)
+    blocks: List[List[str]] = []
+    i = 0
+    for b in range(n):
+        size = q + (1 if b < r else 0)
+        blocks.append(order[i:i + size])
+        i += size
+    return blocks
+
+
+# Decode pool for the per-frame incast path: the receiving end fetches (and,
+# on socket transports, wire-decodes) frames from several sources
+# concurrently, while the aggregation fold still consumes them in sorted-src
+# order — parallel decode, unchanged fold order, so results stay
+# bit-identical to the sequential loop. 0 or 1 disables pooling.
+_DECODE_POOL_WORKERS = int(os.environ.get("REPRO_DECODE_POOL", "4") or 0)
+_DECODE_POOL = None
+_DECODE_POOL_SIZE = 0
+_DECODE_POOL_LOCK = threading.Lock()
+
+
+def set_decode_pool(workers: int) -> None:
+    """Set the receive-side decode concurrency (0/1 = sequential)."""
+    global _DECODE_POOL_WORKERS
+    _DECODE_POOL_WORKERS = max(0, int(workers))
+
+
+def decode_pool_workers() -> int:
+    return _DECODE_POOL_WORKERS
+
+
+def _decode_pool(workers: int):
+    """Shared lazily-built executor; grows if a larger pool is requested.
+
+    One process-wide pool: its threads acquire per-backend thread-local
+    sockets on first use, so concurrent fetches from a transport hub ride
+    separate connections and genuinely overlap decode work."""
+    global _DECODE_POOL, _DECODE_POOL_SIZE
+    from concurrent.futures import ThreadPoolExecutor
+
+    with _DECODE_POOL_LOCK:
+        if _DECODE_POOL is None or _DECODE_POOL_SIZE < workers:
+            if _DECODE_POOL is not None:
+                _DECODE_POOL.shutdown(wait=False)
+            _DECODE_POOL = ThreadPoolExecutor(
+                max_workers=workers, thread_name_prefix="decode-pool"
+            )
+            _DECODE_POOL_SIZE = workers
+        return _DECODE_POOL
 
 
 class ChannelEnd:
@@ -304,6 +397,53 @@ class ChannelEnd:
     def broadcast(self, msg: Any) -> None:
         self.send_many(self.ends(), msg)
 
+    # --------------------------- reduce plane -------------------------- #
+    def install_reduce(
+        self, srcs: Sequence[str], shards: int = 1, fused: Optional[bool] = None
+    ) -> None:
+        """Install (or, with empty ``srcs``/``shards < 1``, remove) a
+        hub-side reduce spec for this end's incast.
+
+        While installed, the broker folds arriving update frames from
+        ``srcs`` into per-shard ``(partial_sum, total_weight, srcs)``
+        accumulators and this end receives ONE partial frame per shard —
+        from the pseudo-sources ``wire.reduce_src(i)`` — instead of one
+        frame per source. Client-side ``bytes:``/``msgs:`` accounting is
+        untouched; the folded frames surface in ``hub_reduced:`` /
+        ``hub_partials:`` counters."""
+        self._backend.install_reduce(
+            self.channel, self.group, self.me, list(srcs), int(shards), fused
+        )
+
+    def recv_ordered(self, ends: Sequence[str], timeout: Optional[float] = 30.0):
+        """Receive one message from each of ``ends``, yielding
+        ``(end, payload)`` in sorted-``ends`` order.
+
+        With the decode pool enabled, the per-source fetches run
+        concurrently (each pool thread rides its own hub connection on
+        socket transports, so wire decode genuinely overlaps) while
+        consumption stays strictly sorted — the fold order, clock effects
+        and failure surfacing are identical to the sequential
+        ``for end in sorted(ends): recv(end)`` loop, so aggregation results
+        remain bit-identical to it. In-flight decoded frames are bounded by
+        the pool size, preserving the server's O(1)-in-group-size memory up
+        to that constant."""
+        order = sorted(ends)
+        workers = decode_pool_workers()
+        if workers <= 1 or len(order) <= 1:
+            for end in order:
+                yield end, self.recv(end, timeout=timeout)
+            return
+        pool = _decode_pool(workers)
+        futs = [
+            pool.submit(
+                self._backend.recv, self.channel, self.group, self.me, end, timeout
+            )
+            for end in order
+        ]
+        for end, fut in zip(order, futs):
+            yield end, fut.result()
+
     # ----------------------------- topology --------------------------- #
     def ends(self) -> List[str]:
         peers = self._backend.peers(self.channel, self.group, self.me)
@@ -334,6 +474,29 @@ class ChannelEnd:
 
     def drop_time(self, worker: Optional[str] = None) -> Optional[float]:
         return self._backend.drop_time(worker if worker is not None else self.me)
+
+
+class _ReduceState:
+    """Broker-side partial-aggregation state for one reduced incast topic.
+
+    ``blocks`` is the shard partition from :func:`reduce_blocks`. Arriving
+    updates are held in ``pending`` until they can be folded in sorted-src
+    order (a cursor per block), so the fold order — and therefore the shard
+    partial's bit pattern — is independent of arrival order. Out-of-order
+    buffering is bounded by the block size, never worse than the unreduced
+    mailbox backlog. When a block's cursor completes, one partial frame is
+    emitted and the block resets for the next round."""
+
+    def __init__(self, blocks: List[List[str]], fused: Optional[bool]) -> None:
+        self.blocks = blocks
+        self.fused = fused
+        self.block_of: Dict[str, int] = {
+            s: i for i, b in enumerate(blocks) for s in b
+        }
+        self.pending: List[Dict[str, Tuple[Any, float]]] = [{} for _ in blocks]
+        self.cursor: List[int] = [0] * len(blocks)
+        self.acc: List[Any] = [None] * len(blocks)
+        self.hwm: List[float] = [0.0] * len(blocks)  # latest folded arrival
 
 
 class InprocBackend:
@@ -379,6 +542,8 @@ class InprocBackend:
             float
         )
         self._clock: Dict[str, float] = collections.defaultdict(float)  # per-worker
+        # reduce plane: (channel, group, dst) -> broker-side fold state
+        self._reduce: Dict[Tuple[str, str, str], _ReduceState] = {}
         self._drop_at: Dict[str, float] = {}  # worker -> scheduled dropout time
         self._poisoned: Dict[str, float] = {}  # worker -> orphaned-at time
         self.stats: Dict[str, float] = collections.defaultdict(float)
@@ -473,6 +638,87 @@ class InprocBackend:
         with self._lock:
             return [m for m in self._members[(channel, group)] if m != me]
 
+    # --------------------------- reduce plane -------------------------- #
+    def install_reduce(
+        self,
+        channel: str,
+        group: str,
+        dst: str,
+        srcs: Sequence[str],
+        shards: int = 1,
+        fused: Optional[bool] = None,
+    ) -> None:
+        """Install/replace (or remove) the reduce spec for one incast topic.
+
+        An absolute-state write like ``set_link``: installing resets the
+        topic's accumulator state for a fresh round; empty ``srcs`` or
+        ``shards < 1`` uninstalls and restores per-frame delivery. The
+        installing server must issue this *before* the round's uploads can
+        be triggered (in practice: before its broadcast), so no update frame
+        races the spec."""
+        key = (channel, group, dst)
+        blocks = reduce_blocks(srcs, shards)
+        with self._lock:
+            if not blocks:
+                self._reduce.pop(key, None)
+            else:
+                self._reduce[key] = _ReduceState(blocks, fused)
+
+    def _reduce_ingest(
+        self,
+        channel: str,
+        group: str,
+        dst: str,
+        state: _ReduceState,
+        src: str,
+        payload: Any,
+        arrival: float,
+    ) -> bool:
+        """Fold one arriving update frame broker-side. Caller holds the lock.
+
+        Returns True when the frame was absorbed by the reduce plane (no
+        per-frame delivery); False lets the caller deliver it normally — a
+        frame that is not a weight-sync update (no ``weights`` field after
+        codec decode) must never be silently swallowed."""
+        from repro.transport.wire import decode_payload, pack_hub_partial, reduce_src
+
+        decoded = decode_payload(payload)
+        if not isinstance(decoded, dict) or "weights" not in decoded:
+            return False
+        i = state.block_of[src]
+        state.pending[i][src] = (decoded, arrival)
+        self.stats[f"hub_reduced:{channel}"] += 1
+        block = state.blocks[i]
+        cur = state.cursor[i]
+        while cur < len(block) and block[cur] in state.pending[i]:
+            upd, arr = state.pending[i].pop(block[cur])
+            if state.acc[i] is None:
+                from repro.core.roles import StreamingMean
+
+                state.acc[i] = StreamingMean(fused=state.fused)
+            state.acc[i].fold(upd["weights"], float(upd.get("num_samples", 1)))
+            state.hwm[i] = max(state.hwm[i], arr)
+            cur += 1
+        state.cursor[i] = cur
+        if cur == len(block):
+            acc_tree, total = state.acc[i].partial()
+            part = pack_hub_partial(
+                i, block, acc_tree, total, state.acc[i].count
+            )
+            wire = self._wire_dtype.get(channel, "f32")
+            self._box(channel, group, dst, reduce_src(i)).put(
+                Message(
+                    reduce_src(i), part, payload_bytes(acc_tree, wire),
+                    state.hwm[i],
+                )
+            )
+            self.stats[f"hub_partials:{channel}"] += 1
+            # reset the block for the next round (the spec stays installed)
+            state.acc[i] = None
+            state.cursor[i] = 0
+            state.hwm[i] = 0.0
+        return True
+
     # ---------------------------- transport ---------------------------- #
     def _box(self, channel: str, group: str, dst: str, src: str) -> "queue.Queue[Message]":
         key = (channel, group, dst, src)
@@ -519,9 +765,17 @@ class InprocBackend:
             self.stats[f"msgs:{channel}"] += 1
             if codec is not None:
                 self.stats[f"raw_bytes:{channel}"] += raw_bytes
-            self._box(channel, group, dst, src).put(
-                Message(src, payload, nbytes, arrival)
-            )
+            state = self._reduce.get(topic)
+            if not (
+                state is not None
+                and src in state.block_of
+                and self._reduce_ingest(
+                    channel, group, dst, state, src, payload, arrival
+                )
+            ):
+                self._box(channel, group, dst, src).put(
+                    Message(src, payload, nbytes, arrival)
+                )
             self._cv.notify_all()
 
     def send_many(
@@ -573,9 +827,17 @@ class InprocBackend:
                     self.stats[f"msgs:{channel}"] += 1
                     if codec is not None:
                         self.stats[f"raw_bytes:{channel}"] += raw_bytes
-                    self._box(channel, group, dst, src).put(
-                        Message(src, payload, nbytes, arrival)
-                    )
+                    state = self._reduce.get(topic)
+                    if not (
+                        state is not None
+                        and src in state.block_of
+                        and self._reduce_ingest(
+                            channel, group, dst, state, src, payload, arrival
+                        )
+                    ):
+                        self._box(channel, group, dst, src).put(
+                            Message(src, payload, nbytes, arrival)
+                        )
             finally:
                 # wake receivers even when a mid-fan-out dropout aborts the
                 # loop — earlier destinations' messages are already delivered
@@ -908,6 +1170,17 @@ class ChannelManager:
         encodes = stats.get(f"payload_encodes:{channel}")
         if encodes is not None:
             out["payload_encodes"] = float(encodes)
+        # ...and decode calls on the receive path, so both ends of the codec
+        # pipeline are observable
+        decodes = stats.get(f"payload_decodes:{channel}")
+        if decodes is not None:
+            out["payload_decodes"] = float(decodes)
+        # reduce plane: update frames folded broker-side, and the partial
+        # frames that replaced them on the hub->server leg
+        for key in ("hub_reduced", "hub_partials"):
+            val = stats.get(f"{key}:{channel}")
+            if val is not None:
+                out[key] = float(val)
         return out
 
     def codec_ratio(self, channel: str) -> Optional[float]:

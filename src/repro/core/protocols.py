@@ -86,6 +86,15 @@ class RoundProtocol:
 
     name: str = ""
 
+    # Mirrors ``WireCodec.link_stateful``'s role for the broadcast fan-out:
+    # the hub-side reduce plane is only sound when the protocol's upload
+    # channel carries independent, weighted-mean-foldable update frames.
+    # Protocols whose servers need the individual frames — per-message
+    # exchanges (vertical), serverless gossip, or any policy/strategy that
+    # reads per-update arrival, version or staleness — keep the default
+    # False and transparently stay on the per-frame path.
+    upload_reducible: bool = False
+
     # the weight-sync message schema doubles as the shared vocabulary of the
     # policy mixins, so role code can reach it via ``self.protocol``
     pack_broadcast = staticmethod(pack_broadcast)
@@ -161,27 +170,77 @@ class WeightSync(RoundProtocol):
             pack_update(role.weights, role.num_samples, role._server_version),
         )
 
+    upload_reducible = True
+
     # ---------------------- aggregator-side steps --------------------- #
+    def _reduce_plan(self) -> int:
+        """The job's hub-reduce shard count: 0 = reduce off (the default)."""
+        from repro.core import channels as channels_mod
+
+        if not (self.upload_reducible and channels_mod.hub_reduce_enabled()):
+            return 0
+        try:
+            return max(0, int(self.role.config.get("reduce_plan", 0) or 0))
+        except (TypeError, ValueError):
+            return 0
+
     def distribute(self) -> None:
+        from repro.core import channels as channels_mod
+
         role = self.role
         end = self._end()
-        end.broadcast(pack_broadcast(role.weights, role._work_done))
+        dsts = end.ends()
+        # Install (or clear) the round's reduce spec BEFORE the broadcast
+        # that triggers the uploads: install is a synchronous op on the same
+        # hub connection, so no update frame can race the spec.
+        plan = self._reduce_plan() if not role._work_done else 0
+        blocks = channels_mod.reduce_blocks(dsts, plan) if plan else []
+        if blocks:
+            end.install_reduce(dsts, plan, role.config.get("fused_aggregation"))
+        elif getattr(self, "_reduce_blocks", None):
+            end.install_reduce([], 0)  # plan gone or final round: uninstall
+        self._reduce_blocks = blocks
+        end.send_many(dsts, pack_broadcast(role.weights, role._work_done))
 
     def aggregate(self) -> None:
         role = self.role
         if role._work_done:
             return  # peers were just told to exit; nothing will arrive
         end = self._end()
-        # stream per source in sorted-src order: one update is in flight at
-        # a time (server memory stays O(1) in group size) and the float
-        # accumulation order is independent of join/arrival order, so the
-        # same seeded job produces byte-identical weights on every transport
-        # backend — and the same bytes the buffered recv_fifo fold produced
         acc = StreamingMean(fused=role.config.get("fused_aggregation"))
-        for src in sorted(end.ends()):
-            msg = end.recv(src)
-            acc.fold(msg["weights"], float(msg.get("num_samples", 1)))
+        blocks = getattr(self, "_reduce_blocks", None)
+        if blocks:
+            # hub-reduced incast: the broker already folded each shard's
+            # updates in sorted-src order; fold the O(shards) partials in
+            # sorted-shard order. Deterministic for any plan, and bit-
+            # identical to the per-frame path when the plan degenerates to
+            # one shard (one partial = the whole sorted-src fold).
+            from repro.transport.wire import reduce_src
+
+            for i, block in enumerate(blocks):
+                msg = end.recv(reduce_src(i))
+                acc.fold_partial(
+                    msg["acc"], msg["num_samples"],
+                    count=int(msg.get("count", len(block))),
+                )
+        else:
+            # stream per source in sorted-src order: one update is in flight
+            # at a time (server memory stays O(1) in group size, up to the
+            # decode pool's constant) and the float accumulation order is
+            # independent of join/arrival order, so the same seeded job
+            # produces byte-identical weights on every transport backend —
+            # and the same bytes the buffered recv_fifo fold produced
+            for _, msg in end.recv_ordered(end.ends()):
+                acc.fold(msg["weights"], float(msg.get("num_samples", 1)))
         role.peak_buffered = max(role.peak_buffered, acc.peak_buffered)
+        # observability (job-result metrics): how many updates were folded,
+        # over how many frames the server actually received, at what peak
+        # buffering — the previously test-only attributes, surfaced
+        role.metrics.append({
+            "agg_folds": acc.count,
+            "agg_frames": len(blocks) if blocks else acc.count,
+            "peak_buffered": role.peak_buffered,
+        })
         mean, total = acc.finalize()
         if mean is not None:
             role.agg_weights = mean

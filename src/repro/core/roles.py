@@ -259,6 +259,34 @@ class StreamingMean:
         else:
             self._acc = jax.tree_util.tree_map(np.add, self._acc, scaled)
 
+    def partial(self) -> Tuple[Optional[Any], float]:
+        """The raw running state: ``(weighted_sum_tree, total_weight)``.
+
+        This is the reduce plane's shard partial — unfinalized on purpose,
+        so a downstream fold over several partials can divide once by the
+        grand total exactly like :meth:`finalize` does, keeping the
+        one-shard case bit-identical to the per-frame streaming fold."""
+        return self._acc, self._total
+
+    def fold_partial(self, acc: Any, total: float, count: int = 1) -> None:
+        """Absorb another accumulator's raw ``(acc, total)`` partial.
+
+        Partials are pre-scaled sums, so folding is a plain tree add (no
+        re-scaling); callers feed partials in sorted-shard order. ``count``
+        carries the number of source updates inside the partial so
+        ``self.count`` keeps meaning "updates folded"."""
+        import jax
+
+        if acc is None or count <= 0:
+            return
+        self._total += float(total)
+        self.count += int(count)
+        self.peak_buffered = max(self.peak_buffered, 1)
+        if self._acc is None:
+            self._acc = jax.tree_util.tree_map(np.asarray, acc)
+        else:
+            self._acc = jax.tree_util.tree_map(np.add, self._acc, acc)
+
     def finalize(self) -> Tuple[Optional[Any], float]:
         import jax
 

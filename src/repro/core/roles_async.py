@@ -270,6 +270,18 @@ class _DeadlineBase(_PolicyBase):
                 "round_time": round_end - self._round_start,
             }
         )
+        self.peak_buffered = max(self.peak_buffered, acc.peak_buffered)
+        # same observability surface as the sync aggregate step: fold counts
+        # and peak buffering land in job-result metrics. Policy collection
+        # classifies each update individually (on-time vs late, per-update
+        # versions), so the hub-reduce plane never applies here — the
+        # ``reduce_plan`` hyperparam falls back to per-frame transparently
+        # and ``agg_frames`` always equals ``agg_folds``.
+        self.metrics.append({
+            "agg_folds": acc.count,
+            "agg_frames": acc.count,
+            "peak_buffered": self.peak_buffered,
+        })
         self._version += 1
 
 

@@ -461,6 +461,161 @@ def check_send_many_stateful_fallback(factory: Factory) -> None:
     assert stats_many == stats_loop, (stats_many, stats_loop)
 
 
+def check_install_reduce_fold(factory: Factory) -> None:
+    """The reduce plane folds an incast broker-side with loop semantics.
+
+    With a spec installed the dst receives ONE partial per shard — its
+    accumulator bit-identical to a sorted-src ``StreamingMean`` fold of the
+    same frames, its arrival the max of the folded arrivals — while the
+    client-leg ``bytes:``/``msgs:`` accounting stays bit-identical to the
+    unreduced incast. Installing is an absolute-state write (reinstall
+    resets the round), non-update frames fall through to per-frame
+    delivery, and an empty install uninstalls. Each comparison run lives on
+    its own channel/workers so the check stays exact on shared-hub
+    factories."""
+    from repro.core.roles import StreamingMean
+    from repro.transport.wire import is_hub_partial, reduce_src
+
+    def _update(seed: int) -> dict:
+        rng = np.random.default_rng(seed)
+        return {
+            "weights": {"w": rng.normal(size=(33,)).astype(np.float32)},
+            "num_samples": 1 + seed % 3,
+        }
+
+    def _run(reduced: bool) -> tuple:
+        tag = "on" if reduced else "off"
+        ch = f"conf-rd-{tag}"
+        dst = f"rdb-{tag}"
+        srcs = sorted(f"rda{i}-{tag}" for i in range(3))
+        be = factory()
+        for s in srcs:
+            be.set_link(ch, s, LinkModel(bandwidth=50.0, latency=2.0))
+        for w in (dst, *srcs):
+            be.join(ch, G, w)
+        if reduced:
+            be.install_reduce(ch, G, dst, srcs, 1, None)
+        # reverse sorted order: the fold must buffer out-of-order arrivals
+        # and still consume them sorted-src
+        for n, s in enumerate(reversed(srcs)):
+            be.send(ch, G, s, dst, _update(seed=len(srcs) - 1 - n))
+            if reduced and n < len(srcs) - 1:
+                # no partial may surface before the block completes
+                assert be.earliest(ch, G, dst, [reduce_src(0)]) is None
+        clocks = [be.now(s) for s in srcs]
+        if reduced:
+            got = be.earliest(ch, G, dst, [reduce_src(0)])
+            assert got is not None
+            arrivals = [float(got[0])]
+            frames = [(reduce_src(0), be.recv(ch, G, dst, reduce_src(0), timeout=5.0))]
+        else:
+            arrivals, frames = [], []
+            for s in srcs:
+                got = be.earliest(ch, G, dst, [s])
+                assert got is not None, s
+                arrivals.append(float(got[0]))
+                frames.append((s, be.recv(ch, G, dst, s, timeout=5.0)))
+        return be, ch, dst, srcs, clocks, arrivals, frames, _wire_stats(dict(be.stats), ch)
+
+    be, ch, dst, srcs, clocks_on, arr_on, frames_on, stats_on = _run(reduced=True)
+    _, _, _, _, clocks_off, arr_off, _, stats_off = _run(reduced=False)
+
+    # client-leg accounting and sender clocks identical to the unreduced loop
+    assert clocks_on == clocks_off, (clocks_on, clocks_off)
+    assert stats_on == stats_off, (stats_on, stats_off)
+    # the partial arrives when its slowest constituent frame would have
+    assert arr_on == [max(arr_off)], (arr_on, arr_off)
+
+    (psrc, part), = frames_on
+    assert is_hub_partial(part) and part["shard"] == 0 and psrc == reduce_src(0)
+    assert part["srcs"] == srcs and part["count"] == len(srcs)
+    ref = StreamingMean()
+    for i, _ in enumerate(srcs):
+        upd = _update(seed=i)
+        ref.fold(upd["weights"], float(upd["num_samples"]))
+    ref_acc, ref_total = ref.partial()
+    assert float(part["num_samples"]) == ref_total
+    assert np.asarray(part["acc"]["w"]).tobytes() == np.asarray(ref_acc["w"]).tobytes()
+
+    stats = dict(be.stats)
+    assert stats.get(f"hub_reduced:{ch}") == len(srcs), stats
+    assert stats.get(f"hub_partials:{ch}") == 1, stats
+
+    # reinstall is absolute-state: a half-folded round is discarded
+    be.install_reduce(ch, G, dst, srcs, 1, None)
+    be.send(ch, G, srcs[0], dst, _update(seed=0))
+    be.install_reduce(ch, G, dst, srcs, 1, None)
+    for i, s in enumerate(srcs):
+        be.send(ch, G, s, dst, _update(seed=i))
+    part2 = be.recv(ch, G, dst, reduce_src(0), timeout=5.0)
+    assert part2["count"] == len(srcs)
+    assert np.asarray(part2["acc"]["w"]).tobytes() == np.asarray(ref_acc["w"]).tobytes()
+
+    # a non-update frame on the reduced topic must not be swallowed
+    be.install_reduce(ch, G, dst, srcs, 1, None)
+    be.send(ch, G, srcs[0], dst, {"hello": 1})
+    assert be.recv(ch, G, dst, srcs[0], timeout=5.0) == {"hello": 1}
+
+    # empty install uninstalls: next update is delivered per-frame
+    be.install_reduce(ch, G, dst, [], 0, None)
+    be.send(ch, G, srcs[1], dst, _update(seed=1))
+    back = be.recv(ch, G, dst, srcs[1], timeout=5.0)
+    assert not is_hub_partial(back) and "weights" in back
+
+
+def check_install_reduce_sharded(factory: Factory) -> None:
+    """A multi-shard plan partitions the incast per ``reduce_blocks`` —
+    contiguous sorted blocks, one partial per shard, each fold sorted-src
+    within its block — and is run-to-run deterministic: two identical runs
+    produce byte-identical partials, and their shard-ordered combination
+    matches the unreduced mean."""
+    from repro.core.channels import reduce_blocks
+    from repro.core.roles import StreamingMean
+    from repro.transport.wire import reduce_src
+
+    def _update(seed: int) -> dict:
+        rng = np.random.default_rng(100 + seed)
+        return {
+            "weights": {"w": rng.normal(size=(17,)).astype(np.float32)},
+            "num_samples": 2,
+        }
+
+    def _run(tag: str) -> list:
+        ch = f"conf-rs-{tag}"
+        dst = f"rsb-{tag}"
+        srcs = sorted(f"rsa{i}-{tag}" for i in range(5))
+        be = factory()
+        for w in (dst, *srcs):
+            be.join(ch, G, w)
+        be.install_reduce(ch, G, dst, srcs, 2, None)
+        for i, s in enumerate(srcs):
+            be.send(ch, G, s, dst, _update(seed=i))
+        blocks = reduce_blocks(srcs, 2)
+        parts = [be.recv(ch, G, dst, reduce_src(i), timeout=5.0) for i in range(len(blocks))]
+        for i, part in enumerate(parts):
+            assert part["srcs"] == blocks[i], (part["srcs"], blocks[i])
+            assert part["count"] == len(blocks[i])
+        return parts
+
+    parts_a = _run("r1")
+    parts_b = _run("r2")
+    for pa, pb in zip(parts_a, parts_b):
+        assert np.asarray(pa["acc"]["w"]).tobytes() == np.asarray(pb["acc"]["w"]).tobytes()
+
+    # shard-ordered combination == the unreduced mean of all five frames
+    server = StreamingMean()
+    for part in parts_a:
+        server.fold_partial(part["acc"], part["num_samples"], count=part["count"])
+    ref = StreamingMean()
+    for i in range(5):
+        upd = _update(seed=i)
+        ref.fold(upd["weights"], float(upd["num_samples"]))
+    mean_sharded, total_sharded = server.finalize()
+    mean_flat, total_flat = ref.finalize()
+    assert total_sharded == total_flat
+    np.testing.assert_allclose(mean_sharded["w"], mean_flat["w"], rtol=1e-6)
+
+
 # ------------------------------------------------------------------ #
 # wire-codec conformance: every registered codec must round-trip these
 # ------------------------------------------------------------------ #
@@ -630,6 +785,8 @@ CONFORMANCE_CHECKS: Dict[str, Callable[[Factory], None]] = {
     "send_many_fifo_interleave": check_send_many_fifo_interleave,
     "send_many_accounting": check_send_many_accounting,
     "send_many_stateful_fallback": check_send_many_stateful_fallback,
+    "install_reduce_fold": check_install_reduce_fold,
+    "install_reduce_sharded": check_install_reduce_sharded,
 }
 
 

@@ -78,7 +78,7 @@ _IDEMPOTENT_OPS = frozenset({
     "join", "leave",
     # absolute-state writes
     "set_drop", "clear_drop", "poison", "set_link", "set_wire_dtype",
-    "set_clock",
+    "set_clock", "install_reduce",
 })
 
 
@@ -681,10 +681,23 @@ class MultiprocBackend:
             self._bump_codec_stats(channel, 0.0, 0.0, 1.0)
         self._send_nowait("send_many", channel, group, src, dsts, payload)
 
+    def _decode_in(self, channel: str, payload: Any) -> Any:
+        """Receive-path twin of the encode counters: every frame decoded on
+        this client bumps ``payload_decodes:<channel>``, so both ends of the
+        codec pipeline are observable (and the decode-pool / hub-reduce
+        effects on receive-side work are measurable)."""
+        with self._codec_stats_lock:
+            self._codec_stats[f"payload_decodes:{channel}"] = (
+                self._codec_stats.get(f"payload_decodes:{channel}", 0.0) + 1.0
+            )
+        return decode_payload(payload)
+
     def recv(
         self, channel: str, group: str, me: str, end: str, timeout: Optional[float]
     ) -> Any:
-        return decode_payload(self._call("recv", channel, group, me, end, timeout))
+        return self._decode_in(
+            channel, self._call("recv", channel, group, me, end, timeout)
+        )
 
     def recv_any(
         self,
@@ -698,7 +711,7 @@ class MultiprocBackend:
         end, payload, arrival = self._call(
             "recv_any", channel, group, me, list(ends), timeout, bool(advance)
         )
-        return str(end), decode_payload(payload), float(arrival)
+        return str(end), self._decode_in(channel, payload), float(arrival)
 
     def recv_fifo(
         self,
@@ -714,12 +727,15 @@ class MultiprocBackend:
             for end, payload in self._call(
                 "recv_fifo", channel, group, me, list(ends), timeout
             ):
-                yield str(end), decode_payload(payload)
+                yield str(end), self._decode_in(channel, payload)
 
         return _gen()
 
     def peek(self, channel: str, group: str, me: str, end: str) -> Optional[Any]:
-        return decode_payload(self._call("peek", channel, group, me, end))
+        payload = self._call("peek", channel, group, me, end)
+        if payload is None:
+            return None
+        return self._decode_in(channel, payload)
 
     def earliest(
         self, channel: str, group: str, me: str, ends: Sequence[str]
@@ -770,6 +786,28 @@ class MultiprocBackend:
     def link(self, channel: str, worker: str) -> LinkModel:
         bandwidth, latency = self._call("link", channel, worker)
         return LinkModel(float(bandwidth), float(latency))
+
+    # --------------------------- reduce plane -------------------------- #
+    def install_reduce(
+        self,
+        channel: str,
+        group: str,
+        dst: str,
+        srcs: Sequence[str],
+        shards: int = 1,
+        fused: Optional[bool] = None,
+    ) -> None:
+        """Install/remove the hub-side reduce spec for ``dst``'s incast.
+
+        A synchronous RPC (drains any pipelined acks first), so once it
+        returns, every subsequent upload from ``srcs`` is folded broker-side
+        — the hub decodes each arriving update frame, folds it into the
+        shard's ``(partial_sum, total_weight, srcs)`` accumulator and
+        delivers one partial frame per shard. An absolute-state write, so
+        it sits in ``_IDEMPOTENT_OPS`` like ``set_link``."""
+        self._call(
+            "install_reduce", channel, group, dst, list(srcs), int(shards), fused
+        )
 
     # ----------------------------- clocks ------------------------------ #
     def now(self, worker: str) -> float:
@@ -935,6 +973,20 @@ class ShardRouter:
 
     def link(self, channel: str, worker: str) -> LinkModel:
         return self._root.link(channel, worker)
+
+    # --------------------------- reduce plane -------------------------- #
+    def install_reduce(
+        self,
+        channel: str,
+        group: str,
+        dst: str,
+        srcs: Sequence[str],
+        shards: int = 1,
+        fused: Optional[bool] = None,
+    ) -> None:
+        # channel-scoped like send/recv: the (channel, group) topic — and so
+        # its reduce state — lives on exactly one shard hub
+        self._be(group).install_reduce(channel, group, dst, srcs, shards, fused)
 
     # ----------------------------- clocks ------------------------------ #
     def now(self, worker: str) -> float:

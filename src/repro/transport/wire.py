@@ -904,6 +904,53 @@ def decode_payload(payload: Any) -> Any:
     return payload
 
 
+# ------------------------------------------------------------------ #
+# hub-reduce partial frames (the reduce plane's wire vocabulary)
+# ------------------------------------------------------------------ #
+# A broker that reduces an incast topic forwards ONE partial frame per
+# reduce shard per round instead of every client's update frame. The frame
+# carries the *unfinalized* weighted sum so the receiving server can fold
+# partials from several shards and divide once by the grand total — the
+# same finalize step the per-frame streaming fold performs. The marker key
+# is deliberately shaped like the codec envelope marker: both are reserved
+# wire vocabulary that application payloads must never collide with
+# (``pack_hub_partial`` is only ever produced broker-side).
+HUB_PARTIAL_KEY = "__hub_partial__"
+
+# reserved mailbox src prefix for partial frames: shard i's partial is
+# delivered from the pseudo-source ``reduce_src(i)``, which can never clash
+# with a worker id (worker ids are "<role>-<idx>")
+_REDUCE_SRC_PREFIX = "__reduce__"
+
+
+def reduce_src(shard: int) -> str:
+    """Mailbox pseudo-source that delivers reduce shard ``shard``'s partial."""
+    return f"{_REDUCE_SRC_PREFIX}{int(shard)}"
+
+
+def pack_hub_partial(
+    shard: int, srcs: List[str], acc: Any, total: float, count: int
+) -> Dict[str, Any]:
+    """Broker -> server partial-aggregate frame for one reduce shard.
+
+    ``acc`` is the running weighted-sum tree (NOT the mean), ``total`` the
+    summed sample weights and ``count`` the number of update frames folded
+    into it, in sorted-``srcs`` order."""
+    return {
+        HUB_PARTIAL_KEY: True,
+        "shard": int(shard),
+        "srcs": list(srcs),
+        "acc": acc,
+        "num_samples": float(total),
+        "count": int(count),
+    }
+
+
+def is_hub_partial(payload: Any) -> bool:
+    """True iff ``payload`` is a broker-produced partial-aggregate frame."""
+    return isinstance(payload, dict) and bool(payload.get(HUB_PARTIAL_KEY))
+
+
 def codec_ratio(payload: Any, codec: Any, link: Any = ()) -> float:
     """Achieved wire-bytes ratio (coded / raw) of ``codec`` on ``payload``.
 

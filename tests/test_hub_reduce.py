@@ -1,0 +1,289 @@
+"""Reduce plane: hub-side partial aggregation of the weight-sync incast.
+
+The reduce plane is a pure performance switch, like the broadcast fan-out
+fast path: a seeded sync job produces byte-identical observables with
+``reduce_plan: 1`` vs without (the broker folds in the same sorted-src
+order the server would), is run-to-run deterministic above one shard, and
+policy-mode (deadline/async) jobs ignore the plan entirely — their
+collection loop classifies updates individually, so the protocol falls
+back to per-frame delivery transparently.
+
+Backend-level semantics (partial folding, ordering, accounting) live in the
+transport conformance suite; this module covers the job-level contract plus
+the client pipeline pieces the plan rides on: the shared decode pool behind
+``recv_ordered`` and the fire-and-forget ack window of the multiproc
+client.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import channels as channels_mod
+from repro.core.channels import InprocBackend, reduce_blocks
+from repro.core.expansion import JobSpec
+from repro.core.runtime import RuntimePolicy, run_job
+from repro.core.tag import DatasetSpec
+from repro.core.topologies import classical_fl
+from repro.transport.conformance import SeededSGDTrainer  # noqa: F401 - spawn target
+
+_RNG = np.random.default_rng(7)
+W0 = {
+    "w": (0.01 * _RNG.normal(size=(32, 10))).astype(np.float32),
+    "b": np.zeros((10,), np.float32),
+}
+
+
+def _job(reduce_plan=None, rounds=2, n_datasets=3):
+    hp = {"rounds": rounds, "init_weights": W0}
+    if reduce_plan is not None:
+        hp["reduce_plan"] = reduce_plan
+    return JobSpec(
+        tag=classical_fl(
+            trainer_program="repro.transport.conformance.SeededSGDTrainer"
+        ),
+        datasets=tuple(DatasetSpec(name=f"d{i}") for i in range(n_datasets)),
+        hyperparams=hp,
+    )
+
+
+def _observables(res):
+    assert not res.errors, res.errors
+    return {
+        "dropped": res.dropped,
+        "events": res.events,
+        "channel_bytes": res.channel_bytes,
+        "weights": {
+            k: np.asarray(v).tobytes() for k, v in res.global_weights().items()
+        },
+    }
+
+
+def _agg_metrics(res):
+    glob = res.program("global-aggregator-0")
+    return [m for m in glob.metrics if "agg_frames" in m]
+
+
+class TestReduceBlocks:
+    def test_partition_is_sorted_contiguous_and_even(self):
+        srcs = [f"t-{i}" for i in range(10, 0, -1)]
+        blocks = reduce_blocks(srcs, 3)
+        flat = [s for b in blocks for s in b]
+        assert flat == sorted(srcs)
+        sizes = [len(b) for b in blocks]
+        assert max(sizes) - min(sizes) <= 1
+        assert sizes == sorted(sizes, reverse=True)  # remainder up front
+
+    def test_degenerate_plans(self):
+        assert reduce_blocks([], 2) == []
+        assert reduce_blocks(["a"], 0) == []
+        assert reduce_blocks(["a"], -1) == []
+        assert reduce_blocks(["b", "a"], 1) == [["a", "b"]]
+        # more shards than sources: one block per source, no empties
+        blocks = reduce_blocks(["b", "a"], 5)
+        assert blocks == [["a"], ["b"]]
+
+
+class TestRecvOrderedDecodePool:
+    """``recv_ordered`` with the decode pool is observationally identical to
+    the sequential sorted loop: same yield order, same clock effect, and an
+    exception surfaces at the failing end's sorted position."""
+
+    def _incast(self):
+        be = InprocBackend()
+        ch, g, dst = "up", "default", "agg-0"
+        srcs = sorted(f"t-{i}" for i in range(5))
+        for w in (dst, *srcs):
+            be.join(ch, g, w)
+        from repro.core.channels import ChannelEnd
+
+        return be, ch, g, srcs, ChannelEnd(be, ch, g, dst)
+
+    def _run(self, workers):
+        prev = channels_mod.decode_pool_workers()
+        channels_mod.set_decode_pool(workers)
+        try:
+            be, ch, g, srcs, end = self._incast()
+            for i, s in enumerate(srcs):
+                be.send(ch, g, s, "agg-0", {"weights": {"w": np.float32(i)}})
+            got = list(end.recv_ordered(srcs, timeout=5.0))
+            return [(s, np.asarray(m["weights"]["w"]).tobytes()) for s, m in got]
+        finally:
+            channels_mod.set_decode_pool(prev)
+
+    def test_pooled_equals_sequential(self):
+        assert self._run(workers=4) == self._run(workers=0)
+
+    def test_failure_surfaces_at_sorted_position(self):
+        import queue as queue_mod
+
+        for workers in (0, 4):
+            prev = channels_mod.decode_pool_workers()
+            channels_mod.set_decode_pool(workers)
+            try:
+                be, ch, g, srcs, end = self._incast()
+                # all but the middle source upload: the fold must yield the
+                # earlier ends, then time out exactly at srcs[2]
+                for i, s in enumerate(srcs):
+                    if s != srcs[2]:
+                        be.send(ch, g, s, "agg-0", {"weights": {"w": np.float32(i)}})
+                seen = []
+                with pytest.raises(queue_mod.Empty):
+                    for s, _ in end.recv_ordered(srcs, timeout=0.2):
+                        seen.append(s)
+                assert seen == srcs[:2], (workers, seen)
+            finally:
+                channels_mod.set_decode_pool(prev)
+
+
+class TestPendingAckPipeline:
+    """The fire-and-forget send window: the client self-drains at
+    ``MAX_PENDING_ACKS`` so hub reply backlogs stay bounded, and a deferred
+    send fault surfaces at the next synchronous op — first fault first,
+    with the stream realigned so the connection stays usable."""
+
+    def _hub_client(self):
+        from repro.transport.multiproc import MultiprocBackend, TransportHub
+
+        hub = TransportHub(wall_clock=False)
+        return hub, MultiprocBackend(hub.address)
+
+    def test_self_drain_caps_inflight_acks(self):
+        hub, be = self._hub_client()
+        try:
+            be.MAX_PENDING_ACKS = 4
+            ch, g = "ack-ch", "default"
+            for w in ("a-0", "b-0"):
+                be.join(ch, g, w)
+            for i in range(20):
+                be.send(ch, g, "a-0", "b-0", {"i": i})
+                assert be._local.pending <= 4, be._local.pending
+            # the barrier drains the remainder; every frame was delivered
+            assert be.stats[f"msgs:{ch}"] == 20.0
+            assert be._local.pending == 0
+            got = [be.recv(ch, g, "b-0", "a-0", timeout=5.0)["i"] for i in range(20)]
+            assert got == list(range(20))
+        finally:
+            be.close()
+            hub.close()
+
+    def test_deferred_fault_surfaces_first_at_next_sync_op(self):
+        from repro.core.channels import WorkerDropped
+
+        hub, be = self._hub_client()
+        try:
+            ch, g = "ack-ch", "default"
+            for w in ("a-0", "b-0"):
+                be.join(ch, g, w)
+            # drop scheduled strictly before t=0: every send from a-0 now
+            # faults hub-side (a send drops when its arrival crosses drop_at)
+            be.set_drop("a-0", -1.0)
+            be.send(ch, g, "a-0", "b-0", {"i": 0})  # deferred WorkerDropped
+            be.send(ch, g, "a-0", "b-0", {"i": 1})  # second deferred fault
+            pending = be._local.pending
+            assert pending == 2
+            # the next *synchronous* op is the ack barrier: the first
+            # deferred fault surfaces there, not on the sends themselves
+            with pytest.raises(WorkerDropped):
+                be.now("a-0")
+            # the stream was realigned (every pending ack consumed), so the
+            # connection stays usable for the very next op
+            assert be._local.pending == 0
+            assert be.now("b-0") >= 0.0
+        finally:
+            be.close()
+            hub.close()
+
+
+class TestHubReduceTransparency:
+    """Job-level contract: ``reduce_plan`` is byte-invisible at one shard,
+    deterministic above it, and inert under the kill switch and under
+    policy modes."""
+
+    @staticmethod
+    def _with_reduce_env(enabled, fn):
+        prev = os.environ.get("REPRO_HUB_REDUCE")
+        os.environ["REPRO_HUB_REDUCE"] = "1" if enabled else "0"
+        channels_mod.set_hub_reduce(enabled)
+        try:
+            return fn()
+        finally:
+            if prev is None:
+                os.environ.pop("REPRO_HUB_REDUCE", None)
+            else:
+                os.environ["REPRO_HUB_REDUCE"] = prev
+            channels_mod.set_hub_reduce(prev is None or prev not in ("0", "false"))
+
+    def test_sync_inproc_plan1_bitwise_identical(self):
+        off = run_job(_job(), timeout=60)
+        on = run_job(_job(reduce_plan=1), timeout=60)
+        assert _observables(on) == _observables(off)
+        # the plan actually engaged: one partial frame per round reached the
+        # server instead of one per trainer
+        assert [m["agg_frames"] for m in _agg_metrics(on)] == [1, 1]
+        assert [m["agg_frames"] for m in _agg_metrics(off)] == [3, 3]
+        assert all(m["agg_folds"] == 3 for m in _agg_metrics(on))
+
+    def test_sync_inproc_multishard_deterministic(self):
+        off = run_job(_job(), timeout=60)
+        a = run_job(_job(reduce_plan=2), timeout=60)
+        b = run_job(_job(reduce_plan=2), timeout=60)
+        assert _observables(a) == _observables(b)
+        assert [m["agg_frames"] for m in _agg_metrics(a)] == [2, 2]
+        for k in W0:
+            np.testing.assert_allclose(
+                np.asarray(a.global_weights()[k]),
+                np.asarray(off.global_weights()[k]),
+                rtol=1e-6,
+            )
+
+    def test_kill_switch_forces_per_frame_path(self):
+        off = run_job(_job(), timeout=60)
+        killed = self._with_reduce_env(
+            False, lambda: run_job(_job(reduce_plan=2), timeout=60)
+        )
+        assert _observables(killed) == _observables(off)
+        assert [m["agg_frames"] for m in _agg_metrics(killed)] == [3, 3]
+
+    def test_deadline_policy_ignores_reduce_plan(self):
+        pol = RuntimePolicy(mode="deadline", deadline=5.0, grace=5.0)
+        per_worker = {f"trainer-{i}": {"compute_time": 0.5} for i in range(3)}
+        kw = dict(policy=pol, per_worker_hyperparams=per_worker, timeout=60)
+        off = run_job(_job(), **kw)
+        on = run_job(_job(reduce_plan=2), **kw)
+        assert _observables(on) == _observables(off)
+        # the policy server still reports its fold counts per round
+        assert all(m["agg_folds"] == 3 for m in _agg_metrics(on))
+
+
+@pytest.mark.multiproc
+class TestHubReduceOverProcesses:
+    """The same transparency over real worker processes — single hub and
+    the pooled + sharded fabric."""
+
+    def test_sync_multiproc_plan1_bitwise_identical(self):
+        from repro.launch.spawn import run_job_multiproc
+
+        off = run_job_multiproc(_job(), timeout=120)
+        on = run_job_multiproc(_job(reduce_plan=1), timeout=120)
+        assert _observables(on) == _observables(off)
+        assert [m["agg_frames"] for m in _agg_metrics(on)] == [1, 1]
+        # and across deployments with the plan live on both
+        on_in = run_job(_job(reduce_plan=1), timeout=60)
+        assert _observables(on) == _observables(on_in)
+
+    def test_pooled_sharded_fabric_deterministic(self):
+        from repro.launch.spawn import run_job_multiproc
+
+        kw = dict(timeout=180, pool_size=2, sharded=True)
+        off = run_job_multiproc(_job(), **kw)
+        a = run_job_multiproc(_job(reduce_plan=2), **kw)
+        b = run_job_multiproc(_job(reduce_plan=2), **kw)
+        assert _observables(a) == _observables(b)
+        assert [m["agg_frames"] for m in _agg_metrics(a)] == [2, 2]
+        for k in W0:
+            np.testing.assert_allclose(
+                np.asarray(a.global_weights()[k]),
+                np.asarray(off.global_weights()[k]),
+                rtol=1e-6,
+            )

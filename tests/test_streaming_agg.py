@@ -113,7 +113,10 @@ class TestServerPeakBuffered:
     def test_sync_aggregator_peak_is_one(self, n_clients):
         """End-to-end: the sync global aggregator streams per-source in
         sorted-src order, so its server-side peak buffered-tree count is 1
-        regardless of how many trainers report."""
+        regardless of how many trainers report. The invariant is read off
+        the job-result aggregation metrics — the same record a process
+        deployment marshals back to the driver — not by poking at role
+        internals."""
         job = JobSpec(
             tag=classical_fl(
                 trainer_program="repro.transport.conformance.SeededSGDTrainer"
@@ -124,7 +127,13 @@ class TestServerPeakBuffered:
         res = run_job(job, timeout=60)
         assert not res.errors, res.errors
         glob = res.program("global-aggregator-0")
-        assert glob.peak_buffered == 1
+        agg = [m for m in glob.metrics if "agg_folds" in m]
+        assert len(agg) == 2  # one record per round
+        for m in agg:
+            assert m["peak_buffered"] == 1
+            assert m["agg_folds"] == n_clients
+            # no reduce plan installed: one frame per trainer reached the server
+            assert m["agg_frames"] == n_clients
         assert not np.array_equal(
             np.asarray(res.global_weights()["w"]), W0["w"]
         )
