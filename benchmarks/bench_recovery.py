@@ -1,0 +1,232 @@
+"""Crash-recovery benchmark: time-to-recover vs checkpoint cadence.
+
+Two legs, mirroring the two halves of the crash-tolerance layer:
+
+* **checkpoint leg** — a FedBuff server absorbing one update per version
+  from ``W`` workers, checkpointing every ``k`` versions via
+  ``repro.checkpoint``. The crash is placed at the *worst* point (``k-1``
+  versions after the last checkpoint), so recovery = load the newest
+  checkpoint (``load_tree``) + replay the ``k-1`` lost updates. The full
+  grid asserts recovery stays under one round's wall-clock (``W`` absorbed
+  updates) for every cadence swept — the acceptance bound of the
+  checkpoint-restart design.
+* **transport leg** — ``W`` pipelined uplink sends through a live
+  ``TransportHub`` with ``simulate_crash`` injected midway: every client
+  reconnects, resumes its session and retransmits; the row reports the
+  recovery overhead against the fault-free incast and asserts nothing was
+  lost or duplicated (``msgs:`` equals ``W`` exactly).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import threading
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro import checkpoint
+from repro import transport as _transport  # noqa: F401 - registers the loopback
+from repro.core.roles import StreamingMean
+from repro.transport.multiproc import MultiprocBackend, TransportHub
+
+from benchmarks.common import result_meta
+
+CH, G = "recov", "default"
+
+CADENCES = (1, 4, 16)  # checkpoint_every grid
+WORKERS_FULL, WORKERS_SMOKE = 64, 8
+CKPT_ELEMS_FULL, CKPT_ELEMS_SMOKE = 1 << 20, 1 << 16  # 4MB / 256KB models
+WIRE_ELEMS_FULL, WIRE_ELEMS_SMOKE = 1 << 18, 16384  # 1MB / 64KB frames
+
+
+def _ckpt_leg(
+    workers: int, every: int, n_elems: int, directory: str
+) -> Tuple[float, float, float, int]:
+    """(round_s, save_s_per_round, recover_s, lost_updates) for one cadence."""
+    from repro.fl.strategies import get_strategy
+
+    strat = get_strategy(
+        "fedbuff", buffer_size=1, server_lr=1.0, staleness_exp=0.5
+    )
+    rng = np.random.default_rng(7)
+    w0 = {"w": rng.normal(size=n_elems).astype(np.float32)}
+    # crash at the worst point: (W-1) % k versions past the newest
+    # checkpoint — the full k-1 whenever k divides W (as in the full grid)
+    total = workers + every - 1
+    deltas = [
+        (0.01 * rng.normal(size=n_elems)).astype(np.float32)
+        for _ in range(total)
+    ]
+
+    def _absorb(weights, state, i):
+        state = strat.accumulate_stream(state, {"w": deltas[i]}, 0)
+        new_w, state = strat.apply(weights, None, state)
+        return {"w": np.asarray(new_w["w"])}, state
+
+    # warm the jit caches so the timed round measures steady-state absorbs
+    weights, state = dict(w0), strat.init(w0)
+    for i in range(2):
+        weights, state = _absorb(weights, state, i)
+
+    # one fault-free round: W absorbed updates (the recovery budget)
+    weights, state = dict(w0), strat.init(w0)
+    t0 = time.perf_counter()
+    for i in range(workers):
+        weights, state = _absorb(weights, state, i)
+    round_s = time.perf_counter() - t0
+
+    # the checkpointed run, crashing at version `total`
+    weights, state = dict(w0), strat.init(w0)
+    save_s = 0.0
+    for i in range(total):
+        weights, state = _absorb(weights, state, i)
+        version = i + 1
+        if version % every == 0:
+            t0 = time.perf_counter()
+            checkpoint.save(
+                directory, version,
+                {
+                    "weights": weights,
+                    "strategy": state,
+                    "version": np.int64(version),
+                },
+            )
+            save_s += time.perf_counter() - t0
+    final = weights
+
+    # recover: newest checkpoint + replay of the updates lost since it
+    t0 = time.perf_counter()
+    step = checkpoint.latest_step(directory)
+    tree = checkpoint.load_tree(directory, step)
+    weights, state = tree["weights"], tree["strategy"]
+    for i in range(int(np.asarray(tree["version"])), total):
+        weights, state = _absorb(weights, state, i)
+    recover_s = time.perf_counter() - t0
+
+    # the recovered model equals the uncrashed one bit-for-bit
+    assert weights["w"].tobytes() == final["w"].tobytes()
+    lost = total - int(step)
+    assert lost == (workers - 1) % every, (lost, every)
+    return round_s, save_s * workers / total, recover_s, lost
+
+
+def _incast_secs(
+    workers: int, n_elems: int, crash: bool
+) -> Tuple[float, Dict[str, float]]:
+    """One uplink incast (pipelined sends + threaded fold); with ``crash``,
+    the hub dies and restarts after half the sends were issued."""
+    hub = TransportHub()
+    be = MultiprocBackend(hub.worker_address, client_key="bench-recovery")
+    try:
+        srcs = [f"src-{i}" for i in range(workers)]
+        for w in (*srcs, "dst-0"):
+            be.join(CH, G, w)
+        rng = np.random.default_rng(7)
+        payload = {
+            "weights": {"w": rng.normal(size=n_elems).astype(np.float32)},
+            "num_samples": 1,
+        }
+        box: Dict[str, object] = {}
+
+        def _fold() -> None:
+            acc = StreamingMean()
+            for s in srcs:
+                msg = be.recv(CH, G, "dst-0", s, 120.0)
+                acc.fold(msg["weights"], float(msg["num_samples"]))
+            box["mean"], _ = acc.finalize()
+
+        consumer = threading.Thread(target=_fold)
+        t0 = time.perf_counter()
+        consumer.start()
+        for i, s in enumerate(srcs):
+            if crash and i == workers // 2:
+                hub.simulate_crash()
+            be.send(CH, G, s, "dst-0", payload)
+        # ack barrier: sends lost to the crash retransmit and settle here
+        be.now("dst-0")
+        consumer.join()
+        secs = time.perf_counter() - t0
+        return secs, dict(hub.stats)
+    finally:
+        be.close()
+        hub.close()
+
+
+def run(smoke: bool = False) -> List[Dict[str, object]]:
+    workers = WORKERS_SMOKE if smoke else WORKERS_FULL
+    ckpt_elems = CKPT_ELEMS_SMOKE if smoke else CKPT_ELEMS_FULL
+    wire_elems = WIRE_ELEMS_SMOKE if smoke else WIRE_ELEMS_FULL
+    rows: List[Dict[str, object]] = []
+
+    print(f"{'every':>6} {'round':>10} {'save/round':>11} {'recover':>10} {'lost':>5}")
+    with tempfile.TemporaryDirectory() as tmp:
+        for every in CADENCES:
+            round_s, save_s, recover_s, lost = _ckpt_leg(
+                workers, every, ckpt_elems, os.path.join(tmp, f"k{every}")
+            )
+            print(
+                f"{every:>6} {round_s * 1e3:>8.1f}ms {save_s * 1e3:>9.1f}ms "
+                f"{recover_s * 1e3:>8.1f}ms {lost:>5}"
+            )
+            rows.append(
+                result_meta(
+                    backend="multiproc",
+                    leg="checkpoint",
+                    workers=workers,
+                    checkpoint_every=every,
+                    payload_bytes=ckpt_elems * 4,
+                    round_ms=round_s * 1e3,
+                    save_ms_per_round=save_s * 1e3,
+                    recover_ms=recover_s * 1e3,
+                    lost_updates=lost,
+                )
+            )
+            if not smoke:
+                # the acceptance bound: restarting from the worst-placed
+                # crash costs less than one round of absorbed updates
+                assert recover_s < round_s, (
+                    f"recovery {recover_s * 1e3:.1f}ms >= one round "
+                    f"{round_s * 1e3:.1f}ms at checkpoint_every={every}"
+                )
+
+    base_s, base_stats = _incast_secs(workers, wire_elems, crash=False)
+    crash_s, crash_stats = _incast_secs(workers, wire_elems, crash=True)
+    extra = crash_s - base_s
+    print(
+        f"incast x{workers}: fault-free {base_s * 1e3:.1f}ms, "
+        f"hub-crash {crash_s * 1e3:.1f}ms (+{extra * 1e3:.1f}ms, "
+        f"resumes={crash_stats.get('resumes:', 0.0):.0f})"
+    )
+    # exactly-once across the crash: every frame delivered, none duplicated
+    assert base_stats.get(f"msgs:{CH}") == float(workers), base_stats
+    assert crash_stats.get(f"msgs:{CH}") == float(workers), crash_stats
+    assert crash_stats.get("hub_restarts:") == 1.0, crash_stats
+    assert crash_stats.get("resumes:", 0.0) >= 1.0, crash_stats
+    # soft wall-clock bound: session recovery is backoff-dominated, never
+    # timeout-dominated
+    assert extra < max(base_s, 0.5), (base_s, crash_s)
+    for mode, secs, stats in (
+        ("fault_free", base_s, base_stats),
+        ("hub_crash", crash_s, crash_stats),
+    ):
+        rows.append(
+            result_meta(
+                backend="multiproc",
+                leg="transport",
+                mode=mode,
+                workers=workers,
+                payload_bytes=wire_elems * 4,
+                incast_ms=secs * 1e3,
+                resumes=stats.get("resumes:", 0.0),
+                replays=stats.get("replays:", 0.0),
+                dedup_hits=stats.get("dedup_hits:", 0.0),
+                hub_restarts=stats.get("hub_restarts:", 0.0),
+            )
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    run(smoke=True)

@@ -66,6 +66,13 @@ def main(argv=None):
         results["incast"] = bench_incast.run(smoke=True)
 
         print("=" * 72)
+        print("Smoke — crash recovery: checkpoint cadence + hub-crash incast")
+        print("=" * 72)
+        from benchmarks import bench_recovery
+
+        results["recovery"] = bench_recovery.run(smoke=True)
+
+        print("=" * 72)
         print("Smoke — wire codecs: encode/decode throughput + ratio")
         print("=" * 72)
         from benchmarks import bench_codec
@@ -155,6 +162,13 @@ def main(argv=None):
     from benchmarks import bench_incast
 
     results["incast"] = bench_incast.run()
+
+    print("=" * 72)
+    print("Crash recovery — time-to-recover vs checkpoint cadence (64 workers)")
+    print("=" * 72)
+    from benchmarks import bench_recovery
+
+    results["recovery"] = bench_recovery.run()
 
     print("=" * 72)
     print("Wire codecs — encode/decode throughput + achieved ratio")

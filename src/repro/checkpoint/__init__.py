@@ -1,3 +1,3 @@
-from repro.checkpoint.checkpoint import latest_step, restore, save
+from repro.checkpoint.checkpoint import latest_step, load_tree, restore, save
 
-__all__ = ["save", "restore", "latest_step"]
+__all__ = ["save", "restore", "latest_step", "load_tree"]

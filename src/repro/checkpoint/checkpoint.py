@@ -60,6 +60,27 @@ def latest_step(directory: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def load_tree(directory: str, step: int) -> Dict[str, Any]:
+    """Load a checkpoint as a nested dict, no ``like`` template needed.
+
+    Rebuilds nesting from the flat '/'-joined keys (``"#i"`` path segments
+    — sequence indices — stay as plain string keys). This is the restore
+    mode for crash recovery, where the restoring process has no live tree
+    of the right shape to restore *into*: a restarted policy server uses
+    the loaded dict to reconstruct its round/version state wholesale.
+    """
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    tree: Dict[str, Any] = {}
+    with np.load(path) as data:
+        for key in data.files:
+            node = tree
+            parts = key.split(_SEP)
+            for part in parts[:-1]:
+                node = node.setdefault(part, {})
+            node[parts[-1]] = data[key]
+    return tree
+
+
 def restore(directory: str, step: int, like: Tree, strict: bool = False) -> Tree:
     """Restore into the structure of ``like`` (shape/dtype validated).
 

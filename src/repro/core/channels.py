@@ -991,6 +991,13 @@ class InprocBackend:
         with self._lock:
             self._clock[worker] = max(self._clock[worker], float(at))
 
+    def fabric_time(self) -> float:
+        """Max across all worker clocks: the fabric's notion of "how far the
+        job has progressed", used by the chaos plane to trigger seeded
+        hub-level faults (``hub_crash(shard, at)``) deterministically."""
+        with self._lock:
+            return max(self._clock.values(), default=0.0)
+
 
 def recv_any_multi(
     sources: Sequence[Tuple[ChannelEnd, Sequence[str]]],
@@ -1181,6 +1188,13 @@ class ChannelManager:
             val = stats.get(f"{key}:{channel}")
             if val is not None:
                 out[key] = float(val)
+        # session layer: recovery counters are fabric-wide (not per-channel)
+        # but surfaced here so chaos tests assert "recovery happened" off
+        # the same stats dict as everything else
+        for key in ("resumes:", "replays:", "dedup_hits:", "hub_restarts:"):
+            val = stats.get(key)
+            if val:
+                out[key.rstrip(":")] = float(val)
         return out
 
     def codec_ratio(self, channel: str) -> Optional[float]:

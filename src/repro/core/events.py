@@ -31,7 +31,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import threading
-from typing import Dict, List, Optional, Protocol, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Protocol, Sequence, Tuple
 
 from repro.core.channels import ChannelManager
 from repro.core.expansion import WorkerConfig
@@ -71,6 +71,42 @@ class VirtualEventLoop:
             ev = heapq.heappop(self._heap)
             self.record(ev.time, ev.kind, ev.worker)
             yield ev
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Seeded, declarative chaos schedule injected at the transport layer.
+
+    Extends the engine's lifecycle vocabulary (arrival / dropout / re-join)
+    with infrastructure faults, so every chaos scenario is a reproducible
+    seeded test rather than a flake:
+
+    * ``conn_resets`` — ``worker -> at``: the hub severs that worker's
+      connection (without replying) the first time a frame naming the
+      worker arrives at virtual time >= ``at``. The session layer's
+      reconnect-resume-retransmit makes the retried op exactly-once.
+    * ``hub_crashes`` — ``shard -> at``: the hub (or the named shard of a
+      ``ShardedTransportHub``; ``""`` means the root/single hub) kills its
+      listener and severs every live connection once fabric time passes
+      ``at``, then restarts accepting on the same port.
+    * ``server_restarts`` — ``worker -> (drop_at, rejoin_at)``: a server
+      role is killed and respawned through the supervisor's standby path;
+      on re-join it restores from its latest ``repro.checkpoint`` step and
+      re-greets its live clients through the session layer.
+    * ``seed`` — folded into the deterministic reconnect-backoff jitter.
+
+    ``RuntimePolicy.faults`` carries the plan; ``conn_resets`` and
+    ``hub_crashes`` work in any mode (the sync path included), while
+    ``server_restarts`` are folded into the policy's dropout/re-join
+    schedule and therefore imply event-driven execution.
+    """
+
+    conn_resets: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    hub_crashes: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    server_restarts: Mapping[str, Tuple[float, float]] = dataclasses.field(
+        default_factory=dict
+    )
+    seed: int = 0
 
 
 class EngineTransport(Protocol):

@@ -29,12 +29,15 @@ semantics over the whole aggregation tree.
 """
 from __future__ import annotations
 
+import json
+import os
 import queue
 import time
 from typing import Any, Dict, List, Optional, Tuple, Type
 
 import numpy as np
 
+from repro import checkpoint
 from repro.core.channels import WorkerDropped, recv_any_multi
 from repro.core.composer import Composer, Loop, Tasklet
 from repro.core.protocols import pack_broadcast, pack_update
@@ -51,6 +54,18 @@ def _tree_copy(t: Any) -> Any:
     import jax
 
     return jax.tree_util.tree_map(np.asarray, t)
+
+
+def _json_py(o: Any) -> Any:
+    """JSON fallback keeping checkpointed logs equal (under ``==``) to the
+    live ones: numpy scalars to their python counterparts."""
+    if isinstance(o, np.integer):
+        return int(o)
+    if isinstance(o, np.floating):
+        return float(o)
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    raise TypeError(f"not JSON-serializable: {type(o).__name__}")
 
 
 class _SnapshotStore:
@@ -143,6 +158,31 @@ class _PolicyBase:
 
     def _trainers(self) -> List[str]:
         return sorted(self._down().ends())
+
+    # ------------------------- checkpoint-restart ---------------------- #
+    # Periodic crash checkpoints via ``repro.checkpoint``, keyed by the
+    # ``checkpoint_every`` / ``checkpoint_dir`` hyperparams (both required
+    # to enable). Each policy server persists under its own subdirectory so
+    # every tier of a lowered hierarchy checkpoints independently.
+    def _ckpt_every(self) -> int:
+        return int(self.config.get("checkpoint_every", 0) or 0)
+
+    def _ckpt_dir(self) -> Optional[str]:
+        base = str(self.config.get("checkpoint_dir", "") or "")
+        if self._ckpt_every() <= 0 or not base:
+            return None
+        return os.path.join(base, self.ctx.worker.worker_id)
+
+    def _ckpt_state(self) -> Dict[str, Any]:  # pragma: no cover - overridden
+        raise NotImplementedError
+
+    def _maybe_checkpoint(self) -> None:
+        """Persist the server state tree every ``checkpoint_every`` versions
+        (atomic, step-indexed — see ``repro.checkpoint``)."""
+        directory = self._ckpt_dir()
+        if directory is None or self._version % self._ckpt_every() != 0:
+            return
+        checkpoint.save(directory, self._version, self._ckpt_state())
 
     def _collect_deadline(
         self, expected: List[str], version: int, round_start: float
@@ -283,6 +323,18 @@ class _DeadlineBase(_PolicyBase):
             "peak_buffered": self.peak_buffered,
         })
         self._version += 1
+        self._maybe_checkpoint()
+
+    def _ckpt_state(self) -> Dict[str, Any]:
+        meta = {
+            "participation_log": self.participation_log,
+            "metrics": self.metrics,
+        }
+        return {
+            "weights": self.weights,
+            "version": np.int64(self._version),
+            "meta": np.array(json.dumps(meta, default=_json_py)),
+        }
 
 
 class DeadlineRootMixin(_DeadlineBase):
@@ -447,6 +499,70 @@ class _BufferedAsyncBase(_PolicyBase):
         self._snapshots.put(
             self._version, self.weights, keep_from=self._snapshot_floor()
         )
+        self._maybe_checkpoint()
+        return True
+
+    def _ckpt_state(self) -> Dict[str, Any]:
+        """The full FedBuff server state as one checkpointable tree: model
+        weights, version + version vector, the snapshot store, streaming
+        strategy state ({"acc": tree, "count": int32} — arrays throughout),
+        and the JSON-able observables (logs/metrics) as a 0-d string leaf,
+        so a restore reproduces the server's *observable* history too."""
+        meta = {
+            "staleness_log": self.staleness_log,
+            "metrics": self.metrics,
+            "round": int(getattr(self, "_round", 0)),
+            "peak_buffered": int(self.peak_buffered),
+            "snapshot_window": int(self._snapshots.window),
+        }
+        return {
+            "weights": self.weights,
+            "version": np.int64(self._version),
+            "version_vector": {
+                c: np.int64(v) for c, v in self._version_vector.items()
+            },
+            "snapshots": {
+                str(v): w for v, w in self._snapshots._snaps.items()
+            },
+            "strategy": self._strategy_state,
+            "meta": np.array(json.dumps(meta, default=_json_py)),
+        }
+
+    def _restore_latest(self) -> bool:
+        """Crash recovery: rebuild the server from its newest checkpoint.
+
+        Returns False (cold start) when checkpointing is off or no step has
+        been written yet. On restore the whole state tree — weights,
+        version/version vector, snapshot store, strategy accumulator, logs
+        — comes back from disk, a ``restored_step`` metric marks the
+        resume, and the greeting set is reset so the caller re-admits every
+        live client with the restored weights (a duplicate broadcast is
+        harmless: trainers just train from it again)."""
+        directory = self._ckpt_dir()
+        if directory is None:
+            return False
+        step = checkpoint.latest_step(directory)
+        if step is None:
+            return False
+        tree = checkpoint.load_tree(directory, step)
+        meta = json.loads(str(np.asarray(tree["meta"])))
+        self.weights = tree["weights"]
+        self._version = int(np.asarray(tree["version"]))
+        self._version_vector = {
+            c: int(np.asarray(v))
+            for c, v in tree.get("version_vector", {}).items()
+        }
+        self._snapshots._snaps = {
+            int(v): w for v, w in tree["snapshots"].items()
+        }
+        self._snapshots._window = int(meta["snapshot_window"])
+        self._strategy_state = tree["strategy"]
+        self.staleness_log = list(meta["staleness_log"])
+        self.metrics = list(meta["metrics"])
+        self._round = int(meta["round"])
+        self.peak_buffered = int(meta["peak_buffered"])
+        self._greeted = set()
+        self.metrics.append({"restored_step": int(step)})
         return True
 
 
@@ -462,11 +578,22 @@ class AsyncRootMixin(_BufferedAsyncBase):
 
     def bootstrap(self) -> None:
         self._init_strategy()
+        if self._restore_latest():
+            # restarted server: re-admit the live cohort through the session
+            # layer — every current trainer gets the restored weights (and
+            # version), so an upload lost to the crash is simply re-trained
+            end = self._down()
+            self._greeted = set(self._trainers())
+            for t in sorted(self._greeted):
+                self._send_weights(end, t, self._version)
+            return
         self._snapshots.put(0, _tree_copy(self.weights))
         end = self._down()
         self._greeted = set(self._trainers())
         for t in sorted(self._greeted):
             self._send_weights(end, t, 0)
+        # step-0 checkpoint: a crash before the first version restores here
+        self._maybe_checkpoint()
 
     def _target_versions(self) -> int:
         pol = self._policy()

@@ -42,6 +42,7 @@ from repro.core.channels import (
 from repro.core.events import (
     ChannelManagerTransport,
     EventEngine,
+    FaultPlan,
     VirtualEventLoop,
 )
 from repro.core.expansion import JobSpec, WorkerConfig, expand
@@ -127,6 +128,13 @@ class RuntimePolicy:
     # wall-clock seconds a policy server waits on a quiet channel before
     # concluding that no further update is coming (dropped/hung workers)
     grace: float = 5.0
+    # seeded transport-layer chaos schedule (see ``FaultPlan``); its
+    # server_restarts entries are folded into dropouts/rejoins below, while
+    # conn_resets/hub_crashes are armed on the hub by the process launcher
+    # (the threaded deployment has no transport to fault — the plan is
+    # silently inert there, preserving cross-deployment equivalence of the
+    # fault-free observables)
+    faults: Optional[FaultPlan] = None
 
     MODES = ("sync", "deadline", "async")
     # numeric knobs a tiers override dict may set per role
@@ -135,6 +143,13 @@ class RuntimePolicy:
     )
 
     def __post_init__(self) -> None:
+        if self.faults is not None:
+            # a server restart IS a dropout + re-join as far as scheduling
+            # goes — fold it in before validation so is_event_driven flips
+            # and the supervisor sizes its standby pool for the respawn
+            for wid, (drop_at, rejoin_at) in self.faults.server_restarts.items():
+                self.dropouts.setdefault(wid, float(drop_at))
+                self.rejoins.setdefault(wid, float(rejoin_at))
         if self.mode not in self.MODES:
             raise ValueError(
                 f"unknown RuntimePolicy.mode {self.mode!r}; one of {self.MODES}"

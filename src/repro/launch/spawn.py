@@ -165,7 +165,8 @@ def _worker_body(
     channels: Optional[ChannelManager] = None
     try:
         channels = ChannelManager(
-            job.tag.channels, backend_factory=make_backend_factory(address)
+            job.tag.channels,
+            backend_factory=make_backend_factory(address, client_key=worker_id),
         )
         if pol.is_lowering:
             overrides = {worker.role: program_cls} if program_cls is not None else {}
@@ -541,6 +542,9 @@ class MultiprocLauncher:
             hub.set_wire_dtype(c.name, c.wire_dtype)
         for (channel, worker), model in self.link_models.items():
             hub.set_link(channel, worker, model)
+        faults = getattr(self.policy, "faults", None)
+        if faults is not None:
+            hub.arm_faults(faults)
         return hub
 
     def _worker_args(
@@ -772,6 +776,19 @@ class MultiprocLauncher:
             programs.setdefault(
                 w.worker_id, RemoteProgram(worker_id=w.worker_id, role=w.role)
             )
+        # surface the fabric's recovery counters on the root program (the
+        # way agg_folds rides program metrics), so tests assert that
+        # recovery actually happened instead of attribute-poking the hub
+        recovery = {
+            key.rstrip(":"): float(stats[key])
+            for key in ("resumes:", "replays:", "dedup_hits:", "hub_restarts:")
+            if stats.get(key)
+        }
+        if recovery:
+            for prog in programs.values():
+                if getattr(prog, "is_root", False):
+                    prog.metrics.append({"transport_recovery": recovery})
+                    break
         return JobResult(
             workers=self.workers,
             programs=programs,

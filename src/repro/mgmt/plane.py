@@ -211,7 +211,10 @@ class JobRecord:
     # deployment selection: "inproc" (default) runs agent threads in this
     # process; "multiproc" hands the whole job to the process-tree spawner.
     # A job with an event-driven RuntimePolicy routes through the matching
-    # EventEngine binding on either deployment.
+    # EventEngine binding on either deployment. A chaos schedule rides here
+    # too: ``RuntimePolicy.faults`` (a ``FaultPlan``) travels through this
+    # record verbatim and is armed into the hub fabric by the multiproc
+    # runner — the mgmt plane treats faults as job data, not a code path.
     deployment: str = "inproc"
     policy: Optional[RuntimePolicy] = None
     run_timeout: float = 120.0

@@ -765,6 +765,87 @@ def check_codec_roundtrip(codec_name: str) -> None:
             )
 
 
+# ------------------------------------------------------------------ #
+# exactly-once session semantics (connection-oriented backends)
+# ------------------------------------------------------------------ #
+# These three checks exercise the session/replay layer through the chaos
+# hooks a connection-oriented backend exposes (``_chaos_break_conn`` /
+# ``_chaos_duplicate`` / ``_chaos_probe_evicted``). A backend without a
+# connection to lose (inproc, the emu backends) has nothing to conform to
+# here — the hooks are probed with ``getattr`` and the check passes
+# vacuously, same as the optional-capability checks above.
+
+def check_session_resume_mid_recv(factory: Factory) -> None:
+    """Severing every connection under a *blocked* recv must not lose it:
+    the client reconnects, resumes its session, re-attaches to the
+    in-flight recv and receives the message sent after the break."""
+    be = factory()
+    if getattr(be, "_chaos_break_conn", None) is None:
+        return
+    _pair(be)
+    box: Dict[str, object] = {}
+
+    def _blocked() -> None:
+        try:
+            box["got"] = be.recv(CH, G, "b-0", "a-0", 30.0)
+        except BaseException as exc:  # noqa: BLE001 - surfaced via assert
+            box["err"] = exc
+
+    t = threading.Thread(target=_blocked, daemon=True)
+    t.start()
+    time.sleep(0.2)  # let the recv frame reach the hub and block there
+    be._chaos_break_conn()
+    time.sleep(0.1)
+    be.send(CH, G, "a-0", "b-0", {"y": 2})
+    be.now("a-0")  # ack barrier: the pipelined send is confirmed delivered
+    t.join(10.0)
+    assert not t.is_alive(), "blocked recv did not re-attach after the break"
+    assert "err" not in box, f"re-attached recv raised: {box['err']!r}"
+    assert box["got"]["y"] == 2  # type: ignore[index]
+    be.close()
+
+
+def check_duplicate_send_dedup(factory: Factory) -> None:
+    """A retransmitted (duplicate) send frame must be answered from the
+    replay cache, not re-executed: exactly one copy of the message exists."""
+    from repro.transport.wire import encode_payload
+
+    be = factory()
+    if getattr(be, "_chaos_duplicate", None) is None:
+        return
+    _pair(be)
+    _, dup_status, _ = be._chaos_duplicate(
+        "send", CH, G, "a-0", "b-0", encode_payload({"x": 1}, "")
+    )
+    assert dup_status == "ok", f"duplicate send rejected: {dup_status!r}"
+    got = be.recv(CH, G, "b-0", "a-0", 5.0)
+    assert got["x"] == 1
+    try:
+        extra = be.recv(CH, G, "b-0", "a-0", 0.2)
+    except queue.Empty:
+        extra = None
+    assert extra is None, f"duplicate send was re-executed: {extra!r}"
+    be.close()
+
+
+def check_replay_window_eviction(factory: Factory) -> None:
+    """A duplicate whose ack was already consumed (below the client's
+    floor) must be *rejected* — replaying it could otherwise re-execute an
+    op whose reply left the cache."""
+    be = factory()
+    if getattr(be, "_chaos_probe_evicted", None) is None:
+        return
+    _pair(be)
+    # two completed sync ops: the second frame's floor evicts the first's
+    # cached reply hub-side
+    be.now("a-0")
+    be.now("a-0")
+    status, value = be._chaos_probe_evicted()
+    assert status == "err", "evicted duplicate was answered (possibly re-run)"
+    assert "replay window" in str(value), value
+    be.close()
+
+
 CONFORMANCE_CHECKS: Dict[str, Callable[[Factory], None]] = {
     "protocol_surface": check_protocol_surface,
     "send_recv_roundtrip": check_send_recv_roundtrip,
@@ -787,6 +868,9 @@ CONFORMANCE_CHECKS: Dict[str, Callable[[Factory], None]] = {
     "send_many_stateful_fallback": check_send_many_stateful_fallback,
     "install_reduce_fold": check_install_reduce_fold,
     "install_reduce_sharded": check_install_reduce_sharded,
+    "session_resume_mid_recv": check_session_resume_mid_recv,
+    "duplicate_send_dedup": check_duplicate_send_dedup,
+    "replay_window_eviction": check_replay_window_eviction,
 }
 
 

@@ -28,10 +28,14 @@ other operations from the same process.
 """
 from __future__ import annotations
 
+import collections
+import itertools
+import os
 import queue
 import socket
 import threading
 import time
+import zlib
 from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.core.channels import (
@@ -64,34 +68,36 @@ __all__ = [
 ]
 
 
-# Ops safe to replay after an ambiguous connection fault: read-only queries,
-# plus absolute-state writes (set-to-a-value, membership add/remove) whose
-# double-apply is a no-op on the hub. Deliberately excluded are the ops whose
-# replay compounds state — ``send`` would duplicate a message, ``advance``
-# would double-step a clock, and the ``recv*`` family consumes from a
-# mailbox — any of which silently corrupts seeded-equivalence results.
-_IDEMPOTENT_OPS = frozenset({
-    # read-only
-    "ping", "stats", "peers", "peek", "earliest", "link", "now",
-    "drop_time", "check_poison",
-    # membership (hub add/remove are presence-checked)
-    "join", "leave",
-    # absolute-state writes
-    "set_drop", "clear_drop", "poison", "set_link", "set_wire_dtype",
-    "set_clock", "install_reduce",
-})
+# Process-unique suffix for client session ids: a session is one (client
+# process, thread) stream of RPCs, so the id only has to be unique within
+# the job — the pid guards against forked counters colliding.
+_SESSION_IDS = itertools.count()
 
 
 class DeferredAckError(ConnectionError):
-    """Connection fault while draining deferred send acks.
+    """Reconnect attempts exhausted with un-acked frames outstanding.
 
-    The pipelined send path is fire-and-forget: the hub's replies are
-    collected at the next synchronous op on the connection. If the
-    connection dies mid-drain, the outcome of those sends is ambiguous —
-    deliberately NOT a ``ConnectionResetError``/``BrokenPipeError``, so
-    ``_call``'s idempotent-op retry can never reconnect over it and mask
-    the fault (PR 4's rule: non-idempotent ops never silently retry).
+    With exactly-once sessions every connection fault is first handled by
+    reconnect-resume-retransmit; this error surfaces only when that gives
+    up (hub permanently gone), at which point the outcome of the frames
+    still awaiting acks is unknowable. The first outstanding frame is
+    attributed on the exception — ``op``/``channel``/``group``/``seq`` —
+    so a lost fire-and-forget send names itself in test failures.
     """
+
+    def __init__(
+        self,
+        message: str,
+        op: Optional[str] = None,
+        channel: Optional[str] = None,
+        group: Optional[str] = None,
+        seq: Optional[int] = None,
+    ) -> None:
+        super().__init__(message)
+        self.op = op
+        self.channel = channel
+        self.group = group
+        self.seq = seq
 
 
 # ------------------------------------------------------------------ #
@@ -117,6 +123,21 @@ def _raise_error(kind: str, args: Sequence[Any]) -> None:
     raise RuntimeError(f"transport hub error: {args[0]}")
 
 
+class _HubSession:
+    """Per-session exactly-once state: cached replies keyed by sequence
+    number (the dedup/replay window) plus in-flight markers so a reconnected
+    client can re-attach to an op still executing on a zombie serve thread.
+    """
+
+    __slots__ = ("lock", "replies", "inflight", "evicted_below")
+
+    def __init__(self) -> None:
+        self.lock = threading.Lock()
+        self.replies: Dict[int, Tuple[str, Any]] = {}
+        self.inflight: Dict[int, threading.Event] = {}
+        self.evicted_below = 0
+
+
 class TransportHub:
     """Socket-facing broker wrapping one shared backend for a whole job.
 
@@ -127,6 +148,12 @@ class TransportHub:
     byte-accounting reads.
     """
 
+    # hard cap on cached replies per session: normally the client's floor
+    # evicts acked replies promptly, so the window only fills if a client
+    # stops consuming acks — comfortably above MAX_PENDING_ACKS so a full
+    # pipeline can always be replayed after a reconnect
+    REPLAY_WINDOW = 1024
+
     def __init__(
         self,
         host: str = "127.0.0.1",
@@ -136,14 +163,30 @@ class TransportHub:
         backlog: int = 1024,
     ) -> None:
         self.backend = backend or InprocBackend("multiproc-hub", wall_clock=wall_clock)
+        self._backlog = max(1, int(backlog))
         self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._sock.bind((host, port))
         # a pool of 1k workers connects in one burst; an undersized backlog
         # turns that into connection-refused storms (the kernel may clamp to
-        # net.core.somaxconn, and MultiprocBackend._conn retries once)
-        self._sock.listen(max(1, int(backlog)))
+        # net.core.somaxconn, and MultiprocBackend reconnects with backoff)
+        self._sock.listen(self._backlog)
         self._closed = threading.Event()
+        # exactly-once session state survives any individual connection (and
+        # a simulated hub crash): sessions are keyed by the client-minted id,
+        # not by the socket that carried them
+        self._sessions: Dict[str, _HubSession] = {}
+        self._sessions_lock = threading.Lock()
+        self._counters = {"resumes:": 0.0, "replays:": 0.0, "dedup_hits:": 0.0}
+        self._counters_lock = threading.Lock()
+        # live client connections, tracked so a simulated crash can sever
+        # them all exactly like a hub process death would
+        self._conns: List[socket.socket] = []
+        self._conns_lock = threading.Lock()
+        # armed chaos faults (FaultPlan), each one-shot
+        self._fault_lock = threading.Lock()
+        self._conn_resets: Dict[str, float] = {}
+        self._crash_at: Optional[float] = None
         self._accept_thread = threading.Thread(
             target=self._accept_loop, name="transport-hub-accept", daemon=True
         )
@@ -171,7 +214,23 @@ class TransportHub:
 
     @property
     def stats(self) -> Dict[str, float]:
-        return dict(self.backend.stats)
+        return self._merged_stats()
+
+    def _merged_stats(self) -> Dict[str, float]:
+        """Backend accounting plus the session-layer recovery counters
+        (``resumes:`` / ``replays:`` / ``dedup_hits:``). Zero counters are
+        omitted so fault-free runs keep byte-identical stats dicts across
+        deployments."""
+        out = dict(self.backend.stats)
+        with self._counters_lock:
+            for key, val in self._counters.items():
+                if val:
+                    out[key] = out.get(key, 0.0) + val
+        return out
+
+    def _bump(self, key: str, n: float = 1.0) -> None:
+        with self._counters_lock:
+            self._counters[key] = self._counters.get(key, 0.0) + n
 
     def set_wire_dtype(self, channel: str, dtype: str) -> None:
         self.backend.set_wire_dtype(channel, dtype)
@@ -216,33 +275,254 @@ class TransportHub:
             ).start()
 
     def _serve_conn(self, conn: socket.socket) -> None:
+        with self._conns_lock:
+            self._conns.append(conn)
         try:
             while True:
                 try:
-                    op, args = recv_obj(conn)
+                    frame = recv_obj(conn)
                 except (ConnectionError, OSError):
-                    return  # client process exited
-                try:
-                    reply = ("ok", self._dispatch(str(op), list(args)))
-                except BaseException as exc:  # noqa: BLE001 - marshalled over
-                    reply = ("err", _encode_error(exc))
-                try:
-                    send_obj(conn, reply)
-                except WireError as exc:
-                    # an unencodable dispatch result: send_obj encodes fully
-                    # before writing, so the stream is still clean — report
-                    # the marshalling failure instead of killing the handler
-                    try:
-                        send_obj(conn, ("err", _encode_error(exc)))
-                    except (ConnectionError, OSError):
+                    return  # client process exited (or chaos severed us)
+                if len(frame) == 2:
+                    # sessionless frame: the resume handshake itself, plus
+                    # legacy 2-tuple callers (raw ping probes)
+                    op, args = frame
+                    if not self._serve_sessionless(conn, str(op), list(args)):
                         return
-                except (ConnectionError, OSError):
+                    continue
+                op, args, sid, seq, floor = frame
+                if not self._serve_sessionful(
+                    conn, str(op), list(args), str(sid), int(seq), int(floor)
+                ):
                     return
         finally:
+            with self._conns_lock:
+                try:
+                    self._conns.remove(conn)
+                except ValueError:
+                    pass
             try:
                 conn.close()
             except OSError:
                 pass
+
+    def _serve_sessionless(
+        self, conn: socket.socket, op: str, args: List[Any]
+    ) -> bool:
+        if op == "session_resume":
+            # re-attach: make sure the session exists (its replay cache and
+            # in-flight markers survive connection churn by construction)
+            self._session(str(args[0]))
+            self._bump("resumes:")
+            reply: Tuple[str, Any] = ("ok", None)
+        else:
+            try:
+                reply = ("ok", self._dispatch(op, args))
+            except BaseException as exc:  # noqa: BLE001 - marshalled over
+                reply = ("err", _encode_error(exc))
+        return self._send_reply(conn, reply)
+
+    def _serve_sessionful(
+        self,
+        conn: socket.socket,
+        op: str,
+        args: List[Any],
+        sid: str,
+        seq: int,
+        floor: int,
+    ) -> bool:
+        if self._inject_fault(conn, args):
+            return False  # connection severed pre-dispatch, frame "lost"
+        sess = self._session(sid)
+        cached: Optional[Tuple[str, Any]] = None
+        wait_ev: Optional[threading.Event] = None
+        with sess.lock:
+            # the client's floor is the lowest seq still awaiting its ack:
+            # every cached reply below it has been consumed and can go
+            if floor > sess.evicted_below:
+                for s in [s for s in sess.replies if s < floor]:
+                    del sess.replies[s]
+                sess.evicted_below = floor
+            if seq in sess.replies:
+                # duplicate of a completed op: replay the cached reply, do
+                # NOT re-dispatch (the exactly-once guarantee)
+                cached = sess.replies[seq]
+            elif seq in sess.inflight:
+                # duplicate of an op still executing (a blocked recv whose
+                # original connection died): re-attach to its completion
+                wait_ev = sess.inflight[seq]
+            elif seq < sess.evicted_below:
+                cached = ("err", ("error", [
+                    f"seq {seq} outside the replay window (evicted below "
+                    f"{sess.evicted_below}): duplicate arrived after its "
+                    f"ack was already consumed"
+                ]))
+            else:
+                sess.inflight[seq] = threading.Event()
+        if wait_ev is not None:
+            self._bump("dedup_hits:")
+            wait_ev.wait()
+            with sess.lock:
+                cached = sess.replies.get(seq)
+            if cached is None:  # pragma: no cover - executor always caches
+                cached = ("err", ("error", [f"in-flight seq {seq} lost"]))
+        if cached is not None:
+            self._bump("dedup_hits:")
+            self._bump("replays:")
+            return self._send_reply(conn, cached)
+        try:
+            reply = ("ok", self._dispatch(op, args))
+        except BaseException as exc:  # noqa: BLE001 - marshalled over
+            reply = ("err", _encode_error(exc))
+        # cache BEFORE the socket write: if the connection dies mid-reply,
+        # the retransmitted frame replays this reply instead of re-running
+        # the (possibly state-mutating) op
+        with sess.lock:
+            sess.replies[seq] = reply
+            ev = sess.inflight.pop(seq, None)
+            if len(sess.replies) > self.REPLAY_WINDOW:
+                for s in sorted(sess.replies)[: -self.REPLAY_WINDOW]:
+                    del sess.replies[s]
+                    sess.evicted_below = max(sess.evicted_below, s + 1)
+        if ev is not None:
+            ev.set()
+        return self._send_reply(conn, reply)
+
+    def _send_reply(self, conn: socket.socket, reply: Tuple[str, Any]) -> bool:
+        try:
+            send_obj(conn, reply)
+            return True
+        except WireError as exc:
+            # an unencodable dispatch result: send_obj encodes fully before
+            # writing, so the stream is still clean — report the marshalling
+            # failure instead of killing the handler
+            try:
+                send_obj(conn, ("err", _encode_error(exc)))
+                return True
+            except (ConnectionError, OSError):
+                return False
+        except (ConnectionError, OSError):
+            return False
+
+    def _session(self, sid: str) -> _HubSession:
+        with self._sessions_lock:
+            sess = self._sessions.get(sid)
+            if sess is None:
+                sess = self._sessions[sid] = _HubSession()
+            return sess
+
+    # --------------------- deterministic chaos plane -------------------- #
+    def arm_faults(self, plan: Any) -> None:
+        """Arm this hub with a ``FaultPlan``'s transport faults (each
+        one-shot): ``conn_resets`` sever the connection carrying the first
+        frame that names the worker once its clock passes ``at``;
+        ``hub_crashes`` (shard key ``""`` for a single hub) trigger
+        ``simulate_crash`` once fabric time passes ``at``."""
+        crashes = dict(getattr(plan, "hub_crashes", {}) or {})
+        unknown = [k for k in crashes if k != ""]
+        if unknown:
+            raise ValueError(
+                f"unknown hub_crash shard key(s) {unknown!r} for a single "
+                'hub (use "" for the root)'
+            )
+        with self._fault_lock:
+            for worker, at in (getattr(plan, "conn_resets", {}) or {}).items():
+                self._conn_resets[str(worker)] = float(at)
+            if "" in crashes:
+                self._crash_at = float(crashes[""])
+
+    def _arm_crash(self, at: float) -> None:
+        with self._fault_lock:
+            self._crash_at = float(at)
+
+    def _arm_conn_resets(self, resets: Dict[str, float]) -> None:
+        with self._fault_lock:
+            for worker, at in resets.items():
+                self._conn_resets[str(worker)] = float(at)
+
+    def _frame_worker(self, args: List[Any]) -> Optional[str]:
+        """First armed worker named anywhere in a frame's arguments."""
+        for a in args:
+            if isinstance(a, str) and a in self._conn_resets:
+                return a
+            if isinstance(a, (list, tuple)):
+                for b in a:
+                    if isinstance(b, str) and b in self._conn_resets:
+                        return b
+        return None
+
+    def _inject_fault(self, conn: socket.socket, args: List[Any]) -> bool:
+        """Deterministic pre-dispatch fault check. Returns True when the
+        frame's connection was severed (the op was NOT executed — from the
+        client's view the request is lost, and its session-layer retry
+        re-executes it exactly once)."""
+        if self._crash_at is None and not self._conn_resets:
+            return False
+        crash = False
+        reset = False
+        with self._fault_lock:
+            if (
+                self._crash_at is not None
+                and self.backend.fabric_time() >= self._crash_at
+            ):
+                self._crash_at = None
+                crash = True
+            elif self._conn_resets:
+                worker = self._frame_worker(args)
+                if (
+                    worker is not None
+                    and self.backend.now(worker) >= self._conn_resets[worker]
+                ):
+                    del self._conn_resets[worker]
+                    reset = True
+        if crash:
+            self.simulate_crash()
+            return True
+        if reset:
+            try:
+                conn.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            return True
+        return False
+
+    def simulate_crash(self) -> None:
+        """Chaos hook: kill the listener and sever every live client
+        connection — what a hub process death looks like from outside —
+        then restart accepting on the SAME port. Broker state (mailboxes,
+        clocks, reduce accumulators, sessions) survives in-process: the
+        restarted hub re-admits clients through the session layer, and ops
+        still executing on zombie serve threads complete into the replay
+        cache for the re-attached connections to collect."""
+        host, port = self.address
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+        self._accept_thread.join(timeout=2.0)
+        with self._conns_lock:
+            conns, self._conns = list(self._conns), []
+        for conn in conns:
+            # shutdown (not close): the owning serve thread wakes on the
+            # read fault and closes its own fd — no cross-thread fd races
+            try:
+                conn.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+        sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        sock.bind((host, port))
+        sock.listen(self._backlog)
+        self._sock = sock
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name="transport-hub-accept", daemon=True
+        )
+        self._accept_thread.start()
+        self._bump("hub_restarts:")
 
     def _dispatch(self, op: str, args: List[Any]) -> Any:
         """Special-case the ops whose arguments/results need wire coercion;
@@ -253,7 +533,7 @@ class TransportHub:
         if op == "ping":
             return "pong"
         if op == "stats":
-            return dict(be.stats)
+            return self._merged_stats()
         if op == "recv_any":
             channel, group, me, ends, timeout, advance = args
             end, payload, arrival = be.recv_any(
@@ -407,12 +687,39 @@ class ShardedTransportHub:
     def stats(self) -> Dict[str, float]:
         """Fabric-wide accounting: each (channel, group) topic is hosted by
         exactly one hub, so summing per-key across hubs reproduces the
-        single-hub totals bit-for-bit."""
+        single-hub totals bit-for-bit (session-layer recovery counters sum
+        the same way — each hub counts its own resumes/replays)."""
         out: Dict[str, float] = {}
         for hub in self.hubs():
-            for k, v in hub.backend.stats.items():
+            for k, v in hub.stats.items():
                 out[k] = out.get(k, 0.0) + float(v)
         return out
+
+    # --------------------- deterministic chaos plane -------------------- #
+    def arm_faults(self, plan: Any) -> None:
+        """Fan a ``FaultPlan`` across the fabric: ``hub_crashes`` route by
+        shard key (``""`` = the root hub); ``conn_resets`` arm every hub,
+        since a worker's frames may land on any shard it touches."""
+        crashes = dict(getattr(plan, "hub_crashes", {}) or {})
+        unknown = [k for k in crashes if k != "" and k not in self.shards]
+        if unknown:
+            raise ValueError(
+                f"unknown hub_crash shard key(s) {unknown!r}; have "
+                f"{['', *sorted(self.shards)]!r}"
+            )
+        resets = {
+            str(w): float(t)
+            for w, t in (getattr(plan, "conn_resets", {}) or {}).items()
+        }
+        for key, hub in (("", self.root), *self.shards.items()):
+            if resets:
+                hub._arm_conn_resets(resets)
+            if key in crashes:
+                hub._arm_crash(float(crashes[key]))
+
+    def simulate_crash(self, shard: str = "") -> None:
+        hub = self.shards.get(shard, self.root) if shard else self.root
+        hub.simulate_crash()
 
     # ------------------------------------------------------------------ #
     def close(self) -> None:
@@ -437,9 +744,16 @@ class MultiprocBackend:
     it via its ``backend_factory`` hook).
     """
 
-    # one reconnect-with-backoff on a transient connection fault before the
-    # error surfaces (the first slice of the multi-host reconnect story)
+    # base delay of the capped exponential connect backoff (doubles per
+    # attempt up to MAX_BACKOFF, scaled by deterministic per-client jitter)
     RETRY_BACKOFF = 0.05
+    MAX_BACKOFF = 1.0
+    # connect attempts after the first failure; REPRO_CONNECT_RETRIES
+    # overrides at call time (a 1k-worker reconnect storm after a hub
+    # restart spreads itself over the jittered exponential schedule)
+    CONNECT_RETRIES = 5
+    # full reconnect-resume-retransmit cycles per op before giving up
+    MAX_RECOVERIES = 3
     # max in-flight fire-and-forget sends per connection before the client
     # drains acks inline: bounds the hub's reply backlog (an ack frame is
     # ~tens of bytes, so the cap keeps worst-case buffered replies far under
@@ -447,9 +761,18 @@ class MultiprocBackend:
     # on mutually full buffers)
     MAX_PENDING_ACKS = 256
 
-    def __init__(self, address: Tuple[str, int], name: str = "multiproc") -> None:
+    def __init__(
+        self,
+        address: Tuple[str, int],
+        name: str = "multiproc",
+        client_key: str = "",
+    ) -> None:
         self.name = name
         self.address = (str(address[0]), int(address[1]))
+        # stable identity prefix for session ids and backoff jitter: the
+        # launcher passes the worker id, so reconnect storms de-correlate
+        # per worker deterministically (seed-derived, no wall-clock entropy)
+        self.client_key = str(client_key)
         self._local = threading.local()
         # channel -> opt-in payload codec object (client-local: the hub
         # stores the coded payload opaquely; peers decode via the envelope
@@ -468,114 +791,281 @@ class MultiprocBackend:
         self._socks_lock = threading.Lock()
 
     # ------------------------------------------------------------------ #
-    def _conn(self) -> socket.socket:
-        sock = getattr(self._local, "sock", None)
-        if sock is None:
+    def _state(self) -> Any:
+        """Per-thread session state. A session is one thread's monotonic
+        RPC stream: its id is minted once and survives every reconnect —
+        the hub's dedup/replay window is keyed by it."""
+        local = self._local
+        if getattr(local, "session", None) is None:
+            local.session = (
+                f"{self.client_key or 'client'}|{os.getpid()}.{next(_SESSION_IDS)}"
+            )
+            local.seq = 0
+            # frames written whose replies have not been consumed yet, in
+            # order: replies arrive in frame order on a connection, so the
+            # oldest entry always matches the next reply — and after a
+            # fault this deque IS the retransmission queue
+            local.unacked = collections.deque()
+            # last two completed frames (chaos probes replay them)
+            local.last_frames = collections.deque(maxlen=2)
+            if getattr(local, "sock", None) is None:
+                local.sock = None
+        return local
+
+    def _connect(self) -> socket.socket:
+        """Dial the hub with capped exponential backoff and deterministic
+        (seed-derived) jitter: each worker's schedule is a pure function of
+        its client key, so a 1k-worker reconnect storm after a hub restart
+        spreads out instead of thundering in lockstep. Attempts are bounded
+        by ``REPRO_CONNECT_RETRIES`` (read per call so tests can tighten
+        it)."""
+        st = self._state()
+        retries = self.CONNECT_RETRIES
+        env = os.environ.get("REPRO_CONNECT_RETRIES")
+        if env:
+            retries = max(0, int(env))
+        for attempt in range(retries + 1):
             try:
                 sock = socket.create_connection(self.address, timeout=30.0)
-            except (ConnectionRefusedError, TimeoutError):
-                # a hub draining a full accept backlog (1k pooled workers
-                # connecting in one burst) can refuse briefly — one bounded
-                # retry before the fault surfaces
-                time.sleep(self.RETRY_BACKOFF)
-                sock = socket.create_connection(self.address, timeout=30.0)
+            except OSError:
+                if attempt >= retries:
+                    raise
+                base = min(self.RETRY_BACKOFF * (2.0 ** attempt), self.MAX_BACKOFF)
+                seed = f"{self.client_key}:{st.session}:{attempt}".encode()
+                frac = zlib.crc32(seed) / 2.0 ** 32
+                time.sleep(base * (0.5 + 0.5 * frac))
+                continue
             sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-            # blocking after connect: receive waits are governed by the hub's
-            # op timeout, not the socket's
+            # blocking after connect: receive waits are governed by the
+            # hub's op timeout, not the socket's
             sock.settimeout(None)
-            self._local.sock = sock
-            self._local.pending = 0
+            st.sock = sock
             with self._socks_lock:
                 self._all_socks.append(sock)
+            return sock
+        raise ConnectionError("unreachable")  # pragma: no cover
+
+    def _drop_sock(self) -> None:
+        st = self._state()
+        sock, st.sock = st.sock, None
+        if sock is not None:
+            try:
+                sock.close()
+            except OSError:
+                pass
+
+    def _recover(self) -> socket.socket:
+        """Reconnect-resume-retransmit: dial a fresh connection, re-attach
+        the session hub-side, then replay every frame whose reply was never
+        consumed. The hub's replay window answers already-executed frames
+        from cache and executes the rest exactly once — so recovery is
+        legal for ANY op, not just idempotent ones."""
+        st = self._state()
+        self._drop_sock()
+        sock = self._connect()
+        send_obj(sock, ("session_resume", [st.session]))
+        status, value = recv_obj(sock)
+        if status != "ok":  # pragma: no cover - resume never errors today
+            kind, eargs = value
+            _raise_error(str(kind), list(eargs))
+        for frame in st.unacked:
+            send_obj(sock, frame)
         return sock
 
-    def _drop_conn(self, sock: socket.socket) -> None:
-        """Discard a faulted connection so the next call reconnects. Any
-        un-drained acks died with the stream."""
-        self._local.pending = 0
-        try:
-            sock.close()
-        finally:
-            self._local.sock = None
+    def _ensure_sock(self) -> socket.socket:
+        st = self._state()
+        if st.sock is not None:
+            return st.sock
+        if st.seq > 0 or st.unacked:
+            return self._recover_or_fault()
+        return self._connect()
 
-    def _drain_acks(self, sock: socket.socket) -> None:
-        """Collect the hub's replies for every fire-and-forget send still in
-        flight on this connection. The first deferred error (e.g. a
-        ``WorkerDropped`` from a send) is re-raised only after the stream is
-        realigned — every pending reply consumed — so the connection stays
-        usable. A connection fault mid-drain leaves the outcome of those
-        sends ambiguous and surfaces as ``DeferredAckError``, which the
-        retry layer never masks."""
-        pending = getattr(self._local, "pending", 0)
-        if not pending:
-            return
-        first_err: Optional[Tuple[str, List[Any]]] = None
-        try:
-            while pending:
+    def _recover_or_fault(self) -> socket.socket:
+        """Bounded recovery driver: on repeated failure, surface
+        ``DeferredAckError`` (attributed to the first outstanding frame)
+        when un-acked frames are at stake, else the connect error."""
+        last: Optional[BaseException] = None
+        for _ in range(self.MAX_RECOVERIES):
+            try:
+                return self._recover()
+            except (ConnectionError, OSError) as exc:
+                last = exc
+                self._drop_sock()
+        self._ack_fault(last)
+        raise last  # pragma: no cover - _ack_fault always raises
+
+    def _ack_fault(self, exc: Optional[BaseException]) -> None:
+        """Give up on this thread's outstanding frames: reconnects are
+        exhausted, so their outcome is ambiguous. Attribution (op, channel,
+        group, seq) rides on the exception and in the drained-ack stats."""
+        st = self._state()
+        self._drop_sock()
+        if not st.unacked:
+            if exc is not None:
+                raise exc
+            raise ConnectionError("transport hub unreachable")
+        op, args, _sid, seq, _floor = st.unacked[0]
+        channel = str(args[0]) if args else None
+        group = str(args[1]) if len(args) > 1 else None
+        n = len(st.unacked)
+        st.unacked.clear()
+        with self._codec_stats_lock:
+            key = f"ack_faults:{channel}"
+            self._codec_stats[key] = self._codec_stats.get(key, 0.0) + 1.0
+        raise DeferredAckError(
+            f"reconnect attempts exhausted with {n} un-acked frame(s) "
+            f"outstanding (first: op={op} channel={channel} group={group} "
+            f"seq={seq})",
+            op=str(op), channel=channel, group=group, seq=int(seq),
+        ) from exc
+
+    def _send_frame(self, op: str, args: List[Any]) -> None:
+        """Write one sessionful frame ``(op, args, session, seq, floor)``.
+        The frame enters the un-acked queue BEFORE the write, so a fault at
+        any point is recovered by retransmission; the floor (oldest
+        un-acked seq) tells the hub which cached replies are safe to
+        evict."""
+        st = self._state()
+        seq = st.seq
+        st.seq += 1
+        floor = int(st.unacked[0][3]) if st.unacked else seq
+        frame = [str(op), list(args), st.session, seq, floor]
+        st.unacked.append(frame)
+        for _ in range(self.MAX_RECOVERIES + 1):
+            sock = st.sock
+            if sock is None:
+                # _recover retransmits the whole un-acked queue — including
+                # this frame — so there is nothing left to write
+                self._recover_or_fault()
+                return
+            try:
+                send_obj(sock, frame)
+                return
+            except (ConnectionError, OSError):
+                self._drop_sock()
+        self._ack_fault(None)  # pragma: no cover - recover path raises first
+
+    def _consume_reply(self) -> Tuple[str, Any]:
+        """Read the reply for the oldest un-acked frame, recovering the
+        connection (and re-attaching to a blocked op) on any fault."""
+        st = self._state()
+        recoveries = 0
+        while True:
+            sock = st.sock
+            if sock is None:
+                sock = self._recover_or_fault()
+            try:
                 status, value = recv_obj(sock)
-                pending -= 1
-                self._local.pending = pending
-                if status != "ok" and first_err is None:
-                    first_err = (str(value[0]), list(value[1]))
-        except (ConnectionError, OSError) as exc:
-            n = pending
-            self._drop_conn(sock)
-            raise DeferredAckError(
-                f"connection fault with {n} deferred send ack(s) outstanding"
-            ) from exc
+            except (ConnectionError, OSError) as exc:
+                recoveries += 1
+                if recoveries > self.MAX_RECOVERIES:
+                    self._ack_fault(exc)
+                self._drop_sock()
+                continue
+            frame = st.unacked.popleft()
+            st.last_frames.append(frame)
+            return str(status), value
+
+    def _drain_acks(self) -> None:
+        """Collect the hub's replies for every fire-and-forget send still
+        in flight on this thread. The first deferred error (e.g. a
+        ``WorkerDropped`` from a send) is re-raised only after the stream
+        is realigned — every pending reply consumed — so the connection
+        stays usable. Connection faults mid-drain recover transparently;
+        only exhausted reconnects surface (as ``DeferredAckError``)."""
+        st = self._state()
+        first_err: Optional[Tuple[str, List[Any]]] = None
+        while st.unacked:
+            status, value = self._consume_reply()
+            if status != "ok" and first_err is None:
+                first_err = (str(value[0]), list(value[1]))
         if first_err is not None:
             _raise_error(first_err[0], first_err[1])
 
     def _send_nowait(self, op: str, *args: Any) -> None:
         """Issue a send-family op fire-and-forget (pipelined): write the
         frame, defer collecting the hub's ack to the next synchronous op on
-        this connection. A deferred fault therefore surfaces before the next
-        op returns — never silently retried. A write failure here is
-        unambiguous (the op was not dispatched) and raises synchronously."""
-        sock = self._conn()
-        if getattr(self._local, "pending", 0) >= self.MAX_PENDING_ACKS:
-            self._drain_acks(sock)
-        try:
-            send_obj(sock, (op, list(args)))
-        except (ConnectionError, OSError):
-            self._drop_conn(sock)
-            raise
-        self._local.pending = getattr(self._local, "pending", 0) + 1
+        this connection. A deferred fault therefore surfaces before the
+        next op returns — after the session layer has already recovered
+        everything recoverable."""
+        st = self._state()
+        self._ensure_sock()
+        if len(st.unacked) >= self.MAX_PENDING_ACKS:
+            self._drain_acks()
+        self._send_frame(op, list(args))
 
     def _call(self, op: str, *args: Any) -> Any:
-        """One RPC to the hub, with a single reconnect-with-backoff retry on
-        a transient connection fault (``ConnectionResetError`` /
-        ``BrokenPipeError``) before the error surfaces. The retry is limited
-        to ``_IDEMPOTENT_OPS``: a fault racing the hub's dispatch may have
-        applied the op already, and replaying e.g. ``send`` or ``advance``
-        would double-apply it (duplicate message, double clock step) —
-        those ops surface the fault to the caller instead. (A fault while
-        draining *deferred* acks arrives as ``DeferredAckError``, which is
-        deliberately outside the retried types.)"""
-        try:
-            return self._call_once(op, *args)
-        except (ConnectionResetError, BrokenPipeError):
-            if op not in _IDEMPOTENT_OPS:
-                raise
-            time.sleep(self.RETRY_BACKOFF)
-            return self._call_once(op, *args)
-
-    def _call_once(self, op: str, *args: Any) -> Any:
-        sock = self._conn()
-        # synchronous ops are the pipeline's ack barrier: deferred send
-        # faults surface here, before this op is dispatched
-        self._drain_acks(sock)
-        try:
-            send_obj(sock, (op, list(args)))
-            status, value = recv_obj(sock)
-        except (ConnectionError, OSError):
-            # drop the broken socket so the next call reconnects
-            self._drop_conn(sock)
-            raise
+        """One synchronous RPC. Synchronous ops are the pipeline's ack
+        barrier: deferred send faults surface here, before this op is
+        dispatched. Any connection fault — before, during or after the
+        hub's dispatch — is recovered by reconnect-resume-retransmit; the
+        hub's per-session dedup window makes the retry exactly-once for
+        every op (send, advance, recv*, ...), which is what licenses
+        retrying non-idempotent ops at all."""
+        st = self._state()
+        self._ensure_sock()
+        self._drain_acks()
+        self._send_frame(op, list(args))
+        status, value = self._consume_reply()
         if status == "ok":
             return value
         kind, eargs = value
         _raise_error(str(kind), list(eargs))
+
+    # --------------------- deterministic chaos hooks -------------------- #
+    def _chaos_break_conn(self) -> None:
+        """Sever every live connection of this client (all threads) without
+        touching session state: blocked threads wake on the read fault,
+        reconnect, resume and re-attach. shutdown() rather than close() so
+        a thread blocked inside recv_obj wakes deterministically and the
+        owning thread keeps sole custody of its fd."""
+        with self._socks_lock:
+            socks = list(self._all_socks)
+        for sock in socks:
+            try:
+                sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+
+    def _raw_exchange(self, frames: Sequence[Any]) -> Tuple[str, Any]:
+        """Replay pre-built frames over a fresh connection — the exact wire
+        pattern of a crashed-and-reconnected client — returning the last
+        reply. Test/conformance hook."""
+        sock = socket.create_connection(self.address, timeout=30.0)
+        try:
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            status: str = "err"
+            value: Any = None
+            for frame in frames:
+                send_obj(sock, frame)
+                status, value = recv_obj(sock)
+            return str(status), value
+        finally:
+            try:
+                sock.close()
+            except OSError:
+                pass
+
+    def _chaos_duplicate(self, op: str, *args: Any) -> Tuple[Any, str, Any]:
+        """Run one RPC normally, then replay its exact frame over a fresh
+        connection (as a crash-retry would): returns (result, dup_status,
+        dup_value). The duplicate must be answered from the hub's replay
+        cache — never re-executed."""
+        result = self._call(op, *args)
+        st = self._state()
+        frame = st.last_frames[-1]
+        status, value = self._raw_exchange(
+            [("session_resume", [st.session]), frame]
+        )
+        return result, status, value
+
+    def _chaos_probe_evicted(self) -> Tuple[str, Any]:
+        """Replay the second-newest completed frame: the newest frame's
+        floor has evicted its cached reply, so the hub must answer with the
+        replay-window error instead of silently re-executing."""
+        st = self._state()
+        frame = st.last_frames[0]
+        return self._raw_exchange([("session_resume", [st.session]), frame])
 
     def close(self) -> None:
         """Close every connection this client ever opened (all threads).
@@ -587,12 +1077,13 @@ class MultiprocBackend:
         # hub — a worker whose *last* op was a fire-and-forget send (e.g. an
         # aggregator's final done-broadcast) would silently lose it. Once the
         # acks are in, the hub has processed every frame. Other threads'
-        # pipelines are unreachable from here (pending counts are
+        # pipelines are unreachable from here (un-acked queues are
         # thread-local); their owners drain at their own sync ops.
-        sock = getattr(self._local, "sock", None)
-        if sock is not None:
+        if getattr(self._local, "sock", None) is not None and getattr(
+            self._local, "unacked", None
+        ):
             try:
-                self._drain_acks(sock)
+                self._drain_acks()
             except Exception:
                 pass
         with self._socks_lock:
@@ -603,7 +1094,8 @@ class MultiprocBackend:
             except OSError:
                 pass
         self._local.sock = None
-        self._local.pending = 0
+        if getattr(self._local, "unacked", None) is not None:
+            self._local.unacked.clear()
 
     # --------------------------- membership --------------------------- #
     def join(self, channel: str, group: str, worker: str) -> None:
@@ -804,7 +1296,7 @@ class MultiprocBackend:
         — the hub decodes each arriving update frame, folds it into the
         shard's ``(partial_sum, total_weight, srcs)`` accumulator and
         delivers one partial frame per shard. An absolute-state write, so
-        it sits in ``_IDEMPOTENT_OPS`` like ``set_link``."""
+        its session-layer retry is exactly-once like every other op."""
         self._call(
             "install_reduce", channel, group, dst, list(srcs), int(shards), fused
         )
@@ -828,11 +1320,13 @@ class MultiprocBackend:
         return out
 
 
-def hub_backend_factory(address: Tuple[str, int]) -> Callable[[Any], MultiprocBackend]:
+def hub_backend_factory(
+    address: Tuple[str, int], client_key: str = ""
+) -> Callable[[Any], MultiprocBackend]:
     """A ``ChannelManager`` backend factory routing every channel spec through
     one shared hub client (the worker-process side of the driver/worker
     split)."""
-    client = MultiprocBackend(address)
+    client = MultiprocBackend(address, client_key=client_key)
     return lambda spec: client
 
 
@@ -864,7 +1358,10 @@ class ShardRouter:
     """
 
     def __init__(
-        self, addresses: Dict[str, Tuple[str, int]], name: str = "multiproc"
+        self,
+        addresses: Dict[str, Tuple[str, int]],
+        name: str = "multiproc",
+        client_key: str = "",
     ) -> None:
         self.name = name
         addrs = {str(k): (str(v[0]), int(v[1])) for k, v in addresses.items()}
@@ -872,9 +1369,9 @@ class ShardRouter:
             raise ValueError(
                 'sharded address map needs a root hub under key ""'
             )
-        self._root = MultiprocBackend(addrs.pop(""), name=name)
+        self._root = MultiprocBackend(addrs.pop(""), name=name, client_key=client_key)
         self._shards = {
-            key: MultiprocBackend(addr, name=name)
+            key: MultiprocBackend(addr, name=name, client_key=client_key)
             for key, addr in sorted(addrs.items())
         }
         self._all: List[MultiprocBackend] = [self._root, *self._shards.values()]
@@ -1016,27 +1513,45 @@ class ShardRouter:
                 out[k] = out.get(k, 0.0) + float(v)
         return out
 
+    # --------------------- deterministic chaos hooks -------------------- #
+    def _chaos_break_conn(self) -> None:
+        for be in self._all:
+            be._chaos_break_conn()
+
+    def _chaos_duplicate(self, op: str, *args: Any) -> Tuple[Any, str, Any]:
+        # channel-scoped ops carry (channel, group, ...): route the replay
+        # to the shard client that owns the group's session
+        group = str(args[1]) if len(args) > 1 else ""
+        return self._be(group)._chaos_duplicate(op, *args)
+
+    def _chaos_probe_evicted(self) -> Tuple[str, Any]:
+        return self._root._chaos_probe_evicted()
+
     def close(self) -> None:
         for be in self._all:
             be.close()
 
 
 def sharded_backend_factory(
-    addresses: Dict[str, Tuple[str, int]],
+    addresses: Dict[str, Tuple[str, int]], client_key: str = ""
 ) -> Callable[[Any], ShardRouter]:
     """``hub_backend_factory``'s sharded twin: every channel spec shares one
     ``ShardRouter``, which places each end on its group's owning shard."""
-    client = ShardRouter(addresses)
+    client = ShardRouter(addresses, client_key=client_key)
     return lambda spec: client
 
 
-def make_backend_factory(address: Any) -> Callable[[Any], Any]:
+def make_backend_factory(address: Any, client_key: str = "") -> Callable[[Any], Any]:
     """Worker-side dispatch for the driver/worker split: a plain
     ``(host, port)`` address yields a single-hub client factory; a shard
-    address map (``ShardedTransportHub.addresses``) yields a routing one."""
+    address map (``ShardedTransportHub.addresses``) yields a routing one.
+    ``client_key`` (the worker id, when the launcher knows it) seeds the
+    session ids and the deterministic reconnect jitter."""
     if isinstance(address, dict):
-        return sharded_backend_factory(address)
-    return hub_backend_factory((str(address[0]), int(address[1])))
+        return sharded_backend_factory(address, client_key=client_key)
+    return hub_backend_factory(
+        (str(address[0]), int(address[1])), client_key=client_key
+    )
 
 
 class LoopbackMultiprocBackend(MultiprocBackend):

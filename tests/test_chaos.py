@@ -1,0 +1,197 @@
+"""Deterministic chaos plane: seeded fault injection over real processes.
+
+The acceptance gate of the crash-tolerance layer. Every scenario here is a
+``FaultPlan`` — a *seeded, declarative* schedule of infrastructure faults
+(connection resets, hub crashes, server restarts) injected at the transport
+layer — so a chaos run is a reproducible test, not a flake. The assertions
+are equivalence gates: a faulted job must produce byte-identical final
+weights (and identical logs/accounting on the virtual clock) to its
+fault-free twin, because the session layer recovers every lost frame
+exactly-once and the checkpoint layer restores server state losslessly.
+
+Marked ``chaos``: CI runs these in a dedicated job with a hard timeout,
+mirroring the ``multiproc`` job.
+"""
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core.events import FaultPlan
+from repro.core.expansion import JobSpec
+from repro.core.runtime import RuntimePolicy
+from repro.core.tag import DatasetSpec
+from repro.core.topologies import classical_fl, hierarchical_fl
+from repro.launch.spawn import run_job_multiproc
+from repro.transport.conformance import SeededSGDTrainer  # noqa: F401 - spawn target
+
+pytestmark = pytest.mark.chaos
+
+_RNG = np.random.default_rng(7)
+W0 = {
+    "w": (0.01 * _RNG.normal(size=(32, 10))).astype(np.float32),
+    "b": np.zeros((10,), np.float32),
+}
+
+
+def _classical_job(rounds=2, n_datasets=3, **extra_hp):
+    tag = classical_fl(
+        trainer_program="repro.transport.conformance.SeededSGDTrainer"
+    )
+    hp = {"rounds": rounds, "init_weights": W0}
+    hp.update(extra_hp)
+    return JobSpec(
+        tag=tag,
+        datasets=tuple(DatasetSpec(name=f"d{i}") for i in range(n_datasets)),
+        hyperparams=hp,
+    )
+
+
+def _hier_job(rounds=2):
+    tag = hierarchical_fl(
+        groups=("west", "east"),
+        dataset_groups={"west": ("d0", "d1"), "east": ("d2", "d3")},
+        trainer_program="repro.transport.conformance.SeededSGDTrainer",
+    )
+    return JobSpec(
+        tag=tag,
+        datasets=tuple(DatasetSpec(name=f"d{i}") for i in range(4)),
+        hyperparams={"rounds": rounds, "init_weights": W0},
+    )
+
+
+def _observables(res):
+    return {
+        "weights": np.asarray(res.global_weights()["w"]).tobytes(),
+        "channel_bytes": dict(res.channel_bytes),
+        "dropped": dict(res.dropped),
+        "events": list(res.events),
+    }
+
+
+def _recovery(res):
+    glob = res.program("global-aggregator-0")
+    for m in glob.metrics:
+        if "transport_recovery" in m:
+            return m["transport_recovery"]
+    return None
+
+
+class TestSyncChaosEquivalence:
+    def test_hub_crash_and_conn_reset_byte_identical(self):
+        """The tentpole gate: a sync job with a hub crash AND a worker
+        conn-reset mid-upload finishes with final weights (and wire
+        accounting) byte-identical to the fault-free run. Sends lost to a
+        severed connection are retransmitted by the session layer and
+        dispatched exactly once, so the hub's virtual-clock bookkeeping
+        never sees the faults."""
+        ref = run_job_multiproc(_classical_job(), timeout=120, policy=RuntimePolicy())
+        assert not ref.errors, ref.errors
+        plan = FaultPlan(
+            conn_resets={"trainer-1": 0.5}, hub_crashes={"": 1.0}, seed=7
+        )
+        res = run_job_multiproc(
+            _classical_job(), timeout=120, policy=RuntimePolicy(faults=plan)
+        )
+        assert not res.errors, res.errors
+        assert _observables(res) == _observables(ref)
+        # recovery actually happened — asserted via job-result metrics, not
+        # attribute-poking (and the fault-free run carries no such metric)
+        rec = _recovery(res)
+        assert rec is not None
+        assert rec["hub_restarts"] >= 1.0
+        assert rec["resumes"] >= 1.0
+        assert _recovery(ref) is None
+
+    def test_hub_shard_crash_on_sharded_fabric(self):
+        """A hub-*shard* crash on the sharded fabric (one hub per group)
+        recovers the same way: the H-FL job's weights match the fault-free
+        sharded run byte-for-byte."""
+        ref = run_job_multiproc(_hier_job(), timeout=180, sharded=True)
+        assert not ref.errors, ref.errors
+        plan = FaultPlan(hub_crashes={"west": 0.5})
+        res = run_job_multiproc(
+            _hier_job(), timeout=180, sharded=True,
+            policy=RuntimePolicy(faults=plan),
+        )
+        assert not res.errors, res.errors
+        assert _observables(res) == _observables(ref)
+        rec = _recovery(res)
+        assert rec is not None and rec["hub_restarts"] >= 1.0
+
+    def test_unknown_shard_key_rejected(self):
+        """Arming a crash for a shard the fabric doesn't host is a config
+        error, not a silent no-op."""
+        plan = FaultPlan(hub_crashes={"nope": 1.0})
+        with pytest.raises(ValueError, match="unknown hub_crash shard key"):
+            run_job_multiproc(
+                _classical_job(), timeout=120, policy=RuntimePolicy(faults=plan)
+            )
+
+
+class TestServerRestartCheckpointResume:
+    def test_fedbuff_restart_resumes_from_checkpoint(self):
+        """A FedBuff server killed mid-job via ``server_restart`` restores
+        from its latest checkpoint and completes with the *same* absorbed
+        sequence, version and final weights as the fault-free run: the
+        upload consumed at the drop boundary is simply re-trained by the
+        re-greeted client, and the version vector / staleness log come back
+        from the checkpoint byte-for-byte."""
+        per_worker = {
+            "trainer-0": {"compute_time": 1.0},
+            "trainer-1": {"compute_time": 50.0},  # never finishes an upload
+        }
+        ref = run_job_multiproc(
+            _classical_job(rounds=3, n_datasets=2), timeout=120,
+            policy=RuntimePolicy(
+                mode="async", buffer_size=1, grace=3.0,
+                dropouts={"trainer-1": 0.5},
+            ),
+            per_worker_hyperparams=per_worker,
+        )
+        assert not ref.errors, ref.errors
+
+        ckpt_dir = tempfile.mkdtemp()
+        pol = RuntimePolicy(
+            mode="async", buffer_size=1, grace=3.0,
+            dropouts={"trainer-1": 0.5},
+            faults=FaultPlan(
+                server_restarts={"global-aggregator-0": (2.5, 3.0)}
+            ),
+        )
+        res = run_job_multiproc(
+            _classical_job(
+                rounds=3, n_datasets=2,
+                checkpoint_every=1, checkpoint_dir=ckpt_dir,
+            ),
+            timeout=120, policy=pol, per_worker_hyperparams=per_worker,
+        )
+        assert not res.errors, res.errors
+
+        def _absorbed(r):
+            glob = r.program("global-aggregator-0")
+            return [
+                (e["src"], e["version"], e["staleness"])
+                for e in glob.staleness_log
+            ]
+
+        # deterministic participation/version logs across the restart
+        assert _absorbed(res) == _absorbed(ref)
+        assert _absorbed(res) == [("trainer-0", v, 0) for v in range(3)]
+        glob = res.program("global-aggregator-0")
+        assert glob.version == 3
+        assert glob.version_vector == ref.program(
+            "global-aggregator-0"
+        ).version_vector
+        # the resume point is observable: v2 was the newest checkpoint when
+        # the server died at t=2.5 (v1@t1, v2@t2; the t=3 upload was lost)
+        assert {"restored_step": 2} in glob.metrics
+        # the restart rides the dropout/re-join schedule (folded in by the
+        # FaultPlan), so the lifecycle ledger shows it explicitly
+        assert res.dropped["global-aggregator-0"] == 2.5
+        assert (2.5, "dropout", "global-aggregator-0") in res.events
+        assert (3.0, "rejoin", "global-aggregator-0") in res.events
+        # and the final model is byte-identical to the fault-free run
+        w = np.asarray(res.global_weights()["w"])
+        assert w.tobytes() == np.asarray(ref.global_weights()["w"]).tobytes()
+        assert not np.array_equal(w, W0["w"])  # training actually happened

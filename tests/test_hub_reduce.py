@@ -157,10 +157,10 @@ class TestPendingAckPipeline:
                 be.join(ch, g, w)
             for i in range(20):
                 be.send(ch, g, "a-0", "b-0", {"i": i})
-                assert be._local.pending <= 4, be._local.pending
+                assert len(be._state().unacked) <= 4, len(be._state().unacked)
             # the barrier drains the remainder; every frame was delivered
             assert be.stats[f"msgs:{ch}"] == 20.0
-            assert be._local.pending == 0
+            assert not be._state().unacked
             got = [be.recv(ch, g, "b-0", "a-0", timeout=5.0)["i"] for i in range(20)]
             assert got == list(range(20))
         finally:
@@ -180,15 +180,14 @@ class TestPendingAckPipeline:
             be.set_drop("a-0", -1.0)
             be.send(ch, g, "a-0", "b-0", {"i": 0})  # deferred WorkerDropped
             be.send(ch, g, "a-0", "b-0", {"i": 1})  # second deferred fault
-            pending = be._local.pending
-            assert pending == 2
+            assert len(be._state().unacked) == 2
             # the next *synchronous* op is the ack barrier: the first
             # deferred fault surfaces there, not on the sends themselves
             with pytest.raises(WorkerDropped):
                 be.now("a-0")
             # the stream was realigned (every pending ack consumed), so the
             # connection stays usable for the very next op
-            assert be._local.pending == 0
+            assert not be._state().unacked
             assert be.now("b-0") >= 0.0
         finally:
             be.close()

@@ -14,7 +14,12 @@ from repro import transport as _transport  # noqa: F401 - registers socket flavo
 from repro.core.channels import backend_factory as registry_factory
 from repro.core.channels import registered_backends
 from repro.transport.conformance import CONFORMANCE_CHECKS, run_conformance
-from repro.transport.multiproc import MultiprocBackend, TransportHub
+from repro.transport.multiproc import (
+    MultiprocBackend,
+    ShardedTransportHub,
+    ShardRouter,
+    TransportHub,
+)
 from repro.transport.wire import registered_codecs
 
 # "collective" is membership-only during emulation but still an InprocBackend
@@ -58,6 +63,17 @@ def test_shared_hub_conformance(check_name):
     with TransportHub(wall_clock=False) as hub:
         run_conformance(
             lambda: MultiprocBackend(hub.address), checks=[check_name]
+        )
+
+
+@pytest.mark.parametrize("check_name", sorted(CONFORMANCE_CHECKS))
+def test_sharded_hub_conformance(check_name):
+    """The sharded fabric behind a ``ShardRouter`` client obeys the same
+    contract — including the exactly-once session checks, which exercise
+    every shard client's session independently."""
+    with ShardedTransportHub(["g0"], wall_clock=False) as hub:
+        run_conformance(
+            lambda: ShardRouter(hub.worker_address), checks=[check_name]
         )
 
 
@@ -385,11 +401,12 @@ class TestTransientFaultRetry:
             finally:
                 client.close()
 
-    def test_non_idempotent_op_not_retried(self):
-        """Replaying ``send``/``advance`` after an ambiguous fault could
-        double-apply them hub-side (duplicate message, double clock step) —
-        the fault must surface to the caller even though the hub is still
-        up, while the connection recovers for subsequent idempotent ops."""
+    def test_non_idempotent_op_retried_exactly_once(self):
+        """A ``send`` interrupted by an ambiguous fault is retried through
+        the session layer and lands hub-side exactly once: the retransmit
+        is deduplicated by the per-session replay window, so the caller
+        sees success, not ``ConnectionResetError`` (the pre-session
+        behavior), and no duplicate message exists."""
         import socket as socket_mod
 
         with TransportHub(wall_clock=False) as hub:
@@ -400,11 +417,14 @@ class TestTransientFaultRetry:
                 near, far = socket_mod.socketpair()
                 far.close()
                 client._local.sock = near
-                with pytest.raises((ConnectionResetError, BrokenPipeError)):
-                    client.send("ch", "g", "a-0", "b-0", {"x": 1})
-                # no duplicate landed hub-side, and the client reconnected
-                assert client.peers("ch", "g", "a-0") == ["b-0"]
+                client.send("ch", "g", "a-0", "b-0", {"x": 1})
+                client.now("a-0")  # ack barrier: the send is fully settled
+                # exactly one copy landed hub-side, none were lost
+                assert hub.backend.peek("ch", "g", "b-0", "a-0") == {"x": 1}
+                got = client.recv("ch", "g", "b-0", "a-0", 5.0)
+                assert got == {"x": 1}
                 assert hub.backend.peek("ch", "g", "b-0", "a-0") is None
+                assert hub.stats.get("resumes:", 0.0) >= 1.0
             finally:
                 client.close()
 
